@@ -1,0 +1,52 @@
+"""Beyond-paper table: the Pallas block-ELL engine vs the segment-op engine
+(jnp oracle path) on CPU, plus block-ELL padding overhead by tile shape --
+the static cost of the CSR-adaptive-style regularization (DESIGN.md §2)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bounds_equal, csr_to_block_ell, propagate
+from repro.data.instances import instances_for_set
+from repro.kernels import propagate_block_ell
+
+from .common import geomean, time_fn
+
+
+def run():
+    rows = []
+    pad_fracs = {}
+    for tr, tw in ((8, 32), (8, 128), (4, 64)):
+        fracs = []
+        for spec, p in instances_for_set("Set-3", per_family=1):
+            b = csr_to_block_ell(p.csr, tile_rows=tr, tile_width=tw)
+            fracs.append(b.padding_fraction())
+        pad_fracs[(tr, tw)] = float(np.mean(fracs))
+        rows.append(
+            (f"block_ell_padding_r{tr}_w{tw}", 0.0,
+             f"mean_padding_fraction={np.mean(fracs):.3f}")
+        )
+
+    agree = 0
+    ratios = []
+    for spec, p in instances_for_set("Set-2", per_family=1):
+        r_seg = propagate(p, driver="device_loop")
+        t_seg = time_fn(lambda: propagate(p, driver="device_loop"), repeats=2)
+        r_bel = propagate_block_ell(p, tile_rows=8, tile_width=32,
+                                    use_pallas=False, driver="device_loop")
+        t_bel = time_fn(
+            lambda: propagate_block_ell(p, tile_rows=8, tile_width=32,
+                                        use_pallas=False, driver="device_loop"),
+            repeats=2,
+        )
+        agree += bounds_equal(r_seg.lb, r_seg.ub, r_bel.lb, r_bel.ub)
+        ratios.append(t_seg / t_bel)
+    rows.append(
+        ("block_ell_vs_segment_engine", 0.0,
+         f"agree={agree} geomean_t_seg/t_bel={geomean(ratios):.2f}")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: timing, instance sets, geometric means.
+
+Paper methodology (§4.3): one-time init (CSC build, block-ELL conversion,
+jit compile == the paper's excluded memory transfer/setup) is NOT timed;
+timing covers first propagation round to results available.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+
+def geomean(xs) -> float:
+    xs = np.asarray([max(x, 1e-12) for x in xs], dtype=np.float64)
+    return float(np.exp(np.log(xs).mean()))
+
+
+def time_fn(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    """Best-of wall time in seconds (after warmup calls)."""
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_sets(per_family: int = 1, max_set: int = 8):
+    """Instances grouped by the paper's size sets (scaled, DESIGN.md §7)."""
+    from repro.data.instances import SIZE_SETS, instances_for_set
+
+    out = {}
+    for name, _, _ in SIZE_SETS[:max_set]:
+        out[name] = instances_for_set(name, per_family=per_family)
+    return out
+
+
+def fmt_rows(rows: List[Tuple[str, float, str]]) -> str:
+    return "\n".join(f"{n},{us:.1f},{d}" for n, us, d in rows)

@@ -1,0 +1,71 @@
+"""Paper Appendix C / §3.7: loop-driver variants.
+
+  host_loop   == paper cpu_loop    (host checks the converged flag per round)
+  device_loop == paper gpu_loop    (whole fixed point one device dispatch)
+  unrolled(4) == megakernel-esque  (4 fused rounds per convergence check)
+
+Paper finding: cpu_loop fastest overall, gpu_loop converging to it with
+instance size (Amdahl), megakernel worst.  On XLA:CPU the host/device sync
+cost differs from CUDA, so the ordering itself is environment-specific; the
+benchmark reports the measured ratios.
+"""
+from __future__ import annotations
+
+from repro.core import propagate
+from repro.data.instances import instances_for_set
+
+from .common import geomean, time_fn
+
+
+def _timed(p, driver, unroll=1):
+    import jax
+
+    from repro.core.propagator import DeviceProblem, _round_fn, _device_fixed_point
+    from repro.core.types import DEFAULT_CONFIG as cfg
+    import jax.numpy as jnp
+
+    dp = DeviceProblem(p)
+    round_fn = _round_fn(dp, cfg)
+    if driver == "host_loop":
+        jit_round = jax.jit(lambda lb, ub: round_fn(lb=lb, ub=ub))
+        jit_round(dp.lb0, dp.ub0)[0].block_until_ready()
+
+        def call():
+            lb, ub = dp.lb0, dp.ub0
+            changed, rounds = True, 0
+            while changed and rounds < cfg.max_rounds:
+                lb, ub, ch = jit_round(lb, ub)
+                changed = bool(ch)  # per-round host sync
+                rounds += 1
+
+        return time_fn(call, repeats=3)
+
+    @jax.jit
+    def run(lb0, ub0):
+        lb, ub, ch, r = _device_fixed_point(round_fn, lb0, ub0, cfg.max_rounds, unroll)
+        return lb, ub, r
+
+    run(dp.lb0, dp.ub0)[0].block_until_ready()
+    return time_fn(lambda: run(dp.lb0, dp.ub0)[0].block_until_ready(), repeats=3)
+
+
+def run(max_set: int = 5):
+    rows = []
+    for k in (1, 3, max_set):
+        ratios_g, ratios_m = [], []
+        for spec, p in instances_for_set(f"Set-{k}", per_family=1):
+            t_host = _timed(p, "host_loop")
+            t_dev = _timed(p, "device_loop")
+            t_unr = _timed(p, "device_loop", unroll=4)
+            ratios_g.append(t_dev / t_host)
+            ratios_m.append(t_unr / t_host)
+        rows.append(
+            (f"loop_variants_Set-{k}", 0.0,
+             f"device/host={geomean(ratios_g):.2f} unrolled4/host={geomean(ratios_m):.2f}")
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,44 @@
+"""Paper Appendix B: effect of constraint/variable ordering on performance
+and results -- random row/col permutations vs the original ordering."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bounds_equal, permute_problem, propagate
+from repro.data.instances import instances_for_set
+
+from .common import geomean
+from .speedup_sets import _timed_parallel
+
+
+def run(n_seeds: int = 3, max_set: int = 3):
+    deltas = []
+    limit_same = 0
+    total = 0
+    for k in range(2, max_set + 1):
+        for spec, p in instances_for_set(f"Set-{k}", per_family=1):
+            t0 = _timed_parallel(p)
+            r0 = propagate(p)
+            for seed in range(1, n_seeds + 1):
+                rng = np.random.default_rng(seed)
+                rp = rng.permutation(p.m)
+                cp = rng.permutation(p.n)
+                p2 = permute_problem(p, rp, cp)
+                t1 = _timed_parallel(p2)
+                r1 = propagate(p2)
+                total += 1
+                limit_same += bounds_equal(
+                    np.asarray(r0.lb)[cp], np.asarray(r0.ub)[cp], r1.lb, r1.ub
+                )
+                deltas.append(t1 / t0)
+    return [
+        ("ordering_permuted_time_ratio", 0.0,
+         f"geomean={geomean(deltas):.3f} max={max(deltas):.2f} "
+         "(paper App B: <= ~4.3% effect)"),
+        ("ordering_limit_point_invariance", 0.0, f"same={limit_same}/{total}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,83 @@
+"""Paper Table 1 / Figure 1: speedup of the parallel algorithm over cpu_seq
+by instance-size set (geomean + percentiles).
+
+Hardware-honest proxy (DESIGN.md §7): the "GPU" side is the JAX-parallel
+algorithm (XLA:CPU, device_loop driver) on this container; cpu_seq is the
+faithful numpy Algorithm 1.  Timing excludes one-time init (paper §4.3):
+CSC build for cpu_seq, device transfer + jit compile for the parallel side.
+On-TPU projections come from §Roofline, not from this benchmark.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DeviceProblem, propagate_sequential
+from repro.core.propagator import _round_fn, check_infeasible
+from repro.core.types import DEFAULT_CONFIG
+import jax
+import jax.numpy as jnp
+
+from .common import geomean, time_fn
+from repro.data.instances import instances_for_set
+
+
+def _timed_parallel(p, cfg=DEFAULT_CONFIG):
+    """device_loop propagation with compile excluded from timing."""
+    dp = DeviceProblem(p)
+    round_fn = _round_fn(dp, cfg)
+
+    @jax.jit
+    def run(lb0, ub0):
+        def body(s):
+            lb, ub, _, r = s
+            lb, ub, ch = round_fn(lb=lb, ub=ub)
+            return lb, ub, ch, r + 1
+
+        def cond(s):
+            return s[2] & (s[3] < cfg.max_rounds)
+
+        lb, ub, ch, r = jax.lax.while_loop(
+            cond, body, (lb0, ub0, jnp.asarray(True), jnp.int32(0))
+        )
+        return lb, ub, r
+
+    run(dp.lb0, dp.ub0)[0].block_until_ready()  # compile (excluded)
+
+    def call():
+        run(dp.lb0, dp.ub0)[0].block_until_ready()
+
+    return time_fn(call, repeats=3)
+
+
+def _timed_seq(p):
+    return time_fn(lambda: propagate_sequential(p), repeats=1, warmup=0)
+
+
+def run(max_set: int = 6, per_family: int = 1):
+    rows = []
+    all_speedups = []
+    for k in range(1, max_set + 1):
+        set_name = f"Set-{k}"
+        speedups = []
+        for spec, p in instances_for_set(set_name, per_family=per_family):
+            t_seq = _timed_seq(p)
+            t_par = _timed_parallel(p)
+            speedups.append(t_seq / t_par)
+        all_speedups += speedups
+        rows.append(
+            (f"speedup_{set_name}", 0.0,
+             f"geomean_speedup={geomean(speedups):.2f} n={len(speedups)}")
+        )
+    s = np.sort(all_speedups)
+    rows.append(("speedup_all", 0.0, f"geomean={geomean(all_speedups):.2f}"))
+    rows.append(
+        ("speedup_percentiles", 0.0,
+         f"p5={s[int(0.05*len(s))]:.2f} p50={np.median(s):.2f} "
+         f"p95={s[min(len(s)-1, int(0.95*len(s))) ]:.2f}")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,47 @@
+"""Quickstart: propagate a small MIP with the paper's parallel algorithm.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import INF, Problem, csr_from_dense, propagate, propagate_sequential
+
+# A tiny MIP:  min c^T x  s.t.
+#   2x + 3y        <= 6
+#    x +  y +  z   >= 1
+#        4y -  z   == 2      (as ranged row 2 <= . <= 2)
+# x,y integer in [0,10], z continuous in [0,8].
+A = np.array(
+    [
+        [2.0, 3.0, 0.0],
+        [1.0, 1.0, 1.0],
+        [0.0, 4.0, -1.0],
+    ]
+)
+problem = Problem(
+    csr=csr_from_dense(A),
+    lhs=np.array([-INF, 1.0, 2.0]),
+    rhs=np.array([6.0, INF, 2.0]),
+    lb=np.zeros(3),
+    ub=np.array([10.0, 10.0, 8.0]),
+    is_int=np.array([True, True, False]),
+)
+
+print("initial domains:")
+for j, (l, u) in enumerate(zip(problem.lb, problem.ub)):
+    print(f"  x{j} in [{l:g}, {u:g}]")
+
+# GPU-parallel algorithm (Alg. 2), whole fixed point in ONE device dispatch.
+result = propagate(problem, driver="device_loop")
+print(f"\nparallel propagation: {int(result.rounds)} rounds, "
+      f"converged={bool(result.converged)}, infeasible={bool(result.infeasible)}")
+for j, (l, u) in enumerate(zip(np.asarray(result.lb), np.asarray(result.ub))):
+    print(f"  x{j} in [{l:g}, {u:g}]")
+
+# Sequential reference (Alg. 1, with constraint marking).
+seq = propagate_sequential(problem)
+print(f"\nsequential reference: {seq.rounds} rounds -- bounds match: "
+      f"{np.allclose(seq.lb, np.asarray(result.lb)) and np.allclose(seq.ub, np.asarray(result.ub))}")

@@ -1,0 +1,6 @@
+"""repro: TPU-native domain propagation at scale (Sofranac et al. 2020) +
+the assigned-architecture LM substrate sharing the same distributed runtime.
+
+IMPORTANT: this package must stay import-side-effect-free w.r.t. jax device
+state -- launch/dryrun.py sets XLA_FLAGS before first jax init.
+"""

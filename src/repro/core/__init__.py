@@ -1,0 +1,81 @@
+"""Core library: the paper's contribution (GPU-parallel domain propagation)
+as a composable JAX module, plus the sequential baseline and the distributed
+(shard_map) variant.  See DESIGN.md for the TPU adaptation of the CUDA
+mechanisms (CSR-adaptive -> block-ELL, atomics -> segment/all-reduce min-max).
+"""
+from .types import (
+    INF,
+    Activities,
+    Bounds,
+    PropagationResult,
+    PropagatorConfig,
+    DEFAULT_CONFIG,
+)
+from .sparse import (
+    CSR,
+    CSC,
+    BlockEll,
+    Problem,
+    csr_from_dense,
+    csr_from_coo,
+    csr_to_csc,
+    csr_to_block_ell,
+    block_ell_stats,
+    permute_problem,
+)
+from .activities import compute_activities, activity_values
+from .propagator import (
+    DeviceProblem,
+    propagate,
+    propagate_host_loop,
+    propagate_device_loop,
+    propagate_unrolled,
+    propagation_round,
+    bounds_equal,
+)
+from .seq_ref import propagate_sequential, SeqResult
+from .presolve import analyze_constraints, PresolveVerdict
+from .sharded import (
+    propagate_sharded,
+    propagate_sharded_rows,
+    lower_sharded,
+    partition_nnz,
+    partition_rows,
+)
+
+__all__ = [
+    "INF",
+    "Activities",
+    "Bounds",
+    "PropagationResult",
+    "PropagatorConfig",
+    "DEFAULT_CONFIG",
+    "CSR",
+    "CSC",
+    "BlockEll",
+    "Problem",
+    "csr_from_dense",
+    "csr_from_coo",
+    "csr_to_csc",
+    "csr_to_block_ell",
+    "block_ell_stats",
+    "permute_problem",
+    "compute_activities",
+    "activity_values",
+    "DeviceProblem",
+    "propagate",
+    "propagate_host_loop",
+    "propagate_device_loop",
+    "propagate_unrolled",
+    "propagation_round",
+    "bounds_equal",
+    "propagate_sequential",
+    "SeqResult",
+    "analyze_constraints",
+    "PresolveVerdict",
+    "propagate_sharded",
+    "propagate_sharded_rows",
+    "partition_rows",
+    "lower_sharded",
+    "partition_nnz",
+]

@@ -1,0 +1,90 @@
+"""Bound-candidate computation and update (paper Eqs. 4a/4b via 5a/5b).
+
+Candidate formulas, written with residual activities (derivation in
+DESIGN.md §1):
+
+  a_ij > 0:  lcand = (lhs_i - maxres_ij) / a_ij    ucand = (rhs_i - minres_ij) / a_ij
+  a_ij < 0:  lcand = (rhs_i - minres_ij) / a_ij    ucand = (lhs_i - maxres_ij) / a_ij
+
+A candidate is *valid* only if the side it uses is finite (lhs > -INF resp.
+rhs < +INF) and the residual activity it uses is finite.  Invalid candidates
+are emitted as -INF (lower) / +INF (upper) so that the column-wise max/min
+reduction ignores them -- this is the mask-before-reduce that replaces the
+paper's "check before atomic" trick (§3.5) on TPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import INF
+
+
+def bound_candidates(a, lhs_row, rhs_row, min_res, max_res, inf: float = INF):
+    """Per-nonzero lower/upper bound candidates.
+
+    Args:
+      a: (nnz,) coefficients (0 == padding).
+      lhs_row, rhs_row: (nnz,) constraint sides of each nonzero's row.
+      min_res, max_res: (nnz,) residual activities (sentinel-infinite).
+
+    Returns:
+      (lcand, ucand): candidates with invalid entries at -inf/+inf.
+    """
+    pos = a > 0
+    pad = a == 0
+    safe_a = jnp.where(pad, 1.0, a)
+
+    # Numerators per Eqs. 4a/4b in residual form.
+    num_l = jnp.where(pos, lhs_row - max_res, rhs_row - min_res)
+    num_u = jnp.where(pos, rhs_row - min_res, lhs_row - max_res)
+
+    lcand = num_l / safe_a
+    ucand = num_u / safe_a
+
+    valid_l = jnp.where(
+        pos,
+        (lhs_row > -inf) & (max_res < inf),
+        (rhs_row < inf) & (min_res > -inf),
+    ) & ~pad
+    valid_u = jnp.where(
+        pos,
+        (rhs_row < inf) & (min_res > -inf),
+        (lhs_row > -inf) & (max_res < inf),
+    ) & ~pad
+
+    lcand = jnp.where(valid_l, jnp.clip(lcand, -inf, inf), -inf)
+    ucand = jnp.where(valid_u, jnp.clip(ucand, -inf, inf), inf)
+    return lcand, ucand
+
+
+def round_candidates(lcand, ucand, is_int_col, int_eps: float, inf: float = INF):
+    """Integrality strengthening: ceil lower / floor upper (paper Step 3)."""
+    do_round_l = is_int_col & (jnp.abs(lcand) < inf)
+    do_round_u = is_int_col & (jnp.abs(ucand) < inf)
+    lcand = jnp.where(do_round_l, jnp.ceil(lcand - int_eps), lcand)
+    ucand = jnp.where(do_round_u, jnp.floor(ucand + int_eps), ucand)
+    return lcand, ucand
+
+
+def improved_lb(new_lb, old_lb, eps: float):
+    """Scale-aware strict improvement test (tolerance-based termination)."""
+    return new_lb > old_lb + eps * jnp.maximum(1.0, jnp.abs(old_lb))
+
+
+def improved_ub(new_ub, old_ub, eps: float):
+    return new_ub < old_ub - eps * jnp.maximum(1.0, jnp.abs(old_ub))
+
+
+def apply_updates(lb, ub, best_lcand, best_ucand, eps: float, inf: float = INF):
+    """Merge column-reduced candidates into the bounds.
+
+    Returns (new_lb, new_ub, changed) where ``changed`` is a scalar bool.
+    Non-improving candidates leave the bound untouched (so no epsilon drift
+    accumulates across rounds).
+    """
+    take_l = improved_lb(best_lcand, lb, eps)
+    take_u = improved_ub(best_ucand, ub, eps)
+    new_lb = jnp.where(take_l, jnp.clip(best_lcand, -inf, inf), lb)
+    new_ub = jnp.where(take_u, jnp.clip(best_ucand, inf * -1, inf), ub)
+    changed = jnp.any(take_l) | jnp.any(take_u)
+    return new_lb, new_ub, changed

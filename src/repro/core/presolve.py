@@ -1,0 +1,32 @@
+"""Constraint-level presolve observations (paper §1.1 Steps 1 and 2).
+
+These are *diagnostics* layered on top of the activity computation: Step 3
+(the propagator) is correct without them (paper §1.1 remark), but a MIP
+presolve service wants the redundancy / infeasibility verdicts as outputs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .activities import activity_values, compute_activities
+from .types import INF
+
+
+class PresolveVerdict(NamedTuple):
+    redundant: jnp.ndarray    # (m,) bool: Step 1 -- constraint can be removed
+    infeasible: jnp.ndarray   # (m,) bool: Step 2 -- constraint cannot be satisfied
+    any_infeasible: jnp.ndarray  # () bool
+
+
+def analyze_constraints(
+    row_id, val, col, lhs, rhs, lb, ub, m: int, feas_eps: float = 1e-8, inf: float = INF
+) -> PresolveVerdict:
+    acts = compute_activities(row_id, val, col, lb, ub, m, inf)
+    amin, amax = activity_values(acts, inf)
+    # Step 1: lhs <= amin and amax <= rhs  -> redundant.
+    redundant = (lhs <= amin) & (amax <= rhs)
+    # Step 2: amin > rhs or lhs > amax     -> infeasible.
+    infeasible = (amin > rhs + feas_eps) | (lhs > amax + feas_eps)
+    return PresolveVerdict(redundant, infeasible, jnp.any(infeasible))

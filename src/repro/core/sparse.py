@@ -1,0 +1,250 @@
+"""Sparse constraint-matrix containers.
+
+Three layouts, mirroring the paper's storage pipeline (§3):
+
+  * :class:`CSR` -- the canonical input format (paper §3: "ubiquitously used").
+  * :class:`CSC` -- column-major view, needed by the *sequential* algorithm's
+    marking mechanism (Alg. 1 line 20) and built once up-front, exactly like
+    the paper's init phase (§4.3: excluded from timing).
+  * :class:`BlockEll` -- the TPU-native analogue of CSR-adaptive (§3.2).
+    Rows are split into chunks of at most ``K`` nonzeros; chunks are stacked
+    into dense ``(num_tiles, R, K)`` tiles.  Short rows occupy one chunk
+    (CSR-stream analogue: many rows per tile); long rows span several chunks
+    whose partial sums are combined by a per-row segment reduction
+    (CSR-vector/multi-warp analogue).  Padding entries carry ``val == 0`` and
+    ``col == 0`` and are masked out by ``val != 0``.
+
+All containers are pytrees of plain arrays so they can cross ``jit`` /
+``shard_map`` boundaries.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+
+class Problem(NamedTuple):
+    """A full propagation instance: ``lhs <= A x <= rhs``, ``lb <= x <= ub``."""
+
+    csr: "CSR"
+    lhs: np.ndarray       # (m,) constraint left-hand sides  (-INF if absent)
+    rhs: np.ndarray       # (m,) constraint right-hand sides (+INF if absent)
+    lb: np.ndarray        # (n,)
+    ub: np.ndarray        # (n,)
+    is_int: np.ndarray    # (n,) bool: integrality marks
+
+    @property
+    def m(self) -> int:
+        return self.csr.m
+
+    @property
+    def n(self) -> int:
+        return self.csr.n
+
+    @property
+    def nnz(self) -> int:
+        return self.csr.nnz
+
+    def astype(self, dtype) -> "Problem":
+        return Problem(
+            csr=self.csr.astype(dtype),
+            lhs=self.lhs.astype(dtype),
+            rhs=self.rhs.astype(dtype),
+            lb=self.lb.astype(dtype),
+            ub=self.ub.astype(dtype),
+            is_int=self.is_int,
+        )
+
+
+class CSR(NamedTuple):
+    row_ptr: np.ndarray   # (m+1,) int32
+    col: np.ndarray       # (nnz,) int32
+    val: np.ndarray       # (nnz,) float
+    n_cols: np.ndarray    # () int32 -- carried as array for pytree friendliness
+
+    @property
+    def m(self) -> int:
+        return int(self.row_ptr.shape[0]) - 1
+
+    @property
+    def n(self) -> int:
+        return int(self.n_cols)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.col.shape[0])
+
+    def astype(self, dtype) -> "CSR":
+        return self._replace(val=self.val.astype(dtype))
+
+    def row_ids(self) -> np.ndarray:
+        """Expand row_ptr to a per-nonzero row index (static, precomputed)."""
+        out = np.zeros(self.nnz, dtype=np.int32)
+        counts = np.diff(self.row_ptr).astype(np.int64)
+        out = np.repeat(np.arange(self.m, dtype=np.int32), counts)
+        return out
+
+    def to_dense(self) -> np.ndarray:
+        a = np.zeros((self.m, self.n), dtype=self.val.dtype)
+        rid = self.row_ids()
+        a[rid, self.col] = self.val
+        return a
+
+
+class CSC(NamedTuple):
+    col_ptr: np.ndarray   # (n+1,) int32
+    row: np.ndarray       # (nnz,) int32
+    val: np.ndarray       # (nnz,) float
+    n_rows: np.ndarray    # () int32
+
+
+class BlockEll(NamedTuple):
+    """Length-bucketed block-ELL (see module docstring)."""
+
+    val: np.ndarray        # (T, R, K) float; 0 == padding
+    col: np.ndarray        # (T, R, K) int32; 0 at padding slots
+    chunk_row: np.ndarray  # (T, R) int32; row id of each chunk (m at padding chunks)
+    m: np.ndarray          # () int32 original row count
+    n: np.ndarray          # () int32 original column count
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.val.shape[0])
+
+    @property
+    def tile_rows(self) -> int:
+        return int(self.val.shape[1])
+
+    @property
+    def tile_width(self) -> int:
+        return int(self.val.shape[2])
+
+    def astype(self, dtype) -> "BlockEll":
+        return self._replace(val=self.val.astype(dtype))
+
+    def padding_fraction(self) -> float:
+        return 1.0 - float((self.val != 0).sum()) / float(self.val.size)
+
+
+def csr_from_dense(a: np.ndarray, dtype=np.float64) -> CSR:
+    a = np.asarray(a, dtype=dtype)
+    m, n = a.shape
+    mask = a != 0
+    counts = mask.sum(axis=1).astype(np.int32)
+    row_ptr = np.zeros(m + 1, dtype=np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    col = np.nonzero(mask)[1].astype(np.int32)
+    val = a[mask].astype(dtype)
+    return CSR(row_ptr=row_ptr, col=col, val=val, n_cols=np.int32(n))
+
+
+def csr_from_coo(
+    rows: np.ndarray, cols: np.ndarray, vals: np.ndarray, m: int, n: int
+) -> CSR:
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    counts = np.bincount(rows, minlength=m).astype(np.int32)
+    row_ptr = np.zeros(m + 1, dtype=np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    return CSR(
+        row_ptr=row_ptr,
+        col=cols.astype(np.int32),
+        val=np.asarray(vals),
+        n_cols=np.int32(n),
+    )
+
+
+def csr_to_csc(csr: CSR) -> CSC:
+    rid = csr.row_ids()
+    order = np.lexsort((rid, csr.col))
+    col_sorted = csr.col[order]
+    counts = np.bincount(col_sorted, minlength=csr.n).astype(np.int32)
+    col_ptr = np.zeros(csr.n + 1, dtype=np.int32)
+    np.cumsum(counts, out=col_ptr[1:])
+    return CSC(
+        col_ptr=col_ptr,
+        row=rid[order].astype(np.int32),
+        val=csr.val[order],
+        n_rows=np.int32(csr.m),
+    )
+
+
+def permute_problem(p: Problem, row_perm: np.ndarray, col_perm: np.ndarray) -> Problem:
+    """Apply row/column permutations (paper App. B ordering experiment)."""
+    dense_free = True  # permute in sparse form to stay cheap for big instances
+    del dense_free
+    csr = p.csr
+    rid = csr.row_ids()
+    inv_col = np.empty_like(col_perm)
+    inv_col[col_perm] = np.arange(col_perm.shape[0])
+    new_rows = np.empty_like(rid)
+    inv_row = np.empty_like(row_perm)
+    inv_row[row_perm] = np.arange(row_perm.shape[0])
+    new_rows = inv_row[rid]
+    new_cols = inv_col[csr.col]
+    new_csr = csr_from_coo(new_rows, new_cols, csr.val.copy(), csr.m, csr.n)
+    return Problem(
+        csr=new_csr,
+        lhs=p.lhs[row_perm],
+        rhs=p.rhs[row_perm],
+        lb=p.lb[col_perm],
+        ub=p.ub[col_perm],
+        is_int=p.is_int[col_perm],
+    )
+
+
+def csr_to_block_ell(csr: CSR, tile_rows: int = 8, tile_width: int = 128) -> BlockEll:
+    """Convert CSR to length-bucketed block-ELL.
+
+    Every row is split into ``ceil(len/K)`` chunks of width ``K=tile_width``;
+    chunks are packed ``R=tile_rows`` per tile in row order.  The resulting
+    padding fraction is bounded by ``K-1`` slots per row plus at most ``R-1``
+    empty chunks in the final tile.
+    """
+    m = csr.m
+    lengths = np.diff(csr.row_ptr).astype(np.int64)
+    chunks_per_row = np.maximum(1, -(-lengths // tile_width))  # ceil, min 1
+    total_chunks = int(chunks_per_row.sum())
+    num_tiles = max(1, -(-total_chunks // tile_rows))
+    padded_chunks = num_tiles * tile_rows
+
+    val = np.zeros((padded_chunks, tile_width), dtype=csr.val.dtype)
+    col = np.zeros((padded_chunks, tile_width), dtype=np.int32)
+    chunk_row = np.full((padded_chunks,), m, dtype=np.int32)  # m == padding row
+
+    chunk = 0
+    for r in range(m):
+        start, end = int(csr.row_ptr[r]), int(csr.row_ptr[r + 1])
+        if start == end:
+            chunk_row[chunk] = r  # empty row keeps one (all-padding) chunk
+            chunk += 1
+            continue
+        for cstart in range(start, end, tile_width):
+            cend = min(cstart + tile_width, end)
+            w = cend - cstart
+            val[chunk, :w] = csr.val[cstart:cend]
+            col[chunk, :w] = csr.col[cstart:cend]
+            chunk_row[chunk] = r
+            chunk += 1
+    assert chunk == total_chunks
+
+    return BlockEll(
+        val=val.reshape(num_tiles, tile_rows, tile_width),
+        col=col.reshape(num_tiles, tile_rows, tile_width),
+        chunk_row=chunk_row.reshape(num_tiles, tile_rows),
+        m=np.int32(m),
+        n=np.int32(csr.n),
+    )
+
+
+def block_ell_stats(b: BlockEll) -> dict:
+    nnz = int((b.val != 0).sum())
+    return {
+        "tiles": b.num_tiles,
+        "tile_rows": b.tile_rows,
+        "tile_width": b.tile_width,
+        "nnz": nnz,
+        "padded_slots": int(b.val.size),
+        "padding_fraction": b.padding_fraction(),
+    }

@@ -1,0 +1,91 @@
+"""Shared value types and numeric conventions for domain propagation.
+
+Conventions (SCIP / PaPILO style, see paper §3.4):
+  * Infinite bounds are encoded with the finite sentinel ``INF = 1e20``.
+    Any value ``|v| >= INF`` is treated as infinite.  All arithmetic therefore
+    stays finite (no NaNs from ``0 * inf``), and "counting infinite
+    contributions" is a plain comparison against the sentinel.
+  * A *bound change* only counts if it improves the bound by more than a
+    scale-aware epsilon -- this is the tolerance-based termination the paper
+    uses to guarantee finite convergence (§1.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# SCIP-style infinity sentinel.  Values beyond this magnitude are "infinite".
+INF = 1e20
+
+
+@dataclasses.dataclass(frozen=True)
+class PropagatorConfig:
+    """Numeric + termination knobs shared by all propagator implementations."""
+
+    max_rounds: int = 100          # paper §4.1: round cap
+    tighten_eps: float = 1e-9      # scale-aware minimum improvement (fp64)
+    tighten_eps_f32: float = 1e-5  # minimum improvement when running in fp32
+    int_eps: float = 1e-6          # integrality rounding tolerance
+    feas_eps: float = 1e-8         # empty-domain detection: l > u + feas_eps
+    inf: float = INF
+
+    def eps_for(self, dtype) -> float:
+        if jnp.dtype(dtype) in (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16)):
+            return self.tighten_eps_f32
+        return self.tighten_eps
+
+
+DEFAULT_CONFIG = PropagatorConfig()
+
+
+class Bounds(NamedTuple):
+    """Variable domains ``lb <= x <= ub`` (sentinel-infinite)."""
+
+    lb: jnp.ndarray  # (n,)
+    ub: jnp.ndarray  # (n,)
+
+
+class Activities(NamedTuple):
+    """Per-row activity aggregates with infinity counters (paper §3.4).
+
+    ``min_act = -inf`` iff ``min_inf_count > 0`` else ``min_finite``;
+    symmetric for the maximum activity (whose infinite contributions are
+    all ``+inf``).
+    """
+
+    min_finite: jnp.ndarray     # (m,) finite part of the minimum activity
+    min_inf_count: jnp.ndarray  # (m,) int32 number of -inf contributions
+    max_finite: jnp.ndarray     # (m,) finite part of the maximum activity
+    max_inf_count: jnp.ndarray  # (m,) int32 number of +inf contributions
+
+
+class PropagationResult(NamedTuple):
+    lb: jnp.ndarray            # (n,) tightened lower bounds
+    ub: jnp.ndarray            # (n,) tightened upper bounds
+    rounds: jnp.ndarray        # () int32: propagation rounds executed
+    converged: jnp.ndarray     # () bool: fixed point reached within cap
+    infeasible: jnp.ndarray    # () bool: some variable domain became empty
+
+
+def is_pos_inf(v, inf: float = INF):
+    return v >= inf
+
+
+def is_neg_inf(v, inf: float = INF):
+    return v <= -inf
+
+
+def is_inf(v, inf: float = INF):
+    return jnp.abs(v) >= inf if isinstance(v, jnp.ndarray) else abs(v) >= inf
+
+
+def clamp_to_sentinel(v, inf: float = INF):
+    """Clamp values into the representable range [-INF, INF]."""
+    return jnp.clip(v, -inf, inf)
+
+
+def np_is_inf(v: np.ndarray, inf: float = INF) -> np.ndarray:
+    return np.abs(v) >= inf

@@ -1,0 +1,15 @@
+"""Data substrate: synthetic MIP instance generation (MIPLIB-like structural
+mixes), a minimal MPS reader, and the deterministic LM token pipeline."""
+from .instances import (
+    InstanceSpec,
+    make_instance,
+    make_knapsack,
+    make_set_cover,
+    make_bin_packing,
+    make_assignment,
+    make_cascade_chain,
+    make_mixed,
+    SIZE_SETS,
+    instances_for_set,
+)
+from .mps import read_mps, write_mps

@@ -1,0 +1,304 @@
+"""Synthetic MIP instance generator (MIPLIB-2017-like structural mixes).
+
+The container is offline, so the paper's MIPLIB 2017 test bed is replaced by
+a seeded generator reproducing the structural features the paper calls out:
+
+  * highly sparse matrices with power-law row lengths (§1, §3);
+  * a few very dense *connecting constraints* (§3: the CSR-vector case);
+  * integrality mixes (§1.1 Step 3 rounding);
+  * finite and infinite bounds / one-sided constraints (§3.4);
+  * cascade chains -- the §2.2 price-of-parallelism worst case;
+  * classic families (knapsack, set cover, bin packing, assignment) whose
+    propagation behavior is well understood.
+
+Sizes are scaled so the Set-1..Set-8 sweep (paper §4.1) completes on one CPU;
+the set boundaries keep the paper's *relative* 2x spacing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from ..core.sparse import CSR, Problem, csr_from_coo
+from ..core.types import INF
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceSpec:
+    family: str
+    m: int
+    n: int
+    seed: int
+
+
+# ---------------------------------------------------------------------------
+# Families
+# ---------------------------------------------------------------------------
+
+
+def make_knapsack(n: int = 50, m: int = 10, seed: int = 0) -> Problem:
+    """m knapsack rows over n binary items: a^T x <= cap, a > 0."""
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = [], [], []
+    rhs = np.empty(m)
+    for i in range(m):
+        k = int(rng.integers(max(2, n // 4), max(3, n // 2)))
+        js = rng.choice(n, size=k, replace=False)
+        a = rng.integers(1, 20, size=k).astype(np.float64)
+        rows += [i] * k
+        cols += list(js)
+        vals += list(a)
+        rhs[i] = float(a.sum()) * rng.uniform(0.2, 0.5)
+    csr = csr_from_coo(
+        np.array(rows), np.array(cols), np.array(vals, dtype=np.float64), m, n
+    )
+    return Problem(
+        csr=csr,
+        lhs=np.full(m, -INF),
+        rhs=rhs,
+        lb=np.zeros(n),
+        ub=np.ones(n),
+        is_int=np.ones(n, dtype=bool),
+    )
+
+
+def make_set_cover(n: int = 60, m: int = 20, seed: int = 0) -> Problem:
+    """sum_j x_j >= 1 over random supports; binary x."""
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = [], [], []
+    for i in range(m):
+        k = int(rng.integers(2, max(3, n // 5)))
+        js = rng.choice(n, size=k, replace=False)
+        rows += [i] * k
+        cols += list(js)
+        vals += [1.0] * k
+    csr = csr_from_coo(
+        np.array(rows), np.array(cols), np.array(vals, dtype=np.float64), m, n
+    )
+    return Problem(
+        csr=csr,
+        lhs=np.ones(m),
+        rhs=np.full(m, INF),
+        lb=np.zeros(n),
+        ub=np.ones(n),
+        is_int=np.ones(n, dtype=bool),
+    )
+
+
+def make_bin_packing(items: int = 30, bins: int = 10, seed: int = 0) -> Problem:
+    """x[i,b] binary assignment; capacity rows + assignment equalities."""
+    rng = np.random.default_rng(seed)
+    n = items * bins
+    sizes = rng.integers(2, 12, size=items).astype(np.float64)
+    cap = float(sizes.sum() / bins * 1.4)
+    rows, cols, vals = [], [], []
+    lhs, rhs = [], []
+    r = 0
+    for b in range(bins):  # capacity rows
+        for i in range(items):
+            rows.append(r)
+            cols.append(i * bins + b)
+            vals.append(sizes[i])
+        lhs.append(-INF)
+        rhs.append(cap)
+        r += 1
+    for i in range(items):  # assignment equalities: sum_b x[i,b] == 1
+        for b in range(bins):
+            rows.append(r)
+            cols.append(i * bins + b)
+            vals.append(1.0)
+        lhs.append(1.0)
+        rhs.append(1.0)
+        r += 1
+    csr = csr_from_coo(
+        np.array(rows), np.array(cols), np.array(vals, dtype=np.float64), r, n
+    )
+    return Problem(
+        csr=csr,
+        lhs=np.array(lhs),
+        rhs=np.array(rhs),
+        lb=np.zeros(n),
+        ub=np.ones(n),
+        is_int=np.ones(n, dtype=bool),
+    )
+
+
+def make_assignment(size: int = 12, seed: int = 0) -> Problem:
+    """Assignment polytope rows; LP-relaxed bounds on continuous x."""
+    n = size * size
+    rows, cols, vals = [], [], []
+    lhs, rhs = [], []
+    r = 0
+    for i in range(size):
+        for j in range(size):
+            rows.append(r)
+            cols.append(i * size + j)
+            vals.append(1.0)
+        lhs.append(1.0)
+        rhs.append(1.0)
+        r += 1
+    for j in range(size):
+        for i in range(size):
+            rows.append(r)
+            cols.append(i * size + j)
+            vals.append(1.0)
+        lhs.append(1.0)
+        rhs.append(1.0)
+        r += 1
+    csr = csr_from_coo(
+        np.array(rows), np.array(cols), np.array(vals, dtype=np.float64), r, n
+    )
+    return Problem(
+        csr=csr,
+        lhs=np.array(lhs),
+        rhs=np.array(rhs),
+        lb=np.zeros(n),
+        ub=np.ones(n),
+        is_int=np.zeros(n, dtype=bool),
+    )
+
+
+def make_cascade_chain(length: int = 64, seed: int = 0) -> Problem:
+    """§2.2 worst case: x_{k+1} <= x_k chain seeded by x_0 <= 0.5.
+
+    Sequential propagation resolves the chain in one round (forward order);
+    the parallel algorithm needs ~``length`` rounds.
+    """
+    del seed
+    n = length + 1
+    m = length + 1
+    rows, cols, vals = [], [], []
+    lhs, rhs = [], []
+    # Row 0: x_0 <= 0.5
+    rows += [0]
+    cols += [0]
+    vals += [1.0]
+    lhs.append(-INF)
+    rhs.append(0.5)
+    # Row k: x_k - x_{k-1} <= 0  =>  x_k <= x_{k-1}
+    for k in range(1, length + 1):
+        rows += [k, k]
+        cols += [k, k - 1]
+        vals += [1.0, -1.0]
+        lhs.append(-INF)
+        rhs.append(0.0)
+    csr = csr_from_coo(
+        np.array(rows), np.array(cols), np.array(vals, dtype=np.float64), m, n
+    )
+    return Problem(
+        csr=csr,
+        lhs=np.array(lhs),
+        rhs=np.array(rhs),
+        lb=np.zeros(n),
+        ub=np.ones(n),
+        is_int=np.zeros(n, dtype=bool),
+    )
+
+
+def make_mixed(
+    m: int = 200,
+    n: int = 150,
+    seed: int = 0,
+    density: float = 0.03,
+    dense_rows: int = 2,
+    int_frac: float = 0.6,
+    inf_bound_frac: float = 0.15,
+) -> Problem:
+    """MIPLIB-like heterogeneous instance (power-law rows + dense connecting rows)."""
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = [], [], []
+    # Power-law-ish row lengths.
+    base = max(2, int(density * n))
+    raw = rng.pareto(2.0, size=m) + 1.0
+    lengths = np.clip((raw * base).astype(int), 2, max(3, n // 2))
+    # A few dense connecting rows (paper §3).
+    dense_idx = rng.choice(m, size=min(dense_rows, m), replace=False)
+    lengths[dense_idx] = max(3, int(n * 0.8))
+    for i in range(m):
+        k = int(lengths[i])
+        js = rng.choice(n, size=k, replace=False)
+        a = rng.choice([-1.0, 1.0], size=k) * rng.integers(1, 10, size=k)
+        rows += [i] * k
+        cols += list(js)
+        vals += list(a.astype(np.float64))
+    csr = csr_from_coo(
+        np.array(rows), np.array(cols), np.array(vals, dtype=np.float64), m, n
+    )
+    # Bounds: mostly [0, U]; some infinite; integrality mix.
+    ub = rng.integers(1, 10, size=n).astype(np.float64)
+    lb = np.zeros(n)
+    inf_mask = rng.random(n) < inf_bound_frac
+    ub[inf_mask] = INF
+    lb[rng.random(n) < inf_bound_frac * 0.5] = -INF
+    is_int = rng.random(n) < int_frac
+    # Sides: mix of <=, >=, ranged rows; scaled to row content for tightness.
+    rid = csr.row_ids()
+    absrow = np.zeros(m)
+    np.add.at(absrow, rid, np.abs(csr.val) * 3.0)
+    kind = rng.random(m)
+    lhs = np.where(kind < 0.35, -INF, -absrow * rng.uniform(0.1, 0.4, m))
+    rhs = np.where(kind > 0.85, INF, absrow * rng.uniform(0.1, 0.4, m))
+    bad = lhs > rhs
+    lhs[bad], rhs[bad] = rhs[bad], lhs[bad]
+    return Problem(
+        csr=csr, lhs=lhs, rhs=rhs, lb=lb, ub=ub, is_int=is_int
+    )
+
+
+FAMILIES: Dict[str, Callable[..., Problem]] = {
+    "knapsack": make_knapsack,
+    "set_cover": make_set_cover,
+    "bin_packing": make_bin_packing,
+    "assignment": make_assignment,
+    "cascade": make_cascade_chain,
+    "mixed": make_mixed,
+}
+
+
+def make_instance(spec: InstanceSpec) -> Problem:
+    if spec.family == "knapsack":
+        return make_knapsack(n=spec.n, m=spec.m, seed=spec.seed)
+    if spec.family == "set_cover":
+        return make_set_cover(n=spec.n, m=spec.m, seed=spec.seed)
+    if spec.family == "bin_packing":
+        items = max(4, spec.n // 10)
+        return make_bin_packing(items=items, bins=10, seed=spec.seed)
+    if spec.family == "assignment":
+        return make_assignment(size=max(3, int(np.sqrt(spec.n))), seed=spec.seed)
+    if spec.family == "cascade":
+        return make_cascade_chain(length=spec.m - 1, seed=spec.seed)
+    if spec.family == "mixed":
+        return make_mixed(m=spec.m, n=spec.n, seed=spec.seed)
+    raise ValueError(spec.family)
+
+
+# Paper §4.1 size partition [s, t): scaled 100x down so the sweep runs on one
+# CPU container while keeping the 2x set spacing.  "size" = max(m, n).
+SIZE_SETS: List[Tuple[str, int, int]] = [
+    ("Set-1", 10, 100),
+    ("Set-2", 100, 200),
+    ("Set-3", 200, 400),
+    ("Set-4", 400, 800),
+    ("Set-5", 800, 1600),
+    ("Set-6", 1600, 3200),
+    ("Set-7", 3200, 6400),
+    ("Set-8", 6400, 12800),
+]
+
+
+def instances_for_set(
+    set_name: str, per_family: int = 2, families: Tuple[str, ...] = ("mixed", "knapsack", "set_cover")
+) -> List[Tuple[InstanceSpec, Problem]]:
+    lo, hi = next((a, b) for nm, a, b in SIZE_SETS if nm == set_name)
+    out = []
+    rng = np.random.default_rng(hash(set_name) % (2**32))
+    for fam in families:
+        for k in range(per_family):
+            size = int(rng.integers(lo, hi))
+            m = size
+            n = max(10, int(size * rng.uniform(0.6, 1.2)))
+            spec = InstanceSpec(family=fam, m=m, n=n, seed=1000 + k + lo)
+            out.append((spec, make_instance(spec)))
+    return out

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spot -- the fused
+propagation round (Alg. 3) -- plus jnp oracles (ref.py) and the jit'd
+block-ELL propagation engine (ops.py)."""
+from .ops import (
+    DeviceBlockEll,
+    device_block_ell,
+    block_ell_round,
+    propagate_block_ell,
+    rows_fit_one_chunk,
+)
+from .prop_round import activities_tiles, candidates_tiles, fused_round_tiles
+from . import ref

@@ -1,0 +1,306 @@
+"""Pallas TPU kernels for the fused propagation round (paper Alg. 3).
+
+TPU adaptation of CSR-adaptive (DESIGN.md §2): the matrix is stored as
+length-bucketed block-ELL tiles of shape (R, K) = (tile_rows, tile_width).
+On the target (TPU v5e) K=128 matches the lane width and R=8 the sublane
+count, so a tile is exactly one VREG-aligned VMEM block; grid steps pipeline
+HBM->VMEM DMAs of consecutive tiles.
+
+Three kernels:
+
+  * ``_activities_kernel``  -- per-chunk activity partials + inf counters
+                               (CSR-stream/CSR-vector unified: long rows span
+                               chunks, partials are segment-combined outside).
+  * ``_candidates_kernel``  -- residual activities (§3.4 single-infinity
+                               rule) + bound candidates (Eqs. 4/5) +
+                               integrality rounding, given completed row
+                               aggregates gathered per chunk.
+  * ``_fused_round_kernel`` -- Alg.-3-faithful fusion of both phases for the
+                               common case where every row fits in one chunk
+                               (activities stay in VMEM and are reused
+                               immediately -- the shared-memory trick).
+
+All kernels are elementwise/reduction over dense tiles: the irregular
+gather (bounds at column ids) and scatter (column-wise min/max merge) live
+outside in XLA, which on TPU lowers them to dynamic-gather / segment ops.
+Kernels are validated on CPU via ``interpret=True`` against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.types import INF
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Kernel A: activity partials
+# ---------------------------------------------------------------------------
+
+
+def _activities_kernel(val_ref, lb_ref, ub_ref, mf_ref, mc_ref, xf_ref, xc_ref, *, inf):
+    val = val_ref[...]          # (1, R, K) VMEM block
+    lb_g = lb_ref[...]
+    ub_g = ub_ref[...]
+    pos = val > 0
+    pad = val == 0
+    b_min = jnp.where(pos, lb_g, ub_g)
+    b_max = jnp.where(pos, ub_g, lb_g)
+    min_is_inf = (jnp.abs(b_min) >= inf) & ~pad
+    max_is_inf = (jnp.abs(b_max) >= inf) & ~pad
+    mf_ref[...] = jnp.where(min_is_inf | pad, 0.0, val * b_min).sum(axis=-1)
+    xf_ref[...] = jnp.where(max_is_inf | pad, 0.0, val * b_max).sum(axis=-1)
+    mc_ref[...] = min_is_inf.astype(jnp.int32).sum(axis=-1)
+    xc_ref[...] = max_is_inf.astype(jnp.int32).sum(axis=-1)
+
+
+def activities_tiles(val, lb_g, ub_g, inf: float = INF, interpret: bool | None = None):
+    """Pallas-backed per-chunk activity partials. Shapes: (T, R, K) -> (T, R)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    t, r, k = val.shape
+    dtype = val.dtype
+    tile = pl.BlockSpec((1, r, k), lambda i: (i, 0, 0))
+    out_tile = pl.BlockSpec((1, r), lambda i: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((t, r), dtype),
+        jax.ShapeDtypeStruct((t, r), jnp.int32),
+        jax.ShapeDtypeStruct((t, r), dtype),
+        jax.ShapeDtypeStruct((t, r), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_activities_kernel, inf=inf),
+        grid=(t,),
+        in_specs=[tile, tile, tile],
+        out_specs=[out_tile, out_tile, out_tile, out_tile],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    mf, mc, xf, xc = fn(val, lb_g, ub_g)
+    return mf, mc, xf, xc
+
+
+# ---------------------------------------------------------------------------
+# Kernel B: candidates from completed row aggregates
+# ---------------------------------------------------------------------------
+
+
+def _candidates_kernel(
+    val_ref,
+    lb_ref,
+    ub_ref,
+    ii_ref,
+    rmf_ref,
+    rmc_ref,
+    rxf_ref,
+    rxc_ref,
+    lhs_ref,
+    rhs_ref,
+    lc_ref,
+    uc_ref,
+    *,
+    int_eps,
+    inf,
+):
+    val = val_ref[...]            # (1, R, K)
+    lb_g = lb_ref[...]
+    ub_g = ub_ref[...]
+    is_int_g = ii_ref[...] != 0
+    rmf = rmf_ref[...][..., None]  # (1, R, 1)
+    rmc = rmc_ref[...][..., None]
+    rxf = rxf_ref[...][..., None]
+    rxc = rxc_ref[...][..., None]
+    lhs_b = lhs_ref[...][..., None]
+    rhs_b = rhs_ref[...][..., None]
+
+    pos = val > 0
+    pad = val == 0
+    b_min = jnp.where(pos, lb_g, ub_g)
+    b_max = jnp.where(pos, ub_g, lb_g)
+    min_is_inf = (jnp.abs(b_min) >= inf) & ~pad
+    max_is_inf = (jnp.abs(b_max) >= inf) & ~pad
+    c_min = jnp.where(min_is_inf | pad, 0.0, val * b_min)
+    c_max = jnp.where(max_is_inf | pad, 0.0, val * b_max)
+
+    min_res = jnp.where(
+        min_is_inf,
+        jnp.where(rmc == 1, rmf, -inf),
+        jnp.where(rmc == 0, rmf - c_min, -inf),
+    )
+    max_res = jnp.where(
+        max_is_inf,
+        jnp.where(rxc == 1, rxf, inf),
+        jnp.where(rxc == 0, rxf - c_max, inf),
+    )
+
+    safe_a = jnp.where(pad, 1.0, val)
+    num_l = jnp.where(pos, lhs_b - max_res, rhs_b - min_res)
+    num_u = jnp.where(pos, rhs_b - min_res, lhs_b - max_res)
+    lcand = num_l / safe_a
+    ucand = num_u / safe_a
+
+    valid_l = (
+        jnp.where(pos, (lhs_b > -inf) & (max_res < inf), (rhs_b < inf) & (min_res > -inf))
+        & ~pad
+    )
+    valid_u = (
+        jnp.where(pos, (rhs_b < inf) & (min_res > -inf), (lhs_b > -inf) & (max_res < inf))
+        & ~pad
+    )
+    lcand = jnp.where(valid_l, jnp.clip(lcand, -inf, inf), -inf)
+    ucand = jnp.where(valid_u, jnp.clip(ucand, -inf, inf), inf)
+
+    do_l = is_int_g & (jnp.abs(lcand) < inf)
+    do_u = is_int_g & (jnp.abs(ucand) < inf)
+    lc_ref[...] = jnp.where(do_l, jnp.ceil(lcand - int_eps), lcand)
+    uc_ref[...] = jnp.where(do_u, jnp.floor(ucand + int_eps), ucand)
+
+
+def candidates_tiles(
+    val,
+    lb_g,
+    ub_g,
+    is_int_g,
+    row_min_fin,
+    row_min_cnt,
+    row_max_fin,
+    row_max_cnt,
+    lhs_g,
+    rhs_g,
+    int_eps: float,
+    inf: float = INF,
+    interpret: bool | None = None,
+):
+    """Pallas-backed candidates. (T,R,K) tiles + (T,R) row data -> (T,R,K) x2."""
+    if interpret is None:
+        interpret = _on_cpu()
+    t, r, k = val.shape
+    dtype = val.dtype
+    tile = pl.BlockSpec((1, r, k), lambda i: (i, 0, 0))
+    row_tile = pl.BlockSpec((1, r), lambda i: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((t, r, k), dtype),
+        jax.ShapeDtypeStruct((t, r, k), dtype),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_candidates_kernel, int_eps=int_eps, inf=inf),
+        grid=(t,),
+        in_specs=[tile, tile, tile, tile, row_tile, row_tile, row_tile, row_tile, row_tile, row_tile],
+        out_specs=[tile, tile],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(
+        val,
+        lb_g,
+        ub_g,
+        is_int_g.astype(jnp.int32),
+        row_min_fin,
+        row_min_cnt,
+        row_max_fin,
+        row_max_cnt,
+        lhs_g,
+        rhs_g,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Kernel C: fused round (rows complete within one chunk)
+# ---------------------------------------------------------------------------
+
+
+def _fused_round_kernel(
+    val_ref, lb_ref, ub_ref, ii_ref, lhs_ref, rhs_ref, lc_ref, uc_ref, *, int_eps, inf
+):
+    val = val_ref[...]
+    lb_g = lb_ref[...]
+    ub_g = ub_ref[...]
+    pos = val > 0
+    pad = val == 0
+    b_min = jnp.where(pos, lb_g, ub_g)
+    b_max = jnp.where(pos, ub_g, lb_g)
+    min_is_inf = (jnp.abs(b_min) >= inf) & ~pad
+    max_is_inf = (jnp.abs(b_max) >= inf) & ~pad
+    c_min = jnp.where(min_is_inf | pad, 0.0, val * b_min)
+    c_max = jnp.where(max_is_inf | pad, 0.0, val * b_max)
+
+    # Row aggregates entirely in VMEM (the paper's shared-memory reuse).
+    rmf = c_min.sum(axis=-1, keepdims=True)
+    rxf = c_max.sum(axis=-1, keepdims=True)
+    rmc = min_is_inf.astype(jnp.int32).sum(axis=-1, keepdims=True)
+    rxc = max_is_inf.astype(jnp.int32).sum(axis=-1, keepdims=True)
+
+    min_res = jnp.where(
+        min_is_inf,
+        jnp.where(rmc == 1, rmf, -inf),
+        jnp.where(rmc == 0, rmf - c_min, -inf),
+    )
+    max_res = jnp.where(
+        max_is_inf,
+        jnp.where(rxc == 1, rxf, inf),
+        jnp.where(rxc == 0, rxf - c_max, inf),
+    )
+
+    lhs_b = lhs_ref[...][..., None]
+    rhs_b = rhs_ref[...][..., None]
+    safe_a = jnp.where(pad, 1.0, val)
+    num_l = jnp.where(pos, lhs_b - max_res, rhs_b - min_res)
+    num_u = jnp.where(pos, rhs_b - min_res, lhs_b - max_res)
+    lcand = num_l / safe_a
+    ucand = num_u / safe_a
+    valid_l = (
+        jnp.where(pos, (lhs_b > -inf) & (max_res < inf), (rhs_b < inf) & (min_res > -inf))
+        & ~pad
+    )
+    valid_u = (
+        jnp.where(pos, (rhs_b < inf) & (min_res > -inf), (lhs_b > -inf) & (max_res < inf))
+        & ~pad
+    )
+    lcand = jnp.where(valid_l, jnp.clip(lcand, -inf, inf), -inf)
+    ucand = jnp.where(valid_u, jnp.clip(ucand, -inf, inf), inf)
+
+    is_int_g = ii_ref[...] != 0
+    do_l = is_int_g & (jnp.abs(lcand) < inf)
+    do_u = is_int_g & (jnp.abs(ucand) < inf)
+    lc_ref[...] = jnp.where(do_l, jnp.ceil(lcand - int_eps), lcand)
+    uc_ref[...] = jnp.where(do_u, jnp.floor(ucand + int_eps), ucand)
+
+
+def fused_round_tiles(
+    val,
+    lb_g,
+    ub_g,
+    is_int_g,
+    lhs_g,
+    rhs_g,
+    int_eps: float,
+    inf: float = INF,
+    interpret: bool | None = None,
+):
+    """Alg.-3-faithful fused tile round. Requires max row length <= K."""
+    if interpret is None:
+        interpret = _on_cpu()
+    t, r, k = val.shape
+    dtype = val.dtype
+    tile = pl.BlockSpec((1, r, k), lambda i: (i, 0, 0))
+    row_tile = pl.BlockSpec((1, r), lambda i: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((t, r, k), dtype),
+        jax.ShapeDtypeStruct((t, r, k), dtype),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_fused_round_kernel, int_eps=int_eps, inf=inf),
+        grid=(t,),
+        in_specs=[tile, tile, tile, tile, row_tile, row_tile],
+        out_specs=[tile, tile],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(val, lb_g, ub_g, is_int_g.astype(jnp.int32), lhs_g, rhs_g)

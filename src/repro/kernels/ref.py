@@ -1,0 +1,164 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+The oracles define the *exact* semantics (sentinel-infinity handling, padding
+masks, reduction order at tile granularity) the kernels must reproduce; the
+test suite sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import INF
+
+
+# ---------------------------------------------------------------------------
+# Tile-level activity partials (kernel A oracle)
+# ---------------------------------------------------------------------------
+
+
+def activities_tiles_ref(val, lb_g, ub_g, inf: float = INF):
+    """Per-chunk activity partials over block-ELL tiles.
+
+    Args:
+      val:  (T, R, K) coefficients, 0 == padding.
+      lb_g: (T, R, K) lower bounds gathered at each nonzero's column.
+      ub_g: (T, R, K) upper bounds gathered at each nonzero's column.
+
+    Returns:
+      (min_fin, min_cnt, max_fin, max_cnt): each (T, R); finite partial sums
+      and int32 infinity-contribution counts per chunk.
+    """
+    pos = val > 0
+    pad = val == 0
+    b_min = jnp.where(pos, lb_g, ub_g)
+    b_max = jnp.where(pos, ub_g, lb_g)
+    min_is_inf = (jnp.abs(b_min) >= inf) & ~pad
+    max_is_inf = (jnp.abs(b_max) >= inf) & ~pad
+    min_fin = jnp.where(min_is_inf | pad, 0.0, val * b_min).sum(axis=-1)
+    max_fin = jnp.where(max_is_inf | pad, 0.0, val * b_max).sum(axis=-1)
+    min_cnt = min_is_inf.astype(jnp.int32).sum(axis=-1)
+    max_cnt = max_is_inf.astype(jnp.int32).sum(axis=-1)
+    return min_fin, min_cnt, max_fin, max_cnt
+
+
+# ---------------------------------------------------------------------------
+# Tile-level candidate computation (kernel B oracle)
+# ---------------------------------------------------------------------------
+
+
+def candidates_tiles_ref(
+    val,
+    lb_g,
+    ub_g,
+    is_int_g,
+    row_min_fin,
+    row_min_cnt,
+    row_max_fin,
+    row_max_cnt,
+    lhs_g,
+    rhs_g,
+    int_eps: float,
+    inf: float = INF,
+):
+    """Per-nonzero bound candidates over block-ELL tiles.
+
+    Args:
+      val, lb_g, ub_g: (T, R, K) as above.
+      is_int_g: (T, R, K) bool, integrality of each nonzero's column.
+      row_*: (T, R) *completed* row aggregates gathered per chunk.
+      lhs_g, rhs_g: (T, R) constraint sides gathered per chunk.
+
+    Returns:
+      (lcand, ucand): (T, R, K); invalid entries at -inf/+inf sentinels.
+    """
+    pos = val > 0
+    pad = val == 0
+    b_min = jnp.where(pos, lb_g, ub_g)
+    b_max = jnp.where(pos, ub_g, lb_g)
+    min_is_inf = (jnp.abs(b_min) >= inf) & ~pad
+    max_is_inf = (jnp.abs(b_max) >= inf) & ~pad
+    c_min = jnp.where(min_is_inf | pad, 0.0, val * b_min)
+    c_max = jnp.where(max_is_inf | pad, 0.0, val * b_max)
+
+    rmf = row_min_fin[..., None]
+    rmc = row_min_cnt[..., None]
+    rxf = row_max_fin[..., None]
+    rxc = row_max_cnt[..., None]
+
+    # Residual activities with the §3.4 single-infinity rule.
+    min_res = jnp.where(
+        min_is_inf,
+        jnp.where(rmc == 1, rmf, -inf),
+        jnp.where(rmc == 0, rmf - c_min, -inf),
+    )
+    max_res = jnp.where(
+        max_is_inf,
+        jnp.where(rxc == 1, rxf, inf),
+        jnp.where(rxc == 0, rxf - c_max, inf),
+    )
+
+    lhs_b = lhs_g[..., None]
+    rhs_b = rhs_g[..., None]
+    safe_a = jnp.where(pad, 1.0, val)
+    num_l = jnp.where(pos, lhs_b - max_res, rhs_b - min_res)
+    num_u = jnp.where(pos, rhs_b - min_res, lhs_b - max_res)
+    lcand = num_l / safe_a
+    ucand = num_u / safe_a
+
+    valid_l = (
+        jnp.where(
+            pos,
+            (lhs_b > -inf) & (max_res < inf),
+            (rhs_b < inf) & (min_res > -inf),
+        )
+        & ~pad
+    )
+    valid_u = (
+        jnp.where(
+            pos,
+            (rhs_b < inf) & (min_res > -inf),
+            (lhs_b > -inf) & (max_res < inf),
+        )
+        & ~pad
+    )
+    lcand = jnp.where(valid_l, jnp.clip(lcand, -inf, inf), -inf)
+    ucand = jnp.where(valid_u, jnp.clip(ucand, -inf, inf), inf)
+
+    # Integrality strengthening.
+    do_l = is_int_g & (jnp.abs(lcand) < inf)
+    do_u = is_int_g & (jnp.abs(ucand) < inf)
+    lcand = jnp.where(do_l, jnp.ceil(lcand - int_eps), lcand)
+    ucand = jnp.where(do_u, jnp.floor(ucand + int_eps), ucand)
+    return lcand, ucand
+
+
+# ---------------------------------------------------------------------------
+# Fused one-tile round (kernel C oracle): rows complete within their chunk
+# ---------------------------------------------------------------------------
+
+
+def fused_round_tiles_ref(
+    val, lb_g, ub_g, is_int_g, lhs_g, rhs_g, int_eps: float, inf: float = INF
+):
+    """Activities + candidates in one pass; valid iff every row fits one chunk.
+
+    This is the Alg.-3-faithful fusion: the chunk's activity lives in
+    registers/VMEM and is immediately reused for the candidates -- the TPU
+    analogue of the paper's shared-memory reuse (§3.5).
+    """
+    min_fin, min_cnt, max_fin, max_cnt = activities_tiles_ref(val, lb_g, ub_g, inf)
+    return candidates_tiles_ref(
+        val,
+        lb_g,
+        ub_g,
+        is_int_g,
+        min_fin,
+        min_cnt,
+        max_fin,
+        max_cnt,
+        lhs_g,
+        rhs_g,
+        int_eps,
+        inf,
+    )

@@ -1,0 +1,391 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run (task §MULTI-POD DRY-RUN).
+
+For every (architecture x input shape) cell and both production meshes
+(single-pod (16,16), multi-pod (2,16,16)):
+
+  1. FULL lowering (scan-over-layers) -> .lower().compile() must succeed;
+     ``memory_analysis()`` proves the per-device footprint fits 16 GB HBM.
+  2. PROBE lowerings (unrolled layers + inner loops, two depths) ->
+     ``cost_analysis()`` + HLO collective parsing, linearly extrapolated to
+     full depth -> the three roofline terms (roofline/analysis.py).
+
+Results are appended to a JSON file consumed by EXPERIMENTS.md tooling.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k \
+      --mesh single --out results/dryrun.json [--probes/--no-probes]
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, get_config
+from ..models.config import SHAPES, cell_supported, input_specs
+from ..models.transformer import (
+    active_param_count,
+    init_params,
+    param_count,
+)
+from ..roofline.analysis import (
+    RooflineTerms,
+    collective_bytes,
+    extrapolate,
+    model_flops,
+)
+from ..train.optimizer import OptimizerConfig, init_opt_state
+from ..train.serve_step import make_serve_step
+from ..train.train_step import make_train_step
+from .mesh import make_production_mesh
+from .sharding import batch_shardings, opt_state_shardings, param_shardings
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+
+_MB_OVERRIDE = {
+    # Heavy cells need full grad accumulation (per-mb local batch == 1).
+    "deepseek-v2-236b": 1_000_000,
+}
+
+
+def _opt_cfg_for(cfg) -> OptimizerConfig:
+    """236B-scale training cannot hold fp32 Adam state in 16GB-HBM chips at
+    256-chip scale; use bf16 m/v + bf16 grad accumulation there."""
+    if cfg.name == "deepseek-v2-236b":
+        return OptimizerConfig(state_dtype="bfloat16")
+    return OptimizerConfig()
+
+
+def _train_microbatches(cfg, shape, mesh) -> int:
+    """Default grad-accum factor so per-device activations fit HBM."""
+    dp = 1
+    for a, size in zip(mesh.axis_names, mesh.devices.shape):
+        if a != "model":
+            dp *= size
+    local_batch = max(1, shape.global_batch // dp)
+    return min(_MB_OVERRIDE.get(cfg.name, 8), local_batch)
+
+
+def lower_cell(cfg, shape, mesh, microbatches: int = 1):
+    """Build + lower + compile one cell. Returns (lowered, compiled, specs)."""
+    specs = input_specs(cfg, shape)
+    p_sh = param_shardings(cfg, mesh)
+    params_sds = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+    if shape.kind == "train":
+        opt_cfg = _opt_cfg_for(cfg)
+        step = make_train_step(cfg, opt_cfg, mesh, microbatches=microbatches)
+        opt_sds = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params_sds)
+        o_sh = opt_state_shardings(cfg, mesh, opt_cfg)
+        b_sh = batch_shardings(cfg, mesh, specs)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),  # params/opt alias -> no double residency
+        )
+        lowered = jitted.lower(params_sds, opt_sds, specs)
+    elif shape.kind == "prefill":
+        from ..train.serve_step import make_prefill_fn
+
+        fn = make_prefill_fn(cfg, mesh)
+        b_sh = batch_shardings(cfg, mesh, specs)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh["tokens"],
+                                           b_sh.get("frontend_embeds")))
+        args = [params_sds, specs["tokens"]]
+        if "frontend_embeds" in specs:
+            args.append(specs["frontend_embeds"])
+        else:
+            jitted = jax.jit(fn, in_shardings=(p_sh, b_sh["tokens"]))
+        lowered = jitted.lower(*args)
+    else:  # decode
+        fn = make_serve_step(cfg, mesh)
+        b_sh = batch_shardings(cfg, mesh, specs)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_sh, b_sh["tokens"], b_sh["cache"], b_sh["pos"]),
+            donate_argnums=(2,),  # KV cache updated in place
+        )
+        lowered = jitted.lower(
+            params_sds, specs["tokens"], specs["cache"], specs["pos"]
+        )
+    compiled = lowered.compile()
+    return lowered, compiled
+
+
+# ---------------------------------------------------------------------------
+# Probe configs (unrolled lowerings at two depths)
+# ---------------------------------------------------------------------------
+
+
+def probe_depths(cfg):
+    """(n1, n2, n_full, unit) for linear extrapolation over segment units."""
+    if cfg.layer_pattern:  # recurrentgemma: unit = one period, same tail
+        period = len(cfg.layer_pattern)
+        n_full, tail = divmod(cfg.num_layers, period)
+        return (1 * period + tail, 2 * period + tail, None, n_full)
+    if cfg.first_k_dense:  # deepseek: unit = one MoE layer
+        return (cfg.first_k_dense + 1, cfg.first_k_dense + 2, None,
+                cfg.num_layers - cfg.first_k_dense)
+    return (1, 2, None, cfg.num_layers)
+
+
+def probe_cfg(cfg, n_layers: int, shape):
+    return dataclasses.replace(
+        cfg,
+        num_layers=n_layers,
+        scan_layers=False,
+        unroll_inner=True,
+        attn_chunk=max(512, shape.seq_len // 2),
+        remat=False,
+    )
+
+
+def probe_cell(cfg, shape, mesh):
+    """Unrolled probe lowerings -> extrapolated per-device costs.
+
+    FLOPs come from the HLO dot parser (XLA:CPU cost_analysis inflates flops
+    ~16x by modeling elementwise ops on attention score tensors); HBM bytes
+    from the fusion-aware traffic estimator.  Raw cost_analysis numbers are
+    recorded alongside for reference.
+    """
+    from ..roofline.hlo_flops import dot_flops_by_op, hbm_traffic_estimate
+
+    n1, n2, _, n_units = probe_depths(cfg)
+    res = []
+    for n in (n1, n2):
+        pcfg = probe_cfg(cfg, n, shape)
+        lowered, compiled = lower_cell(pcfg, shape, mesh, microbatches=1)
+        txt = compiled.as_text()
+        ca = compiled.cost_analysis()
+        coll = collective_bytes(txt)
+        dot_flops, _ = dot_flops_by_op(txt)
+        res.append(
+            {
+                "flops": dot_flops,
+                "bytes": hbm_traffic_estimate(txt),
+                "raw_ca_flops": float(ca.get("flops", 0.0)),
+                "raw_ca_bytes": float(ca.get("bytes accessed", 0.0)),
+                "coll": coll["total"],
+                "coll_by_op": coll,
+            }
+        )
+    # probe1 covers 1 unit (plus fixed base); probe2 covers 2 units.
+    flops = extrapolate(res[0]["flops"], res[1]["flops"], 1, 2, n_units)
+    bytes_hbm = extrapolate(res[0]["bytes"], res[1]["bytes"], 1, 2, n_units)
+    coll = extrapolate(res[0]["coll"], res[1]["coll"], 1, 2, n_units)
+    by_op = {
+        k: extrapolate(res[0]["coll_by_op"][k], res[1]["coll_by_op"][k], 1, 2, n_units)
+        for k in res[0]["coll_by_op"]
+    }
+    raw = {
+        "raw_ca_flops": extrapolate(
+            res[0]["raw_ca_flops"], res[1]["raw_ca_flops"], 1, 2, n_units
+        ),
+        "raw_ca_bytes": extrapolate(
+            res[0]["raw_ca_bytes"], res[1]["raw_ca_bytes"], 1, 2, n_units
+        ),
+    }
+    terms = RooflineTerms(flops=flops, bytes_hbm=bytes_hbm, bytes_coll=coll).finalize()
+    return terms, by_op, raw
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, probes: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "kind": shape.kind,
+        "supported": ok,
+    }
+    if not ok:
+        rec["skip_reason"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    mb = _train_microbatches(cfg, shape, mesh) if shape.kind == "train" else 1
+    t0 = time.time()
+    lowered, compiled = lower_cell(cfg, shape, mesh, microbatches=mb)
+    ma = compiled.memory_analysis()
+    rec.update(
+        {
+            "microbatches": mb,
+            "compile_s": round(time.time() - t0, 1),
+            "arg_bytes": int(ma.argument_size_in_bytes),
+            "out_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0)),
+            "fits_hbm": bool(
+                ma.argument_size_in_bytes + ma.temp_size_in_bytes < HBM_PER_CHIP
+            ),
+        }
+    )
+    # Scanned-module cost numbers (loop bodies counted once -- recorded for
+    # comparison against the probe-extrapolated numbers).
+    ca = compiled.cost_analysis()
+    rec["scanned_flops_per_device"] = float(ca.get("flops", 0.0))
+
+    if probes:
+        t1 = time.time()
+        terms, by_op, raw = probe_cell(cfg, shape, mesh)
+        rec["probe_s"] = round(time.time() - t1, 1)
+        rec.update(terms.as_dict())
+        rec.update(raw)
+        rec["collective_by_op"] = {k: float(v) for k, v in by_op.items()}
+        # Useful-compute ratio.
+        n_active = active_param_count(cfg)
+        tokens = shape.global_batch * (
+            shape.seq_len if shape.kind != "decode" else 1
+        )
+        chips = 1
+        for s in mesh.devices.shape:
+            chips *= s
+        mf = model_flops(n_active, tokens, shape.kind)
+        rec["model_flops_total"] = mf
+        rec["hlo_flops_total"] = terms.flops * chips
+        rec["useful_compute_ratio"] = (
+            mf / rec["hlo_flops_total"] if rec["hlo_flops_total"] else 0.0
+        )
+        rec["roofline_fraction"] = (
+            rec["t_compute_s"] / rec["t_bound_s"] if rec["t_bound_s"] else 0.0
+        )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--no-probes", dest="probes", action="store_false")
+    ap.add_argument("--include-prop", action="store_true",
+                    help="also dry-run the paper's sharded propagation workload")
+    args = ap.parse_args()
+
+    cells = []
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape_name in SHAPES:
+                for mk in meshes:
+                    cells.append((arch, shape_name, mk))
+    else:
+        assert args.arch and args.shape
+        for mk in meshes:
+            cells.append((args.arch, args.shape, mk))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    for arch, shape_name, mk in cells:
+        if (arch, shape_name, mk) in done:
+            print(f"[skip done] {arch} x {shape_name} x {mk}")
+            continue
+        print(f"[dryrun] {arch} x {shape_name} x {mk}", flush=True)
+        try:
+            rec = run_cell(arch, shape_name, mk, probes=args.probes)
+        except Exception as e:  # a failing cell is a bug -- record loudly
+            rec = {
+                "arch": arch,
+                "shape": shape_name,
+                "mesh": mk,
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+            }
+            print(f"  FAILED: {e}")
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        if "error" not in rec and rec.get("supported", True):
+            print(
+                f"  ok compile={rec.get('compile_s')}s mb={rec.get('microbatches')}"
+                f" peak={rec.get('temp_bytes', 0)/2**30:.2f}GiB"
+                f" bottleneck={rec.get('bottleneck', '-')}"
+            )
+
+    if args.include_prop:
+        run_propagation_dryrun(results, args.out, meshes)
+
+
+def run_propagation_dryrun(results, out, meshes):
+    """Dry-run the paper's distributed propagation on the production meshes."""
+    from ..core.sharded import lower_sharded
+    from ..core.sparse import Problem, csr_from_coo
+    import numpy as np
+
+    # Synthetic production-scale instance: 16M nnz, 1M rows, 500k cols.
+    m, n, nnz = 1_000_000, 500_000, 16_000_000
+    rng = np.random.default_rng(0)
+    rows = np.sort(rng.integers(0, m, nnz)).astype(np.int32)
+    cols = rng.integers(0, n, nnz).astype(np.int32)
+    vals = rng.standard_normal(nnz)
+    csr = csr_from_coo(rows, cols, vals, m, n)
+    p = Problem(
+        csr=csr,
+        lhs=np.full(m, -1e20),
+        rhs=rng.uniform(1, 10, m),
+        lb=np.zeros(n),
+        ub=np.full(n, 10.0),
+        is_int=np.zeros(n, dtype=bool),
+    )
+    for mk in meshes:
+        key = ("propagation-16Mnnz", "fixed_point", mk)
+        if any((r["arch"], r["shape"], r["mesh"]) == key for r in results):
+            continue
+        mesh = make_production_mesh(multi_pod=(mk == "multi"))
+        t0 = time.time()
+        lowered = lower_sharded(p, mesh)
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        coll = collective_bytes(compiled.as_text())
+        rec = {
+            "arch": "propagation-16Mnnz",
+            "shape": "fixed_point",
+            "mesh": mk,
+            "kind": "propagation",
+            "supported": True,
+            "compile_s": round(time.time() - t0, 1),
+            "arg_bytes": int(ma.argument_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "fits_hbm": bool(
+                ma.argument_size_in_bytes + ma.temp_size_in_bytes < HBM_PER_CHIP
+            ),
+            "collective_by_op_per_round": {k: float(v) for k, v in coll.items()},
+            "note": "collectives are per ROUND (fixed point is a while loop)",
+        }
+        results.append(rec)
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] propagation x {mk}: compile={rec['compile_s']}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh definitions (DESIGN.md §4).
+
+Single-pod: (16, 16)  = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") -- "pod"
+is an outer data axis; gradient all-reduce is hierarchical (ICI within a
+pod, DCI across pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for subprocess-based multi-device tests."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """All non-"model" axes -- the batch / pure-data-parallel dimensions."""
+    return tuple(a for a in mesh.axis_names if a != "model")

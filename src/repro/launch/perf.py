@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """§Perf hillclimb driver: re-lower selected cells with optimization
+levers toggled and report the three roofline terms per variant, plus the
+full-lowering memory footprint.  Appends to results/perf.json.
+
+  python -m repro.launch.perf --cell granite-3-2b:train_4k --mesh single
+  python -m repro.launch.perf --prop             # propagation variants
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..models.config import SHAPES
+from ..roofline.analysis import collective_bytes
+from .dryrun import HBM_PER_CHIP, lower_cell, probe_cell, _train_microbatches
+from .mesh import make_production_mesh
+
+LEVERS = {
+    "baseline": {},
+    "+causal_skip": {"causal_skip": True},
+    "+seq_shard": {"seq_shard": True},
+    "+both": {"causal_skip": True, "seq_shard": True},
+}
+
+
+def run_lm_cell(arch: str, shape_name: str, mesh_kind: str, levers=None):
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    records = []
+    for name, overrides in (levers or LEVERS).items():
+        cfg = dataclasses.replace(get_config(arch), **overrides)
+        mb = _train_microbatches(cfg, shape, mesh) if shape.kind == "train" else 1
+        t0 = time.time()
+        rec = {"cell": f"{arch}:{shape_name}:{mesh_kind}", "variant": name}
+        try:
+            lowered, compiled = lower_cell(cfg, shape, mesh, microbatches=mb)
+            ma = compiled.memory_analysis()
+            rec.update(
+                arg_gib=round(ma.argument_size_in_bytes / 2**30, 2),
+                temp_gib=round(ma.temp_size_in_bytes / 2**30, 2),
+                fits_hbm=bool(
+                    ma.argument_size_in_bytes + ma.temp_size_in_bytes < HBM_PER_CHIP
+                ),
+            )
+            terms, by_op, raw = probe_cell(cfg, shape, mesh)
+            rec.update(terms.as_dict())
+            rec["roofline_fraction"] = (
+                terms.t_compute / terms.t_bound if terms.t_bound else 0.0
+            )
+            rec["wall_s"] = round(time.time() - t0, 1)
+        except Exception as e:  # noqa: BLE001
+            rec["error"] = f"{type(e).__name__}: {e}"
+        records.append(rec)
+        print(json.dumps(rec), flush=True)
+    return records
+
+
+def run_propagation_variants(mesh_kind: str = "single", nnz=4_000_000,
+                             m=250_000, n=125_000):
+    """Static per-round collective bytes: nnz-partition (paper-faithful
+    distribution) vs row-partition (beyond-paper)."""
+    import numpy as np
+
+    from ..core.sharded import (
+        _row_sharded_round,
+        _sharded_round,
+        partition_nnz,
+        partition_rows,
+    )
+    from ..core.sparse import Problem, csr_from_coo
+    from ..core.types import DEFAULT_CONFIG as cfg
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    import functools
+
+    rng = np.random.default_rng(0)
+    rows_idx = np.sort(rng.integers(0, m, nnz)).astype(np.int32)
+    cols = rng.integers(0, n, nnz).astype(np.int32)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    csr = csr_from_coo(rows_idx, cols, vals, m, n)
+    p = Problem(
+        csr=csr, lhs=np.full(m, -1e20, np.float32),
+        rhs=rng.uniform(1, 10, m).astype(np.float32),
+        lb=np.zeros(n, np.float32), ub=np.full(n, 10.0, np.float32),
+        is_int=np.zeros(n, dtype=bool),
+    )
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    axes = tuple(mesh.axis_names)
+    shards = 1
+    for s in mesh.devices.shape:
+        shards *= s
+    eps = cfg.eps_for(jnp.float32)
+    out = []
+
+    # Variant A: nnz partition (baseline).
+    row_id, col, val = partition_nnz(p, shards)
+    rfn = functools.partial(
+        _sharded_round, m=m, n=n, eps=eps, int_eps=cfg.int_eps, inf=cfg.inf,
+        axes=axes,
+    )
+
+    def bodyA(row_id, col, val, lhs, rhs, is_int, lb, ub):
+        lb, ub, ch = rfn(row_id, col, val, lhs, rhs, is_int, lb, ub)
+        return lb, ub, ch
+
+    nnz_spec = P(axes)
+    rep = P()
+    fnA = shard_map(
+        bodyA, mesh=mesh,
+        in_specs=(nnz_spec,) * 3 + (rep,) * 5,
+        out_specs=(rep, rep, rep), check_vma=False,
+    )
+    lowA = jax.jit(fnA).lower(
+        jnp.asarray(row_id), jnp.asarray(col), jnp.asarray(val),
+        jnp.asarray(p.lhs), jnp.asarray(p.rhs), jnp.asarray(p.is_int),
+        jnp.asarray(p.lb), jnp.asarray(p.ub),
+    )
+    collA = collective_bytes(lowA.compile().as_text())
+    out.append({"variant": "nnz-partition (baseline)", "mesh": mesh_kind,
+                "per_round_collective_bytes": collA})
+    print(json.dumps(out[-1]), flush=True)
+
+    # Variant B: row partition (beyond-paper).
+    val2, col2, lrow2, lhs2, rhs2, rows = partition_rows(p, shards)
+    rfnB = functools.partial(
+        _row_sharded_round, rows=rows, n=n, eps=eps, int_eps=cfg.int_eps,
+        inf=cfg.inf, axes=axes,
+    )
+
+    def bodyB(lrow, col, val, lhs, rhs, is_int, lb, ub):
+        lb, ub, ch = rfnB(lrow[0], col[0], val[0], lhs[0], rhs[0], is_int, lb, ub)
+        return lb, ub, ch
+
+    shard_spec = P(axes, None)
+    fnB = shard_map(
+        bodyB, mesh=mesh,
+        in_specs=(shard_spec,) * 5 + (rep,) * 3,
+        out_specs=(rep, rep, rep), check_vma=False,
+    )
+    lowB = jax.jit(fnB).lower(
+        jnp.asarray(lrow2), jnp.asarray(col2), jnp.asarray(val2),
+        jnp.asarray(lhs2), jnp.asarray(rhs2), jnp.asarray(p.is_int),
+        jnp.asarray(p.lb), jnp.asarray(p.ub),
+    )
+    collB = collective_bytes(lowB.compile().as_text())
+    out.append({"variant": "row-partition (beyond-paper)", "mesh": mesh_kind,
+                "per_round_collective_bytes": collB})
+    print(json.dumps(out[-1]), flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, help="arch:shape")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default=None, help="run only this lever")
+    ap.add_argument("--prop", action="store_true")
+    ap.add_argument("--out", default="results/perf.json")
+    args = ap.parse_args()
+
+    records = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            records = json.load(f)
+    if args.prop:
+        records += run_propagation_variants(args.mesh)
+    if args.cell:
+        arch, shape = args.cell.split(":")
+        levers = {args.variant: LEVERS[args.variant]} if args.variant else None
+        records += run_lm_cell(arch, shape, args.mesh, levers)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(records, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+"""Sharding rules: parameter PartitionSpecs (FSDP over "data" x TP over
+"model"), activation constraints, and cache specs (DESIGN.md §4).
+
+Parameters are 2D-sharded: the contraction-side dimension over "data"
+(ZeRO-3-style -- XLA SPMD all-gathers on use) and the parallel dimension
+over "model" (megatron-style TP).  Optimizer state inherits parameter
+sharding, so the full optimizer is sharded over all 256/512 chips.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..models.transformer import init_params
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# Parameter names whose trailing dims follow (d_in -> "data", d_out -> "model")
+_IN_OUT = ("wq/w", "wk/w", "wv/w", "w_gate", "w_up", "in_proj", "w_in",
+           "w_gate_branch")
+# (d_in -> "model", d_out -> "data"): output projections
+_OUT_IN = ("wo/w", "w_down", "out_proj", "w_out")
+
+
+def spec_for_param(pathstr: str, ndim: int) -> P:
+    """PartitionSpec for one parameter leaf (trailing dims; stacked layer
+    dims are padded with None on the left)."""
+
+    def pad(*trailing):
+        lead = (None,) * (ndim - len(trailing))
+        return P(*(lead + trailing))
+
+    # Replicated small params: norms, gates, biases, scalars.
+    for frag in ("ln1", "ln2", "final_norm", "q_norm", "kv_norm", "gate_norm",
+                 "a_log", "dt_bias", "d_skip", "lam", "b_x", "b_a", "conv_b"):
+        if frag in pathstr:
+            return P(*((None,) * ndim))
+
+    if pathstr.endswith("embed/table"):
+        # NOTE: vocab-only sharding; 2D-sharding the table trips XLA SPMD
+        # "involuntary full rematerialization" on the gather (pod mesh).
+        return P("model", None)
+    if pathstr.endswith("lm_head/w"):
+        return P("data", "model")
+    if pathstr.endswith("/wo"):  # MLA out projection (bare array)
+        return pad("model", "data")
+    if "router" in pathstr:
+        return pad("data", None)
+    if "conv_w" in pathstr:
+        return pad(None, "model")
+    if pathstr.endswith("w_x") or pathstr.endswith("w_a"):
+        return pad("model", None)
+    if "wq_a" in pathstr or "wkv_a" in pathstr:
+        # Lora-rank outputs replicated over "model": each TP rank redundantly
+        # computes the tiny latent (0.3% of layer FLOPs) instead of
+        # all-gathering (B,S,rank) activations every layer (§Perf iter 2).
+        return pad("data", None)
+    if "wq_b" in pathstr or "wkv_b" in pathstr:
+        return pad("data", "model")
+
+    for frag in _OUT_IN:
+        if frag in pathstr:
+            if ndim >= 3 and ("moe" in pathstr and "shared" not in pathstr):
+                return pad("model", None, "data")   # (E, F, D) experts
+            return pad("model", "data")
+    for frag in _IN_OUT:
+        if frag in pathstr:
+            if ndim >= 3 and ("moe" in pathstr and "shared" not in pathstr):
+                return pad("model", "data", None)   # (E, D, F) experts
+            return pad("data", "model")
+    if pathstr.endswith("/b"):  # qkv biases: follow the output dim
+        return pad("model")
+    # Fallback: replicate.
+    return P(*((None,) * ndim))
+
+
+def _widen_data_axis(spec: P, mesh: Mesh) -> P:
+    """On the multi-pod mesh, FSDP-shard params over ("pod","data") jointly
+    (ZeRO across pods: halves state residency, pays DCI all-gathers)."""
+    if "pod" not in mesh.axis_names:
+        return spec
+    return P(*(("pod", "data") if ax == "data" else ax for ax in spec))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    """NamedSharding pytree matching init_params(cfg, key)."""
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+    def spec(path, leaf):
+        ps = spec_for_param(_path_str(path), len(leaf.shape))
+        return NamedSharding(mesh, _widen_data_axis(ps, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, shapes)
+
+
+def param_spec_tree(cfg: ModelConfig):
+    """PartitionSpec pytree (mesh-independent; for shard_map / tests)."""
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: spec_for_param(_path_str(p), len(l.shape)), shapes
+    )
+
+
+def opt_state_shardings(cfg: ModelConfig, mesh: Mesh, opt_cfg=None):
+    """OptState shardings: m/v/ef mirror the params; step is replicated."""
+    from ..train.optimizer import OptState, OptimizerConfig, init_opt_state
+
+    opt_cfg = opt_cfg or OptimizerConfig()
+    p_sh = param_shardings(cfg, mesh)
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    opt_sds = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), shapes)
+    rep = NamedSharding(mesh, P())
+    if opt_cfg.grad_compress:
+        ef_sh = p_sh
+    else:
+        ef_sh = jax.tree.map(lambda s: rep, opt_sds.ef)
+    return OptState(m=p_sh, v=p_sh, step=rep, ef=ef_sh)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+
+
+class Sharder:
+    """Activation sharding-constraint helper; no-ops without a mesh.
+
+    ``seq_shard=True`` = Megatron sequence parallelism: the residual stream
+    between blocks is sharded (B over data, S over "model"), turning the
+    per-layer TP all-reduces into reduce-scatter/all-gather pairs (half the
+    bytes) and dividing the per-layer saved activations by |model| (§Perf).
+    """
+
+    def __init__(self, mesh: Mesh | None = None, seq_shard: bool = False):
+        self.mesh = mesh
+        self.seq_shard = seq_shard
+        if mesh is None:
+            self.dp: tuple = ()
+            self.model_size = 1
+        else:
+            self.dp = tuple(a for a in mesh.axis_names if a != "model")
+            self.model_size = dict(
+                zip(mesh.axis_names, mesh.devices.shape)
+            ).get("model", 1)
+
+    def _ws(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def hidden(self, x):  # (B, S, D)
+        if self.seq_shard and x.shape[1] % self.model_size == 0 and x.shape[1] > 1:
+            return self._ws(x, P(self.dp, "model", None))
+        return self._ws(x, P(self.dp, None, None))
+
+    def kv(self, x):  # (B, Hkv, S, D): hoist the SP KV all-gather out of the
+        # attention chunk loop (one gather per layer, not per tile pair).
+        if self.seq_shard:
+            return self._ws(x, P(self.dp, None, None, None))
+        return x
+
+    def logits(self, x):  # (B, S, V): vocab TP-sharded
+        return self._ws(x, P(self.dp, None, "model"))
+
+    def batch_spec(self, ndim: int) -> P:
+        return P(*((self.dp,) + (None,) * (ndim - 1)))
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, specs: dict):
+    """NamedShardings for an input_specs() dict (batch over data axes)."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+
+    def shard_leaf(path, leaf):
+        ps = _path_str(path)
+        nd = len(leaf.shape)
+        if "cache" in ps:
+            return NamedSharding(mesh, cache_spec(cfg, ps, leaf.shape, dp))
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        if leaf.shape[0] == 1:  # batch==1 (long_500k): nothing to shard
+            return NamedSharding(mesh, P(*((None,) * nd)))
+        return NamedSharding(mesh, P(*((dp,) + (None,) * (nd - 1))))
+
+    return jax.tree_util.tree_map_with_path(shard_leaf, specs)
+
+
+def cache_spec(cfg: ModelConfig, pathstr: str, shape, dp) -> P:
+    """Decode-cache sharding.
+
+    GQA K/V (L,B,H,S,D): batch over data; when kv-heads >= |model| shard
+    heads over model, otherwise shard the *sequence* dim over model (long
+    caches; keeps per-chip KV bounded).  MLA latent (L,B,S,r): sequence over
+    model.  SSM/RG-LRU states: channels/heads over model.
+    """
+    nd = len(shape)
+    b = shape[1] if nd >= 2 else 1
+    bspec = dp if b > 1 else None
+    last = pathstr.rsplit("/", 1)[-1]
+    if last in ("k", "v") and nd == 5:
+        n_kv, seq = shape[2], shape[3]
+        if n_kv % 16 == 0:
+            return P(None, bspec, "model", None, None)
+        if seq % 16 == 0:  # few/odd KV heads: shard the sequence dim
+            return P(None, bspec, None, "model", None)
+        return P(None, bspec, None, None, None)
+    if last == "c" and nd == 4:   # MLA latent
+        return P(None, bspec, "model", None)
+    if last == "kr" and nd == 4:
+        return P(None, bspec, "model", None)
+    if last == "h" and nd == 5:   # mamba2 state (L,B,H,P,N)
+        return P(None, bspec, "model", None, None)
+    if last == "h" and nd == 3:   # rg-lru state (L,B,dr)
+        return P(None, bspec, "model")
+    if last == "conv" and nd == 4:
+        return P(None, bspec, None, "model")
+    return P(*((None,) * nd))

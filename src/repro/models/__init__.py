@@ -1,0 +1,11 @@
+"""Model layer: composable decoder stack + per-arch configuration."""
+from .config import SHAPES, InputShape, ModelConfig, cell_supported, input_specs
+from .transformer import (
+    init_params,
+    forward_train,
+    prefill,
+    decode_step,
+    init_cache,
+    param_count,
+    active_param_count,
+)

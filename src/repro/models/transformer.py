@@ -1,0 +1,515 @@
+"""Composable decoder stack covering all assigned architectures.
+
+Layers are grouped into homogeneous *segments* (ModelConfig.segments()) and
+executed with ``lax.scan`` over stacked per-layer parameters -- this keeps
+the HLO size (and hence 512-device SPMD compile time) independent of depth,
+and gives a natural per-layer remat boundary.
+
+Block kinds:
+  dense     -- GQA attention + SwiGLU            (granite/qwen2/chatglm3/
+                                                  musicgen/internvl2 LM)
+  moe       -- attention (GQA or MLA) + MoE      (qwen3-moe, deepseek-v2)
+  mamba2    -- Mamba-2 SSD block                 (mamba2-780m)
+  pattern   -- RecurrentGemma period: each sub-layer is (RG-LRU | local
+               attention) + SwiGLU, pattern e.g. ("rec","rec","attn")
+
+Every block has three modes: train (full seq, no cache), prefill (full seq,
+emit cache), decode (one token, consume+emit cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..nn import attention as attn_lib
+from ..nn import mla as mla_lib
+from ..nn import moe as moe_lib
+from ..nn import rglru as rglru_lib
+from ..nn import ssm as ssm_lib
+from ..nn.ffn import swiglu, swiglu_init
+from ..nn.layers import (
+    dense,
+    dense_init,
+    embed,
+    embedding_init,
+    normal_init,
+    rmsnorm,
+    rmsnorm_init,
+    sinusoidal_positions,
+    unembed,
+)
+from ..nn.rope import rope_cos_sin
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def act_dtype(cfg: ModelConfig):
+    if cfg.dtype == "bfloat16":
+        return jnp.bfloat16
+    if cfg.dtype == "float64":
+        return jnp.float64  # layout-equivalence tests / precision studies
+    return jnp.float32
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab padded to a multiple of 256 so embedding/lm_head shard evenly
+    over any production mesh axis (MaxText-style padding; pad logits are
+    ordinary learned params that never receive label mass)."""
+    v = cfg.vocab_size
+    return v if v % 256 == 0 else v + (256 - v % 256)
+
+
+def _mla_cfg(cfg: ModelConfig) -> mla_lib.MLAConfig:
+    return mla_lib.MLAConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        q_lora_rank=cfg.q_lora_rank,
+        kv_lora_rank=cfg.kv_lora_rank,
+        qk_nope_dim=cfg.qk_nope_dim,
+        qk_rope_dim=cfg.qk_rope_dim,
+        v_dim=cfg.v_head_dim,
+    )
+
+
+def _moe_cfg(cfg: ModelConfig) -> moe_lib.MoEConfig:
+    return moe_lib.MoEConfig(
+        n_experts=cfg.n_experts,
+        top_k=cfg.top_k,
+        d_model=cfg.d_model,
+        d_ff_expert=cfg.d_ff_expert,
+        n_shared=cfg.n_shared,
+        d_ff_shared=cfg.d_ff_shared,
+        capacity_factor=cfg.capacity_factor,
+    )
+
+
+def _mamba_cfg(cfg: ModelConfig) -> ssm_lib.Mamba2Config:
+    return ssm_lib.Mamba2Config(
+        d_model=cfg.d_model,
+        d_inner=cfg.d_inner,
+        n_heads=cfg.ssm_heads,
+        head_p=cfg.ssm_head_p,
+        n_groups=cfg.ssm_groups,
+        d_state=cfg.ssm_state,
+        chunk=cfg.ssm_chunk,
+    )
+
+
+def _rglru_cfg(cfg: ModelConfig) -> rglru_lib.RGLRUConfig:
+    return rglru_lib.RGLRUConfig(d_model=cfg.d_model, d_rnn=cfg.d_rnn)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention sub-block
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ModelConfig, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": dense_init(k1, d, h * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(k2, d, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(k3, d, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(k4, h * hd, d, bias=False, dtype=dtype),
+    }
+
+
+def _rot(cfg: ModelConfig):
+    rd = int(cfg.head_dim * cfg.partial_rotary)
+    return rd - rd % 2
+
+
+def gqa_apply(p, x, cfg: ModelConfig, mode, cos, sin, cache=None, pos=None,
+              window=None, q_offset=0, shd=None):
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(p["wq"], x).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = dense(p["wk"], x).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = dense(p["wv"], x).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    rd = _rot(cfg)
+    if cfg.pos_type == "rope" and rd > 0:
+        from ..nn.rope import apply_rope
+
+        q = apply_rope(q, cos, sin, rotary_dim=rd)
+        k = apply_rope(k, cos, sin, rotary_dim=rd)
+    if shd is not None and mode != "decode":
+        k = shd.kv(k)
+        v = shd.kv(v)
+
+    if mode == "decode":
+        kc, vc = attn_lib.cache_update(cache["k"], cache["v"], k, v, pos, window)
+        y = attn_lib.decode_attention(q, kc, vc, pos, window=window)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        y = attn_lib.blockwise_attention(
+            q, k, v, causal=True, window=window,
+            chunk_q=min(cfg.attn_chunk, s), chunk_k=min(cfg.attn_chunk, s),
+            q_offset=q_offset, unroll=cfg.unroll_inner,
+            causal_skip=cfg.causal_skip,
+        )
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return dense(p["wo"], y), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Block initializers
+# ---------------------------------------------------------------------------
+
+
+def block_init(kind: str, key, cfg: ModelConfig, dtype):
+    keys = jax.random.split(key, 8)
+    if kind == "dense":
+        p = {"ln1": rmsnorm_init(cfg.d_model, dtype), "ln2": rmsnorm_init(cfg.d_model, dtype)}
+        if cfg.attn_type == "mla":
+            p["attn"] = mla_lib.mla_init(keys[0], _mla_cfg(cfg), dtype)
+        else:
+            p["attn"] = gqa_init(keys[0], cfg, dtype)
+        p["mlp"] = swiglu_init(keys[1], cfg.d_model, cfg.d_ff, dtype)
+        return p
+    if kind == "moe":
+        p = {"ln1": rmsnorm_init(cfg.d_model, dtype), "ln2": rmsnorm_init(cfg.d_model, dtype)}
+        if cfg.attn_type == "mla":
+            p["attn"] = mla_lib.mla_init(keys[0], _mla_cfg(cfg), dtype)
+        else:
+            p["attn"] = gqa_init(keys[0], cfg, dtype)
+        p["moe"] = moe_lib.moe_init(keys[1], _moe_cfg(cfg), dtype)
+        return p
+    if kind == "mamba2":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "mix": ssm_lib.mamba2_init(keys[0], _mamba_cfg(cfg), dtype),
+        }
+    if kind.startswith("pattern"):
+        n_sub = (
+            len(cfg.layer_pattern)
+            if kind == "pattern"
+            else int(kind.replace("pattern_tail", ""))
+        )
+        p = {}
+        for i in range(n_sub):
+            sk = cfg.layer_pattern[i]
+            sub = {
+                "ln1": rmsnorm_init(cfg.d_model, dtype),
+                "ln2": rmsnorm_init(cfg.d_model, dtype),
+                "mlp": swiglu_init(keys[2 * i + 1], cfg.d_model, cfg.d_ff, dtype),
+            }
+            if sk == "rec":
+                sub["mix"] = rglru_lib.rglru_block_init(
+                    keys[2 * i], _rglru_cfg(cfg), dtype
+                )
+            else:
+                sub["mix"] = gqa_init(keys[2 * i], cfg, dtype)
+            p[f"sub{i}"] = sub
+        return p
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Block apply (one layer of a segment)
+# ---------------------------------------------------------------------------
+
+
+def block_apply(kind: str, p, x, cfg: ModelConfig, mode, cos, sin,
+                cache=None, pos=None, q_offset=0, shd=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if kind in ("dense", "moe"):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if cfg.attn_type == "mla":
+            if mode == "decode":
+                y, new_attn_cache = mla_lib.mla_decode(
+                    p["attn"], h, _mla_cfg(cfg), cos, sin,
+                    (cache["c"], cache["kr"]), pos,
+                )
+                new_cache = {"c": new_attn_cache[0], "kr": new_attn_cache[1]}
+            else:
+                y, c_out = mla_lib.mla_attention(
+                    p["attn"], h, _mla_cfg(cfg), cos, sin, chunk=cfg.attn_chunk,
+                    unroll=cfg.unroll_inner, causal_skip=cfg.causal_skip,
+                )
+                new_cache = (
+                    {"c": c_out[0], "kr": c_out[1]} if mode == "prefill" else None
+                )
+        else:
+            y, new_cache = gqa_apply(
+                p["attn"], h, cfg, mode, cos, sin, cache, pos,
+                window=cfg.local_window, q_offset=q_offset, shd=shd,
+            )
+        x = x + y
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if kind == "dense":
+            x = x + swiglu(p["mlp"], h2)
+        else:
+            ym, aux = moe_lib.moe_apply(p["moe"], h2, _moe_cfg(cfg))
+            x = x + ym
+        return x, new_cache, aux
+
+    if kind == "mamba2":
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if mode == "decode":
+            y, (conv, hs) = ssm_lib.mamba2_decode(
+                p["mix"], h, _mamba_cfg(cfg), (cache["conv"], cache["h"])
+            )
+            new_cache = {"conv": conv, "h": hs}
+        else:
+            y, (conv, hs) = ssm_lib.mamba2_forward(
+                p["mix"], h, _mamba_cfg(cfg), unroll=cfg.unroll_inner
+            )
+            new_cache = (
+                {"conv": conv.astype(x.dtype), "h": hs} if mode == "prefill" else None
+            )
+        return x + y, new_cache, aux
+
+    if kind.startswith("pattern"):
+        n_sub = (
+            len(cfg.layer_pattern)
+            if kind == "pattern"
+            else int(kind.replace("pattern_tail", ""))
+        )
+        new_cache = {}
+        for i in range(n_sub):
+            sk = cfg.layer_pattern[i]
+            sub = p[f"sub{i}"]
+            sub_cache = cache[f"sub{i}"] if cache is not None else None
+            h = rmsnorm(sub["ln1"], x, cfg.norm_eps)
+            if sk == "rec":
+                if mode == "decode":
+                    y, (hs, conv) = rglru_lib.rglru_block_decode(
+                        sub["mix"], h, _rglru_cfg(cfg),
+                        (sub_cache["h"], sub_cache["conv"]),
+                    )
+                    new_cache[f"sub{i}"] = {"h": hs, "conv": conv}
+                else:
+                    y, (hs, conv) = rglru_lib.rglru_block_forward(
+                        sub["mix"], h, _rglru_cfg(cfg)
+                    )
+                    if mode == "prefill":
+                        new_cache[f"sub{i}"] = {
+                            "h": hs,
+                            "conv": conv.astype(x.dtype),
+                        }
+            else:
+                y, c_out = gqa_apply(
+                    sub["mix"], h, cfg, mode, cos, sin, sub_cache, pos,
+                    window=cfg.local_window, q_offset=q_offset, shd=shd,
+                )
+                if c_out is not None:
+                    new_cache[f"sub{i}"] = c_out
+            x = x + y
+            h2 = rmsnorm(sub["ln2"], x, cfg.norm_eps)
+            x = x + swiglu(sub["mlp"], h2)
+        return x, (new_cache if mode != "train" else None), aux
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Whole model: init / forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    # Params are fp32 masters; forward casts to the compute dtype at use
+    # (standard JAX mixed precision -- optimizer state stays fp32).
+    dtype = jnp.float32
+    keys = jax.random.split(key, 4 + len(cfg.segments()))
+    vpad = padded_vocab(cfg)
+    params: Params = {
+        "embed": embedding_init(keys[0], vpad, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": normal_init(keys[1], (cfg.d_model, vpad), cfg.d_model**-0.5, dtype)
+        }
+    segs = []
+    for idx, (kind, count) in enumerate(cfg.segments()):
+        layer_keys = jax.random.split(keys[3 + idx], count)
+        seg = jax.vmap(lambda k: block_init(kind, k, cfg, dtype))(layer_keys)
+        segs.append(seg)
+    params["segments"] = segs
+    return params
+
+
+def _rope_tables(cfg: ModelConfig, positions):
+    rd = _rot(cfg)
+    if cfg.pos_type != "rope" or rd == 0:
+        rope_dim = cfg.qk_rope_dim if cfg.attn_type == "mla" else 2
+        return rope_cos_sin(positions, rope_dim, cfg.rope_theta)
+    dim = cfg.qk_rope_dim if cfg.attn_type == "mla" else rd
+    return rope_cos_sin(positions, dim, cfg.rope_theta)
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, frontend_embeds=None):
+    x = embed(params["embed"], tokens).astype(act_dtype(cfg))
+    if frontend_embeds is not None:
+        # Modality stub: precomputed patch/frame embeddings prepended.
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    if cfg.pos_type == "sinusoidal":
+        pos = jnp.arange(x.shape[1])
+        x = x + sinusoidal_positions(pos, cfg.d_model, x.dtype)
+    return x
+
+
+def _run_segments(params, cfg: ModelConfig, x, mode, cos, sin,
+                  cache=None, pos=None, shd=None):
+    """Scan each homogeneous segment. Returns (x, new_caches, aux_total)."""
+    aux_total = jnp.float32(0.0)
+    new_caches = []
+    constrain = shd.hidden if shd is not None else (lambda v: v)
+
+    for idx, (kind, count) in enumerate(cfg.segments()):
+        seg_params = params["segments"][idx]
+        seg_cache = cache[idx] if cache is not None else None
+
+        def one_layer(x, layer_params, layer_cache, kind=kind):
+            x = constrain(x)
+            return block_apply(
+                kind, layer_params, x, cfg, mode, cos, sin, layer_cache, pos,
+                shd=shd,
+            )
+
+        if mode == "train" and cfg.remat:
+            one_layer = jax.checkpoint(
+                one_layer, policy=jax.checkpoint_policies.nothing_saveable
+            )
+
+        if not cfg.scan_layers:
+            # Unrolled python loop (dry-run probe lowerings; exact HLO costs).
+            ncs = []
+            for li in range(count):
+                lp = jax.tree.map(lambda a: a[li], seg_params)
+                lc = (
+                    jax.tree.map(lambda a: a[li], seg_cache)
+                    if seg_cache is not None
+                    else None
+                )
+                x, nc, a = one_layer(x, lp, lc)
+                aux_total = aux_total + a
+                ncs.append(nc)
+            new_caches.append(
+                jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+                if mode != "train" and ncs[0] is not None
+                else None
+            )
+            continue
+
+        if mode == "train":
+            def body(carry, lp):
+                x, aux = carry
+                x, _, a = one_layer(x, lp, None)
+                return (x, aux + a), None
+
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), seg_params)
+            new_caches.append(None)
+        else:
+            def body(carry, xs):
+                x, aux = carry
+                lp, lc = xs
+                x, nc, a = one_layer(x, lp, lc)
+                return (x, aux + a), nc
+
+            if seg_cache is None:
+                # prefill: no incoming cache; scan emits it
+                def body_pf(carry, lp):
+                    x, aux = carry
+                    x, nc, a = one_layer(x, lp, None)
+                    return (x, aux + a), nc
+
+                (x, aux_total), nc = jax.lax.scan(body_pf, (x, aux_total), seg_params)
+            else:
+                (x, aux_total), nc = jax.lax.scan(
+                    body, (x, aux_total), (seg_params, seg_cache)
+                )
+            new_caches.append(nc)
+    return x, new_caches, aux_total
+
+
+def forward_train(params, cfg: ModelConfig, tokens, frontend_embeds=None, shd=None):
+    """Full training forward -> logits (B, S, V)."""
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    if shd is not None:
+        x = shd.hidden(x)
+    positions = jnp.arange(x.shape[1])
+    cos, sin = _rope_tables(cfg, positions)
+    x, _, aux = _run_segments(params, cfg, x, "train", cos, sin, shd=shd)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (
+        unembed(params["embed"], x)
+        if cfg.tie_embeddings
+        else dense(params["lm_head"], x)
+    )
+    if shd is not None:
+        logits = shd.logits(logits)
+    return logits, aux
+
+
+def prefill(params, cfg: ModelConfig, tokens, frontend_embeds=None, shd=None):
+    """Prefill -> (logits_last (B, 1, V), caches)."""
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    if shd is not None:
+        x = shd.hidden(x)
+    positions = jnp.arange(x.shape[1])
+    cos, sin = _rope_tables(cfg, positions)
+    x, caches, _ = _run_segments(params, cfg, x, "prefill", cos, sin, shd=shd)
+    x = rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+    logits = (
+        unembed(params["embed"], x)
+        if cfg.tie_embeddings
+        else dense(params["lm_head"], x)
+    )
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos, shd=None):
+    """One decode step. tokens: (B, 1); pos: scalar index being written."""
+    x = embed(params["embed"], tokens).astype(act_dtype(cfg))
+    if cfg.pos_type == "sinusoidal":
+        x = x + sinusoidal_positions(
+            jnp.full((1,), pos, dtype=jnp.int32), cfg.d_model, x.dtype
+        )
+    cos, sin = _rope_tables(cfg, jnp.arange(1) + pos)
+    x, new_caches, _ = _run_segments(
+        params, cfg, x, "decode", cos, sin, cache=cache, pos=pos, shd=shd
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (
+        unembed(params["embed"], x)
+        if cfg.tie_embeddings
+        else dense(params["lm_head"], x)
+    )
+    return logits, new_caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=None):
+    """Zero-initialized decode cache (mirrors config._cache_specs)."""
+    from .config import _cache_specs
+
+    specs = _cache_specs(cfg, batch, s_max)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k + shared experts only)."""
+    total = param_count(cfg)
+    if cfg.n_experts == 0:
+        return total
+    e, k = cfg.n_experts, cfg.top_k
+    moe_layers = cfg.num_layers - cfg.first_k_dense
+    per_expert = 3 * cfg.d_model * cfg.d_ff_expert
+    total_expert = moe_layers * e * per_expert
+    active_expert = moe_layers * k * per_expert
+    return total - total_expert + active_expert

@@ -1,0 +1,2 @@
+"""Neural-net substrate shared by the assigned architectures."""
+from . import attention, ffn, layers, mla, moe, rglru, rope, ssm

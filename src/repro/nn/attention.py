@@ -1,0 +1,295 @@
+"""Attention: GQA/MQA/MHA with memory-efficient blockwise softmax.
+
+Design notes (DESIGN.md §4):
+  * train/prefill use *blockwise* attention -- an online-softmax scan over
+    (q-chunk, k-chunk) tiles so the S x S score matrix never materializes
+    (mandatory for prefill_32k; also keeps train_4k activation memory flat).
+    The causal mask is applied additively per tile; off-diagonal masked tiles
+    are still computed (XLA SPMD-friendly static schedule).  Skipping them is
+    a recorded §Perf hillclimb lever.
+  * GQA never materializes repeated KV heads: q is grouped to
+    (B, H_kv, G, S, D) and contracted against (B, H_kv, S, D).
+  * decode attends a (possibly rolling) cache with position masking.
+
+All softmax accumulation in fp32 regardless of activation dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _group_q(q, n_kv: int):
+    b, hq, s, d = q.shape
+    g = hq // n_kv
+    return q.reshape(b, n_kv, g, s, d)
+
+
+def blockwise_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    chunk_q: int = 512,
+    chunk_k: int = 512,
+    q_offset=0,
+    unroll: bool = False,
+    causal_skip: bool = False,
+):
+    """See module docstring.  ``causal_skip=True`` switches to the
+    triangular pair schedule (flash-style): fully-masked (i, j) tiles are
+    never computed, halving attention FLOPs/traffic for causal masks and
+    cutting banded (window) masks to the live diagonal band -- §Perf lever.
+    """
+    if causal_skip and q.shape[2] > 1:
+        return _blockwise_attention_pairs(
+            q, k, v, causal=causal, window=window, chunk_q=chunk_q,
+            chunk_k=chunk_k, q_offset=q_offset, unroll=unroll,
+        )
+    return _blockwise_attention_full(
+        q, k, v, causal=causal, window=window, chunk_q=chunk_q,
+        chunk_k=chunk_k, q_offset=q_offset, unroll=unroll,
+    )
+
+
+def _blockwise_attention_full(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    chunk_q: int = 512,
+    chunk_k: int = 512,
+    q_offset=0,
+    unroll: bool = False,
+):
+    """Memory-efficient attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); Hq % Hkv == 0.
+    ``q_offset``: absolute position of q[..., 0, :] (chunked prefill).
+    Returns (B, Hq, Sq, D).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    dv = v.shape[-1]  # value dim may differ from qk dim (MLA)
+    g = hq // hkv
+    scale = d ** -0.5
+
+    def _pick(s, c):
+        c = min(c, s)
+        while s % c:  # largest divisor <= requested chunk
+            c -= 1
+        return c
+
+    cq = _pick(sq, chunk_q)
+    ck = _pick(sk, chunk_k)
+    nq = sq // cq
+    nk = sk // ck
+
+    qg = _group_q(q, hkv).reshape(b, hkv, g, nq, cq, d)
+    qg = jnp.moveaxis(qg, 3, 0)  # (nq, b, hkv, g, cq, d)
+    ks = jnp.moveaxis(k.reshape(b, hkv, nk, ck, d), 2, 0)  # (nk, b, hkv, ck, d)
+    vs = jnp.moveaxis(v.reshape(b, hkv, nk, ck, dv), 2, 0)
+
+    kpos = jnp.arange(nk * ck).reshape(nk, ck)
+
+    def q_chunk_body(iq, q_chunk):
+        qpos = q_offset + iq * cq + jnp.arange(cq)
+
+        def kv_body(carry, xs):
+            m, l, acc = carry
+            k_c, v_c, kp = xs
+            s = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", q_chunk, k_c, preferred_element_type=jnp.float32
+            ) * scale
+            mask = jnp.ones((cq, ck), dtype=bool)
+            if causal:
+                mask &= qpos[:, None] >= kp[None, :]
+            if window is not None:
+                mask &= (qpos[:, None] - kp[None, :]) < window
+            s = jnp.where(mask, s, NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(v_c.dtype), v_c,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, cq), NEG, dtype=jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), dtype=jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, dv), dtype=jnp.float32)
+        if unroll:  # dry-run probe mode: explicit HLO for every tile
+            carry = (m0, l0, a0)
+            for j in range(nk):
+                carry, _ = kv_body(carry, (ks[j], vs[j], kpos[j]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (ks, vs, kpos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)
+
+    if unroll:
+        outs = jnp.stack([q_chunk_body(i, qg[i]) for i in range(nq)])
+    else:
+        # Remat per q-chunk: backward recomputes a chunk's online-softmax scan
+        # instead of saving per-kv-step (m, l, acc) stacks (flash-bwd style).
+        body = jax.checkpoint(
+            q_chunk_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        outs = jax.lax.map(
+            lambda args: body(*args), (jnp.arange(nq), qg)
+        )  # (nq, b, hkv, g, cq, dv)
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, sq, dv)
+    return out.reshape(b, hq, sq, dv)
+
+
+def _blockwise_attention_pairs(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    chunk_q: int = 512,
+    chunk_k: int = 512,
+    q_offset=0,
+    unroll: bool = False,
+):
+    """Triangular (i, j) tile schedule: only tiles with at least one live
+    (q, k) position are computed.  State for every q chunk is carried and
+    updated at index i (online softmax), so FLOPs = live tiles only."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    scale = d ** -0.5
+
+    def _pick(s, c):
+        c = min(c, s)
+        while s % c:
+            c -= 1
+        return c
+
+    cq = _pick(sq, chunk_q)
+    ck = _pick(sk, chunk_k)
+    nq = sq // cq
+    nk = sk // ck
+
+    # Static live-tile list.
+    pairs = []
+    for i in range(nq):
+        q_lo = q_offset + i * cq
+        q_hi = q_offset + (i + 1) * cq - 1
+        for j in range(nk):
+            k_lo = j * ck
+            k_hi = (j + 1) * ck - 1
+            if causal and k_lo > q_hi:
+                continue  # fully in the future
+            if window is not None and (q_lo - k_hi) >= window:
+                continue  # fully out of the band
+            pairs.append((i, j))
+    pair_i = jnp.array([p[0] for p in pairs], jnp.int32)
+    pair_j = jnp.array([p[1] for p in pairs], jnp.int32)
+
+    qg = _group_q(q, hkv).reshape(b, hkv, g, nq, cq, d)
+    qg = jnp.moveaxis(qg, 3, 0)                       # (nq, b, hkv, g, cq, d)
+    ks = jnp.moveaxis(k.reshape(b, hkv, nk, ck, d), 2, 0)
+    vs = jnp.moveaxis(v.reshape(b, hkv, nk, ck, dv), 2, 0)
+
+    m0 = jnp.full((nq, b, hkv, g, cq), NEG, dtype=jnp.float32)
+    l0 = jnp.zeros((nq, b, hkv, g, cq), dtype=jnp.float32)
+    a0 = jnp.zeros((nq, b, hkv, g, cq, dv), dtype=jnp.float32)
+
+    def pair_body(carry, ij):
+        m, l, acc = carry
+        i, j = ij
+        q_c = jax.lax.dynamic_index_in_dim(qg, i, 0, keepdims=False)
+        k_c = jax.lax.dynamic_index_in_dim(ks, j, 0, keepdims=False)
+        v_c = jax.lax.dynamic_index_in_dim(vs, j, 0, keepdims=False)
+        qpos = q_offset + i * cq + jnp.arange(cq)
+        kpos = j * ck + jnp.arange(ck)
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", q_c, k_c, preferred_element_type=jnp.float32
+        ) * scale
+        mask = jnp.ones((cq, ck), dtype=bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask, s, NEG)
+        m_i = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        l_i = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        a_i = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + p.sum(axis=-1)
+        pv = jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(v_c.dtype), v_c,
+            preferred_element_type=jnp.float32,
+        )
+        a_new = a_i * corr[..., None] + pv
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 0)
+        return (m, l, acc), None
+
+    if unroll:
+        carry = (m0, l0, a0)
+        for idx in range(len(pairs)):
+            carry, _ = pair_body(carry, (pair_i[idx], pair_j[idx]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(pair_body, (m0, l0, a0), (pair_i, pair_j))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]           # (nq, b, hkv, g, cq, dv)
+    out = jnp.moveaxis(out.astype(q.dtype), 0, 3).reshape(b, hkv, g, sq, dv)
+    return out.reshape(b, hq, sq, dv)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None):
+    """Single-token attention over a (max_len) cache.
+
+    q: (B, Hq, 1, D); caches: (B, Hkv, S_max, D); pos: scalar int32 --
+    index of the *current* token (cache already updated at ``pos``).
+    For rolling caches (window), ``k_cache`` holds the last ``window``
+    positions at slots ``p % window``.
+    """
+    b, hq, _, d = q.shape
+    _, hkv, smax, _ = k_cache.shape
+    dv = v_cache.shape[-1]
+    scale = d ** -0.5
+    qg = _group_q(q, hkv)  # (B, Hkv, G, 1, D)
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    slots = jnp.arange(smax)
+    if window is None:
+        valid = slots <= pos  # (smax,)
+    else:
+        # slot s holds absolute position p = pos - ((pos - s) mod window)
+        p_abs = pos - jnp.mod(pos - slots, window)
+        valid = (p_abs >= 0) & (p_abs <= pos)
+    s = s + jnp.where(valid, 0.0, NEG)  # broadcast over trailing smax dim
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, hq, 1, dv).astype(q.dtype)
+
+
+def cache_update(k_cache, v_cache, k_new, v_new, pos, window: int | None = None):
+    """Insert one step's K/V at position ``pos`` (mod window for rolling)."""
+    slot = pos if window is None else jnp.mod(pos, window)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, slot, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, slot, axis=2)
+    return k_cache, v_cache

@@ -1,0 +1,36 @@
+"""Feed-forward blocks: SwiGLU (LLaMA-style) and plain GELU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, normal_init
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": normal_init(k1, (d_model, d_ff), scale=d_model**-0.5, dtype=dtype),
+        "w_up": normal_init(k2, (d_model, d_ff), scale=d_model**-0.5, dtype=dtype),
+        "w_down": normal_init(k3, (d_ff, d_model), scale=d_ff**-0.5, dtype=dtype),
+    }
+
+
+def swiglu(params, x):
+    g = x @ params["w_gate"].astype(x.dtype)
+    u = x @ params["w_up"].astype(x.dtype)
+    return (jax.nn.silu(g) * u) @ params["w_down"].astype(x.dtype)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": normal_init(k1, (d_model, d_ff), scale=d_model**-0.5, dtype=dtype),
+        "w_out": normal_init(k2, (d_ff, d_model), scale=d_ff**-0.5, dtype=dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    return jax.nn.gelu(x @ params["w_in"].astype(x.dtype)) @ params["w_out"].astype(
+        x.dtype
+    )

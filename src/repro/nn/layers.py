@@ -1,0 +1,88 @@
+"""Basic layers: norms, dense projections, embeddings (pure-function style).
+
+Parameters are plain nested dicts of jnp arrays; every layer is
+``init(key, ...) -> params`` + ``apply(params, x, ...) -> y``.  Compute dtype
+is the activation dtype; norms accumulate in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    h = x.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + eps)
+    return (h * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    h = x.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    h = h * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return h.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False, dtype=jnp.float32):
+    p = {"w": normal_init(key, (d_in, d_out), scale=d_in**-0.5, dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": normal_init(key, (vocab, d), scale=1.0, dtype=dtype)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, x):
+    """Tied read-out: logits = x @ table^T."""
+    return x @ params["table"].astype(x.dtype).T
+
+
+def sinusoidal_positions(positions, d: int, dtype=jnp.float32):
+    """Classic sin/cos absolute embedding (MusicGen-style backbone stub)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

@@ -1,0 +1,147 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Train/prefill expand the KV latent to per-head keys/values and run the
+blockwise attention; decode uses the *absorbed* formulation so the cache is
+only the latent ``c_kv`` (kv_lora_rank) plus the shared rotary key
+(qk_rope_dim) per position -- the MLA memory win:
+
+  score = q_nope^T k_nope + q_rope^T k_rope
+        = (q_nope W_uk^T)^T c   + q_rope^T k_rope            (absorb W_uk)
+  out_h = (sum_t p_t c_t) W_uv[h]                            (absorb W_uv)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import blockwise_attention
+from .layers import normal_init, rmsnorm, rmsnorm_init
+from .rope import apply_rope
+
+
+class MLAConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    q_lora_rank: int       # 0 => full-rank q projection
+    kv_lora_rank: int
+    qk_nope_dim: int
+    qk_rope_dim: int
+    v_dim: int
+
+
+def mla_init(key, cfg: MLAConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 6)
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    p = {}
+    if cfg.q_lora_rank > 0:
+        p["wq_a"] = normal_init(keys[0], (d, cfg.q_lora_rank), d**-0.5, dtype)
+        p["q_norm"] = rmsnorm_init(cfg.q_lora_rank, dtype)
+        p["wq_b"] = normal_init(
+            keys[1], (cfg.q_lora_rank, h * qk), cfg.q_lora_rank**-0.5, dtype
+        )
+    else:
+        p["wq"] = normal_init(keys[0], (d, h * qk), d**-0.5, dtype)
+    p["wkv_a"] = normal_init(
+        keys[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), d**-0.5, dtype
+    )
+    p["kv_norm"] = rmsnorm_init(cfg.kv_lora_rank, dtype)
+    p["wkv_b"] = normal_init(
+        keys[3],
+        (cfg.kv_lora_rank, h * (cfg.qk_nope_dim + cfg.v_dim)),
+        cfg.kv_lora_rank**-0.5,
+        dtype,
+    )
+    p["wo"] = normal_init(keys[4], (h * cfg.v_dim, d), (h * cfg.v_dim) ** -0.5, dtype)
+    return p
+
+
+def _queries(params, x, cfg: MLAConfig, cos, sin):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora_rank > 0:
+        qa = x @ params["wq_a"].astype(x.dtype)
+        qa = rmsnorm(params["q_norm"], qa)
+        q = qa @ params["wq_b"].astype(x.dtype)
+    else:
+        q = x @ params["wq"].astype(x.dtype)
+    q = q.reshape(b, s, h, qk).transpose(0, 2, 1, 3)  # (B, H, S, qk)
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_dim :], cos, sin)
+    return q_nope, q_rope
+
+
+def _latent(params, x, cfg: MLAConfig, cos, sin):
+    """Compressed KV: (c_latent (B,S,r), k_rope (B,1,S,rope)) -- rope applied."""
+    kv = x @ params["wkv_a"].astype(x.dtype)
+    c = rmsnorm(params["kv_norm"], kv[..., : cfg.kv_lora_rank])
+    k_rope = kv[..., cfg.kv_lora_rank :][:, None]  # (B, 1, S, rope), shared head
+    k_rope = apply_rope(k_rope, cos, sin)
+    return c, k_rope
+
+
+def mla_attention(params, x, cfg: MLAConfig, cos, sin, chunk: int = 512,
+                  unroll: bool = False, causal_skip: bool = False):
+    """Full-sequence MLA (train / prefill). Returns (y, cache=(c, k_rope))."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _queries(params, x, cfg, cos, sin)
+    c, k_rope = _latent(params, x, cfg, cos, sin)
+
+    kvb = (c @ params["wkv_b"].astype(x.dtype)).reshape(
+        b, s, h, cfg.qk_nope_dim + cfg.v_dim
+    )
+    k_nope = kvb[..., : cfg.qk_nope_dim].transpose(0, 2, 1, 3)   # (B,H,S,nope)
+    v = kvb[..., cfg.qk_nope_dim :].transpose(0, 2, 1, 3)        # (B,H,S,v)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, h, s, cfg.qk_rope_dim))], axis=-1
+    )
+    y = blockwise_attention(
+        q, k, v, causal=True, chunk_q=chunk, chunk_k=chunk, unroll=unroll,
+        causal_skip=causal_skip,
+    )
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, h * cfg.v_dim)
+    return y @ params["wo"].astype(x.dtype), (c, k_rope[:, 0])
+
+
+def mla_decode(params, x, cfg: MLAConfig, cos, sin, cache, pos):
+    """Absorbed single-token decode.
+
+    cache: (c_cache (B, S_max, r), kr_cache (B, S_max, rope)) with entries
+    valid for positions <= pos-1; this step writes position ``pos``.
+    """
+    b, one, d = x.shape
+    assert one == 1
+    h = cfg.n_heads
+    r = cfg.kv_lora_rank
+    neg = -1e30
+
+    q_nope, q_rope = _queries(params, x, cfg, cos, sin)  # (B,H,1,*)
+    c_new, kr_new = _latent(params, x, cfg, cos, sin)    # (B,1,r), (B,1,1,rope)
+
+    c_cache, kr_cache = cache
+    c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, c_new, pos, axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(kr_cache, kr_new[:, 0], pos, axis=1)
+
+    wkv_b = params["wkv_b"].astype(x.dtype).reshape(r, h, cfg.qk_nope_dim + cfg.v_dim)
+    w_uk = wkv_b[..., : cfg.qk_nope_dim]   # (r, H, nope)
+    w_uv = wkv_b[..., cfg.qk_nope_dim :]   # (r, H, v)
+
+    # Absorb W_uk into the query: q_abs (B, H, r).
+    q_abs = jnp.einsum("bhon,rhn->bhor", q_nope, w_uk)[:, :, 0]
+    s_nope = jnp.einsum("bhr,bsr->bhs", q_abs, c_cache)
+    s_rope = jnp.einsum("bhoe,bse->bhs", q_rope, kr_cache)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    s = (s_nope + s_rope).astype(jnp.float32) * scale
+    valid = jnp.arange(c_cache.shape[1]) <= pos
+    s = s + jnp.where(valid, 0.0, neg)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+
+    ctx = jnp.einsum("bhs,bsr->bhr", p, c_cache)           # latent context
+    y = jnp.einsum("bhr,rhv->bhv", ctx, w_uv).reshape(b, 1, h * cfg.v_dim)
+    return y @ params["wo"].astype(x.dtype), (c_cache, kr_cache)

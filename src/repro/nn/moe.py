@@ -1,0 +1,115 @@
+"""Mixture-of-Experts: top-k softmax router + capacity-based dispatch with
+SwiGLU experts and optional shared experts (DeepSeekMoE / Qwen3-MoE style).
+
+Dispatch is scatter-based (no dense one-hot matmuls), so compiled FLOPs match
+the *active* expert FLOPs -- important for honest roofline numbers.  Expert
+weights carry a leading E dim that is expert-parallel (sharded over "model").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import normal_init
+
+
+class MoEConfig(NamedTuple):
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff_expert: int
+    n_shared: int = 0
+    d_ff_shared: int = 0          # total shared-expert hidden width
+    capacity_factor: float = 1.25
+    router_scale: bool = False    # normalize top-k weights to sum 1
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    p = {
+        "router": normal_init(k1, (d, e), scale=d**-0.5, dtype=jnp.float32),
+        "w_gate": normal_init(k2, (e, d, f), scale=d**-0.5, dtype=dtype),
+        "w_up": normal_init(k3, (e, d, f), scale=d**-0.5, dtype=dtype),
+        "w_down": normal_init(k4, (e, f, d), scale=f**-0.5, dtype=dtype),
+    }
+    if cfg.n_shared > 0:
+        fs = cfg.d_ff_shared or cfg.d_ff_expert * cfg.n_shared
+        ks = jax.random.split(k5, 3)
+        p["shared"] = {
+            "w_gate": normal_init(ks[0], (d, fs), scale=d**-0.5, dtype=dtype),
+            "w_up": normal_init(ks[1], (d, fs), scale=d**-0.5, dtype=dtype),
+            "w_down": normal_init(ks[2], (fs, d), scale=fs**-0.5, dtype=dtype),
+        }
+    return p
+
+
+def moe_apply(params, x, cfg: MoEConfig):
+    """x: (B, S, D) -> (B, S, D). Returns (y, aux) with load-balance loss."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    # Router in fp32 for numerics.
+    logits = xt.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    weights, experts = jax.lax.top_k(probs, cfg.top_k)           # (T, K)
+    if cfg.router_scale:
+        weights = weights / jnp.maximum(
+            weights.sum(axis=-1, keepdims=True), 1e-9
+        )
+
+    e = cfg.n_experts
+    if t <= 4096:
+        # Dropless small-T path (decode / small prefill): worst case every
+        # token routes one of its k choices to the same expert -> cap = t.
+        cap = t
+    else:
+        cap = max(1, int(t * cfg.top_k * cfg.capacity_factor / e))
+
+    # Position of each (token, k) routing within its expert's capacity.
+    flat_e = experts.reshape(-1)                                  # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)           # (T*K, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - 1                     # running index
+    my_pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = my_pos < cap                                           # capacity drop
+    slot = jnp.where(keep, flat_e * cap + my_pos, e * cap)        # overflow bin
+
+    # Scatter tokens to (E*cap+1, D) expert buffers.
+    src = jnp.repeat(xt, cfg.top_k, axis=0)                       # (T*K, D)
+    buf = jnp.zeros((e * cap + 1, d), dtype=x.dtype).at[slot].add(src)
+    xe = buf[: e * cap].reshape(e, cap, d)
+
+    # Expert SwiGLU (grouped einsum over the expert dim).
+    g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(x.dtype))
+    ye = jnp.einsum(
+        "ecf,efd->ecd", jax.nn.silu(g) * u, params["w_down"].astype(x.dtype)
+    )
+
+    # Gather back + weighted combine.
+    yflat = ye.reshape(e * cap, d)
+    y_tok = jnp.where(
+        keep[:, None], yflat[jnp.clip(slot, 0, e * cap - 1)], 0.0
+    )                                                             # (T*K, D)
+    y = (
+        (y_tok.reshape(t, cfg.top_k, d) * weights[..., None].astype(x.dtype))
+        .sum(axis=1)
+        .reshape(b, s, d)
+    )
+
+    if "shared" in params:
+        sh = params["shared"]
+        gg = x @ sh["w_gate"].astype(x.dtype)
+        uu = x @ sh["w_up"].astype(x.dtype)
+        y = y + (jax.nn.silu(gg) * uu) @ sh["w_down"].astype(x.dtype)
+
+    # Switch-style load-balance aux loss.
+    me = probs.mean(axis=0)                                       # (E,)
+    ce = (onehot.reshape(t, cfg.top_k, e).sum(axis=1) > 0).astype(
+        jnp.float32
+    ).mean(axis=0)
+    aux = e * jnp.sum(me * ce)
+    return y, aux

@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+  i_t = sigmoid(W_x x_t + b_x)                 (input gate)
+  r_t = sigmoid(W_a x_t + b_a)                 (recurrence gate)
+  log a_t = -c * softplus(Lambda) * r_t        (c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t x_t)
+
+Prefill/train uses ``jax.lax.associative_scan`` over (a, b) pairs (O(log S)
+depth); decode is the single recurrence step.  The surrounding block is the
+Griffin recurrent block: linear -> temporal conv (k=4) -> RG-LRU, gated by a
+GeLU branch, then an output projection.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import normal_init
+
+
+class RGLRUConfig(NamedTuple):
+    d_model: int
+    d_rnn: int
+    d_conv: int = 4
+    c: float = 8.0
+
+
+def rglru_block_init(key, cfg: RGLRUConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 6)
+    d, dr = cfg.d_model, cfg.d_rnn
+    return {
+        "w_in": normal_init(keys[0], (d, dr), d**-0.5, dtype),
+        "w_gate_branch": normal_init(keys[1], (d, dr), d**-0.5, dtype),
+        "conv_w": normal_init(keys[2], (cfg.d_conv, dr), 0.5, dtype),
+        "conv_b": jnp.zeros((dr,), dtype=dtype),
+        "w_x": normal_init(keys[3], (dr, dr), dr**-0.5, dtype),
+        "b_x": jnp.zeros((dr,), dtype=jnp.float32),
+        "w_a": normal_init(keys[4], (dr, dr), dr**-0.5, dtype),
+        "b_a": jnp.zeros((dr,), dtype=jnp.float32),
+        "lam": jnp.full((dr,), 0.65, dtype=jnp.float32),  # softplus^-1-ish init
+        "w_out": normal_init(keys[5], (dr, d), dr**-0.5, dtype),
+    }
+
+
+def _gates(params, u, cfg: RGLRUConfig):
+    """Per-step recurrence coefficients (a_t, b_t) in fp32. u: (..., d_rnn)."""
+    uf = u.astype(jnp.float32)
+    i_t = jax.nn.sigmoid(uf @ params["w_x"].astype(jnp.float32) + params["b_x"])
+    r_t = jax.nn.sigmoid(uf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    log_a = -cfg.c * jax.nn.softplus(params["lam"]) * r_t
+    a_t = jnp.exp(log_a)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - a_t * a_t, 1e-12)) * (i_t * uf)
+    return a_t, b_t
+
+
+def _conv(params, u, conv_state=None):
+    k = params["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(u.shape[:1] + (k - 1,) + u.shape[2:], u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(
+        up[:, i : i + u.shape[1], :] * params["conv_w"][i].astype(u.dtype)
+        for i in range(k)
+    )
+    return out + params["conv_b"].astype(u.dtype), up[:, -(k - 1) :, :]
+
+
+def rglru_block_forward(params, x, cfg: RGLRUConfig, state=None):
+    """Full-sequence forward. state=(h0 (B, d_rnn) fp32, conv_state)."""
+    h0, conv_state = state if state is not None else (None, None)
+    u = x @ params["w_in"].astype(x.dtype)
+    u, conv_state_new = _conv(params, u, conv_state)
+    a_t, b_t = _gates(params, u, cfg)  # (B, S, dr) fp32
+
+    if h0 is not None:
+        # Fold the incoming state into the first step: b_0 += a_0 * h0.
+        b_t = b_t.at[:, 0, :].add(a_t[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a_t, b_t), axis=1)
+    h_last = h[:, -1, :]
+
+    gate = jax.nn.gelu(x @ params["w_gate_branch"].astype(x.dtype))
+    y = (h.astype(x.dtype) * gate) @ params["w_out"].astype(x.dtype)
+    return y, (h_last, conv_state_new)
+
+
+def rglru_block_decode(params, x, cfg: RGLRUConfig, state):
+    """Single-token step. state = (h (B, dr) fp32, conv_state (B, K-1, dr))."""
+    h, conv_state = state
+    u = x @ params["w_in"].astype(x.dtype)
+    u, conv_state = _conv(params, u, conv_state)
+    a_t, b_t = _gates(params, u, cfg)           # (B, 1, dr)
+    h = a_t[:, 0] * h + b_t[:, 0]
+    gate = jax.nn.gelu(x @ params["w_gate_branch"].astype(x.dtype))
+    y = (h[:, None, :].astype(x.dtype) * gate) @ params["w_out"].astype(x.dtype)
+    return y, (h, conv_state)

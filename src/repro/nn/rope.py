@@ -1,0 +1,42 @@
+"""Rotary position embeddings, including partial-rotary (ChatGLM3's 2d-RoPE
+applies rotation to half the head dimension; the other half is untouched).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    """Inverse frequencies for the rotated part (head_dim must be even)."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float = 10000.0):
+    """cos/sin tables at given positions. positions: (...,) int -> (..., hd/2)."""
+    inv = rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, rotary_dim: int | None = None):
+    """Rotate the first ``rotary_dim`` dims of the head dimension.
+
+    x: (..., S, head_dim); cos/sin: (S, rotary_dim/2) broadcastable.
+    Pairs are (x[2i], x[2i+1]) -- interleaved convention.
+    """
+    hd = x.shape[-1]
+    rd = rotary_dim if rotary_dim is not None else hd
+    xr = x[..., :rd]
+    x_pass = x[..., rd:]
+    x1 = xr[..., 0::2]
+    x2 = xr[..., 1::2]
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    if rd == hd:
+        return yr
+    return jnp.concatenate([yr, x_pass], axis=-1)

@@ -1,0 +1,204 @@
+"""Mamba-2 (SSD -- state-space duality, arXiv:2405.21060).
+
+Chunked SSD for train/prefill (quadratic within chunks, linear recurrence
+across chunks) and a constant-memory recurrent step for decode.  Follows the
+minimal-SSD reference formulation:
+
+  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t        (per head, state (P, N))
+  y_t = C_t . h_t + D x_t
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import normal_init, rmsnorm, rmsnorm_init
+
+
+class Mamba2Config(NamedTuple):
+    d_model: int
+    d_inner: int       # = expand * d_model
+    n_heads: int       # d_inner = n_heads * head_p
+    head_p: int
+    n_groups: int      # B/C groups (G)
+    d_state: int       # N
+    d_conv: int = 4
+    chunk: int = 128
+
+
+def mamba2_init(key, cfg: Mamba2Config, dtype=jnp.float32):
+    keys = jax.random.split(key, 8)
+    d, di = cfg.d_model, cfg.d_inner
+    gn = cfg.n_groups * cfg.d_state
+    conv_ch = di + 2 * gn
+    return {
+        "in_proj": normal_init(
+            keys[0], (d, 2 * di + 2 * gn + cfg.n_heads), d**-0.5, dtype
+        ),
+        "conv_w": normal_init(keys[1], (cfg.d_conv, conv_ch), 0.5, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype=dtype),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, cfg.n_heads, dtype=jnp.float32)
+        ),
+        "dt_bias": jnp.zeros((cfg.n_heads,), dtype=jnp.float32),
+        "d_skip": jnp.ones((cfg.n_heads,), dtype=jnp.float32),
+        "gate_norm": rmsnorm_init(di, dtype),
+        "out_proj": normal_init(keys[2], (di, d), di**-0.5, dtype),
+    }
+
+
+def _split_in(proj, cfg: Mamba2Config):
+    di, gn, h = cfg.d_inner, cfg.n_groups * cfg.d_state, cfg.n_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * gn]
+    dt = proj[..., di + di + 2 * gn :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv, kernel K. xbc: (B, S, C).
+
+    If ``conv_state`` (B, K-1, C) is given (decode), it is prepended and the
+    new state returned."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (k - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (B, S+K-1, C)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * conv_w[i].astype(xbc.dtype)
+        for i in range(k)
+    )
+    out = out + conv_b.astype(xbc.dtype)
+    new_state = xp[:, -(k - 1) :, :]
+    return jax.nn.silu(out), new_state
+
+
+def _segsum(x):
+    """Cumulative segment-sum matrix: out[..., i, j] = sum_{j<k<=i} x[..., k]."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(xh, dt, a, bmat, cmat, cfg: Mamba2Config, h0=None, unroll: bool = False):
+    """Chunked SSD.
+
+    xh: (B, S, H, P); dt: (B, S, H) (post-softplus); a: (H,) negative;
+    bmat/cmat: (B, S, G, N).  Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    b, s, h, p = xh.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    q = min(cfg.chunk, s)
+    s_orig = s
+    if s % q:  # pad with dt=0 steps: decay exp(0)=1, zero contribution
+        pad = q - s % q
+        padf = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        xh, dt, bmat, cmat = padf(xh), padf(dt), padf(bmat), padf(cmat)
+        s = s + pad
+    nc = s // q
+    rep = h // g
+
+    f32 = jnp.float32
+    xc = xh.reshape(b, nc, q, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, q, h).astype(f32)
+    bc = bmat.reshape(b, nc, q, g, n).astype(f32)
+    cc = cmat.reshape(b, nc, q, g, n).astype(f32)
+
+    da = dtc * a  # (b, nc, q, h)
+    da_cs = jnp.cumsum(da, axis=2)
+
+    # Intra-chunk (diagonal blocks): y_i += C_i . (sum_{j<=i} decay * dt_j B_j x_j)
+    l = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))          # (b,nc,h,q,q)
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", cc, bc)           # (b,nc,g,q,q)
+    cb = jnp.repeat(cb, rep, axis=2)                        # (b,nc,h,q,q)
+    m = cb * l * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]  # weight on x_k
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", m, xc)
+
+    # Chunk-final states: S_c = sum_j decay_to_end * dt_j B_j x_j
+    decay_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)        # (b,nc,q,h)
+    b_h = jnp.repeat(bc, rep, axis=3)                       # per-head B (G small)
+    sb = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", decay_end * dtc, b_h, xc)
+
+    # Inter-chunk recurrence over chunk index.
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))              # (b,nc,h)
+
+    def scan_fn(hprev, xs):
+        s_c, dec = xs
+        hnew = hprev * dec[..., None, None] + s_c
+        return hnew, hprev  # emit state *entering* the chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), dtype=f32)
+    sb_t = sb.transpose(1, 0, 2, 3, 4)
+    dec_t = chunk_decay.transpose(1, 0, 2)
+    if unroll:  # dry-run probe mode
+        carry, emitted = h0, []
+        for c in range(nc):
+            carry, out = scan_fn(carry, (sb_t[c], dec_t[c]))
+            emitted.append(out)
+        hfin, h_in = carry, jnp.stack(emitted)
+    else:
+        hfin, h_in = jax.lax.scan(scan_fn, h0, (sb_t, dec_t))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                    # (b,nc,h,p,n)
+
+    # Off-diagonal contribution: y_i += (C_i . h_in) * exp(da_cs_i)
+    c_h = jnp.repeat(cc, rep, axis=3)                       # (b,nc,q,h,n)
+    y_off = jnp.einsum("bcqhn,bchpn->bcqhp", c_h, h_in) * jnp.exp(da_cs)[..., None]
+
+    y = (y_diag + y_off).reshape(b, s, h, p)[:, :s_orig]
+    return y.astype(xh.dtype), hfin
+
+
+def mamba2_forward(params, x, cfg: Mamba2Config, h0=None, conv_state=None,
+                   unroll: bool = False):
+    """Full-sequence forward. Returns (y, (conv_state, ssm_state))."""
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_in(proj, cfg)
+    xbc, conv_state_new = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    xs = xbc[..., :di]
+    bmat = xbc[..., di : di + gn].reshape(*x.shape[:2], cfg.n_groups, cfg.d_state)
+    cmat = xbc[..., di + gn :].reshape(*x.shape[:2], cfg.n_groups, cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    xh = xs.reshape(*x.shape[:2], cfg.n_heads, cfg.head_p)
+    y, hfin = ssd_scan(xh, dt, a, bmat, cmat, cfg, h0, unroll=unroll)
+    y = y + xh.astype(y.dtype) * params["d_skip"].astype(y.dtype)[:, None]
+    y = y.reshape(*x.shape[:2], di)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"].astype(x.dtype), (conv_state_new, hfin)
+
+
+def mamba2_decode(params, x, cfg: Mamba2Config, state):
+    """Single-token recurrent step. state = (conv_state (B,K-1,C), h (B,H,P,N))."""
+    conv_state, h = state
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_in(proj, cfg)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    xs = xbc[..., :di]
+    bmat = xbc[..., di : di + gn].reshape(x.shape[0], 1, cfg.n_groups, cfg.d_state)
+    cmat = xbc[..., di + gn :].reshape(x.shape[0], 1, cfg.n_groups, cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    xh = xs.reshape(x.shape[0], cfg.n_heads, cfg.head_p).astype(jnp.float32)
+
+    rep = cfg.n_heads // cfg.n_groups
+    bh = jnp.repeat(bmat[:, 0], rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    ch = jnp.repeat(cmat[:, 0], rep, axis=1).astype(jnp.float32)
+
+    decay = jnp.exp(dt * a)                                        # (B,H)
+    h = h * decay[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, bh, xh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h, ch)
+    y = y + xh * params["d_skip"][:, None]
+    y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"].astype(x.dtype), (conv_state, h)

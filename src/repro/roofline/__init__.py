@@ -1,0 +1,10 @@
+"""Roofline analysis tooling (three-term model on TPU v5e constants)."""
+from .analysis import (
+    RooflineTerms,
+    collective_bytes,
+    extrapolate,
+    model_flops,
+    PEAK_FLOPS_BF16,
+    HBM_BW,
+    ICI_BW,
+)

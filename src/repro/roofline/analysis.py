@@ -1,0 +1,152 @@
+"""Roofline analysis from compiled dry-run artifacts (task §Roofline).
+
+Three terms per (arch x shape x mesh), on TPU v5e constants:
+
+  compute term    = HLO_FLOPs_per_device  / peak_FLOPs_per_chip
+  memory term     = HLO_bytes_per_device  / HBM_bw_per_chip
+  collective term = collective_bytes_per_device / ICI_link_bw
+
+``compiled.cost_analysis()`` numbers are PER-DEVICE for an SPMD module, so
+the task's "/ chips" is already applied.  Collective bytes are parsed from
+the optimized HLO text: operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (derived from result shapes
+and replica-group sizes, since operands are SSA refs in HLO text).
+
+Caveat (DESIGN.md): collectives and FLOPs inside ``while``/``scan`` bodies
+appear ONCE in both HLO text and cost_analysis.  The dry-run therefore lowers
+*probe* configs with unrolled layers / inner loops (cfg.scan_layers=False,
+cfg.unroll_inner=True) at two depths and extrapolates linearly -- exact for
+homogeneous segments (see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# --- TPU v5e hardware constants (task-specified) ---
+PEAK_FLOPS_BF16 = 197e12       # 197 TFLOP/s per chip
+HBM_BW = 819e9                 # 819 GB/s per chip
+ICI_BW = 50e9                  # ~50 GB/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+\d*)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\("
+)
+_GROUPS_COMPACT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _shape_bytes(result_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(result_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_COMPACT_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [t for t in m.group(1).split(",") if t.strip()]
+        return max(1, len(ids))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum of collective *operand* bytes by op type (per device)."""
+    out: Dict[str, float] = {
+        "all-gather": 0.0,
+        "all-reduce": 0.0,
+        "reduce-scatter": 0.0,
+        "all-to-all": 0.0,
+        "collective-permute": 0.0,
+    }
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_str, op, start = m.group(1), m.group(2), m.group(3)
+        if "-done" in line.split("=")[1][:60]:
+            continue
+        rbytes = _shape_bytes(result_str)
+        g = _group_size(line)
+        if op == "all-gather":
+            operand = rbytes / g
+        elif op == "reduce-scatter":
+            operand = rbytes * g
+        else:
+            operand = rbytes
+        out[op] += operand
+    out["total"] = sum(out.values())
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float               # per device
+    bytes_hbm: float           # per device
+    bytes_coll: float          # per device
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+
+    def finalize(self) -> "RooflineTerms":
+        self.t_compute = self.flops / PEAK_FLOPS_BF16
+        self.t_memory = self.bytes_hbm / HBM_BW
+        self.t_collective = self.bytes_coll / ICI_BW
+        return self
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline lower-bound step time (max of the three terms)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.bytes_hbm,
+            "collective_bytes_per_device": self.bytes_coll,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "t_bound_s": self.t_bound,
+        }
+
+
+def extrapolate(f1: float, f2: float, n1: int, n2: int, n_full: int) -> float:
+    """Linear per-segment-unit extrapolation: cost(n) = f1 + (n-n1)*delta."""
+    delta = (f2 - f1) / max(1, (n2 - n1))
+    return f1 + (n_full - n1) * delta
+
+
+def model_flops(n_active_params: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS convention: 6*N*D train (fwd+bwd), 2*N*D inference."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens

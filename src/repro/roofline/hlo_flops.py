@@ -1,0 +1,123 @@
+"""Per-instruction FLOPs attribution from optimized HLO text.
+
+Builds a name->shape symbol table, then computes dot/convolution FLOPs
+(2 * prod(result_dims) * contraction_size) and attributes them to
+metadata op_name prefixes -- the profiler we get without hardware.
+"""
+from __future__ import annotations
+
+import collections
+import re
+from typing import Dict, Tuple
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z]\w*\[[0-9,]*\](?:\{[^}]*\})?))\s*([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"([a-z]+\d*)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_RCDIMS_RE = re.compile(r"rhs_contracting_dims=\{([0-9,]*)\}")
+_META_RE = re.compile(r'metadata=\{[^}]*op_name="([^"]*)"')
+
+
+def _dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def dot_flops_by_op(hlo_text: str, top: int = 30):
+    """Returns (total_dot_flops, Counter op_name_prefix -> flops)."""
+    shapes: Dict[str, str] = {}
+    dot_lines = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.group(1), m.group(2), m.group(3)
+        shapes[name] = shape_str
+        if op == "dot":
+            dot_lines.append((name, shape_str, line))
+
+    by_op = collections.Counter()
+    total = 0.0
+    for name, shape_str, line in dot_lines:
+        rdims = _dims(shape_str) or []
+        # Contraction size from lhs operand shape + contracting dims.
+        args = line.split("dot(", 1)[1]
+        ops = _OPERAND_RE.findall(args)
+        cm = _CDIMS_RE.search(line)
+        csize = 1
+        if ops and cm and ops[0] in shapes:
+            ldims = _dims(shapes[ops[0]]) or []
+            for ci in (int(x) for x in cm.group(1).split(",") if x):
+                if ci < len(ldims):
+                    csize *= ldims[ci]
+        n = 1
+        for d in rdims:
+            n *= d
+        flops = 2.0 * n * csize
+        total += flops
+        meta = _META_RE.search(line)
+        label = meta.group(1) if meta else name
+        # Collapse to a readable prefix.
+        label = "/".join(label.split("/")[:4])[:90]
+        by_op[label] += flops
+    return total, by_op
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes_all(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in (dims.split(",") if dims else []):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_TRAFFIC_OPS = ("dot", "gather", "scatter", "dynamic-slice", "dynamic-update-slice")
+
+
+def hbm_traffic_estimate(hlo_text: str) -> float:
+    """Fusion-aware lower-bound HBM traffic (per device): operand + result
+    bytes of dots, gathers, scatters and dynamic (update) slices.  Elementwise
+    chains are assumed fused (register-resident) -- the TPU-compiler-optimal
+    assumption; XLA's raw ``bytes accessed`` is the unfused upper bound.
+    """
+    shapes: Dict[str, str] = {}
+    total = 0.0
+    pending = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.group(1), m.group(2), m.group(3)
+        shapes[name] = shape_str
+        if op in _TRAFFIC_OPS:
+            pending.append((name, shape_str, op, line))
+    for name, shape_str, op, line in pending:
+        total += _shape_bytes_all(shape_str)  # result
+        args = line.split(f"{op}(", 1)[1] if f"{op}(" in line else ""
+        for oname in _OPERAND_RE.findall(args)[:4]:
+            if oname in shapes:
+                total += _shape_bytes_all(shapes[oname])
+    return total
+
+
+def print_flops_report(hlo_text: str, top: int = 25):
+    total, by_op = dot_flops_by_op(hlo_text)
+    print(f"total dot FLOPs (per device): {total:.3e}")
+    for label, fl in by_op.most_common(top):
+        print(f"  {fl:12.3e} ({100*fl/total:5.1f}%)  {label}")
+    return total, by_op

@@ -1,0 +1,125 @@
+"""Serving: prefill + decode step builders and cache-layout conversion.
+
+``serve_step`` is what the decode_* dry-run shapes lower: ONE new token
+against a KV cache of size seq_len (the task-spec definition).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.sharding import Sharder
+from ..models.config import ModelConfig
+from ..models.transformer import decode_step, prefill
+
+
+def make_prefill_fn(cfg: ModelConfig, mesh=None):
+    shd = Sharder(mesh, seq_shard=cfg.seq_shard)
+
+    def prefill_fn(params, tokens, frontend_embeds=None):
+        return prefill(params, cfg, tokens, frontend_embeds=frontend_embeds, shd=shd)
+
+    return prefill_fn
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None):
+    shd = Sharder(mesh, seq_shard=cfg.seq_shard)
+
+    def serve_step(params, tokens, cache, pos):
+        """tokens: (B, 1) new token ids; pos: scalar write position."""
+        logits, cache = decode_step(params, cfg, tokens, cache, pos, shd=shd)
+        return logits, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Prefill-cache -> decode-cache layout conversion
+# ---------------------------------------------------------------------------
+
+
+def _pad_seq(x, s_max: int, axis: int):
+    pad = s_max - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _roll_window(k, window: int, s: int):
+    """(..., S, D) prefill keys -> rolling (..., W, D) decode buffer where
+    slot p % W holds position p, for p in [max(0, S-W), S)."""
+    w = min(window, k.shape[-2]) if k.shape[-2] < window else window
+    start = max(0, s - window)
+    positions = jnp.arange(start, s)
+    slots = positions % window
+    buf = jnp.zeros(k.shape[:-2] + (window, k.shape[-1]), k.dtype)
+    return buf.at[..., slots, :].set(k[..., start:s, :])
+
+
+def prefill_to_decode_cache(cfg: ModelConfig, caches, s_prefill: int, s_max: int):
+    """Convert prefill-emitted caches to the decode layout used by
+    init_cache/_cache_specs (pad full-attn KV to s_max; roll local windows)."""
+    out = []
+    for idx, (kind, count) in enumerate(cfg.segments()):
+        c = caches[idx]
+        if kind == "mamba2":
+            out.append(c)
+            continue
+        if kind.startswith("pattern"):
+            sub_out = {}
+            for name, sub in c.items():
+                if "k" in sub:  # local attention: roll into window buffer
+                    sub_out[name] = {
+                        "k": _roll_window(sub["k"], cfg.local_window, s_prefill),
+                        "v": _roll_window(sub["v"], cfg.local_window, s_prefill),
+                    }
+                else:
+                    sub_out[name] = sub
+            out.append(sub_out)
+            continue
+        if cfg.attn_type == "mla":
+            out.append(
+                {
+                    "c": _pad_seq(c["c"], s_max, axis=2),
+                    "kr": _pad_seq(c["kr"], s_max, axis=2),
+                }
+            )
+            continue
+        if cfg.local_window is not None:
+            out.append(
+                {
+                    "k": _roll_window(c["k"], cfg.local_window, s_prefill),
+                    "v": _roll_window(c["v"], cfg.local_window, s_prefill),
+                }
+            )
+        else:
+            out.append(
+                {
+                    "k": _pad_seq(c["k"], s_max, axis=3),
+                    "v": _pad_seq(c["v"], s_max, axis=3),
+                }
+            )
+    return out
+
+
+def generate(params, cfg: ModelConfig, tokens, steps: int, s_max: int,
+             frontend_embeds=None, mesh=None, greedy: bool = True, key=None):
+    """Reference generation loop: prefill then ``steps`` decode steps."""
+    prefill_fn = make_prefill_fn(cfg, mesh)
+    serve_fn = jax.jit(make_serve_step(cfg, mesh))
+    logits, caches = prefill_fn(params, tokens, frontend_embeds)
+    s0 = tokens.shape[1] + (
+        frontend_embeds.shape[1] if frontend_embeds is not None else 0
+    )
+    cache = prefill_to_decode_cache(cfg, caches, s0, s_max)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for i in range(steps - 1):
+        logits, cache = serve_fn(params, tok, cache, jnp.int32(s0 + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,106 @@
+"""Training step: CE loss (+MoE aux), grad accumulation, AdamW -- one jit.
+
+``make_train_step(cfg, mesh, opt_cfg)`` returns a function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` with all
+sharding constraints applied; pass the returned fn straight to ``jax.jit``
+with the shardings from ``launch.sharding``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.sharding import Sharder
+from ..models.config import ModelConfig
+from ..models.transformer import forward_train
+from .optimizer import OptimizerConfig, adamw_update
+
+
+def cross_entropy(logits, labels):
+    """Mean CE over all positions; logits fp32-softmaxed (vocab may be
+    TP-sharded -- XLA inserts the partial-reduction collectives)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def make_loss_fn(cfg: ModelConfig, shd: Optional[Sharder] = None):
+    def loss_fn(params, batch):
+        logits, aux = forward_train(
+            params,
+            cfg,
+            batch["tokens"],
+            frontend_embeds=batch.get("frontend_embeds"),
+            shd=shd,
+        )
+        labels = batch["labels"]
+        # Modality stubs prepend frontend tokens; loss is on text positions.
+        logits = logits[:, -labels.shape[1] :, :]
+        loss = cross_entropy(logits, labels)
+        total = loss + cfg.moe_aux_coef * aux
+        return total, {"ce": loss, "moe_aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptimizerConfig,
+    mesh=None,
+    microbatches: int = 1,
+):
+    shd = Sharder(mesh, seq_shard=cfg.seq_shard)
+    loss_fn = make_loss_fn(cfg, shd)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    compute_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def cast_params(params):
+        # True mixed precision: differentiate w.r.t. the bf16 copy so grads
+        # are bf16 (halves grad residency); fp32 masters live in the
+        # optimizer update only.
+        return jax.tree.map(
+            lambda p: p.astype(compute_dt) if p.dtype == jnp.float32 else p,
+            params,
+        )
+
+    def train_step(params, opt_state, batch):
+        cparams = cast_params(params)
+        if microbatches == 1:
+            (loss, parts), grads = grad_fn(cparams, batch)
+        else:
+            # Gradient accumulation: scan over microbatch slices.  The carry
+            # dtype follows opt_cfg.state_dtype (bf16 halves residency for
+            # 236B-scale cells).
+            acc_dt = jnp.dtype(opt_cfg.state_dtype)
+
+            def mb(i, batch=batch):
+                return jax.tree.map(
+                    lambda x: x.reshape(microbatches, -1, *x.shape[1:])[i], batch
+                )
+
+            def body(carry, i):
+                acc, loss_acc = carry
+                (l, _), g = grad_fn(cparams, mb(i))
+                acc = jax.tree.map(
+                    lambda a, gg: (a.astype(jnp.float32)
+                                   + gg.astype(jnp.float32)).astype(acc_dt),
+                    acc, g,
+                )
+                return (acc, loss_acc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.float32(0.0)), jnp.arange(microbatches)
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            parts = {"ce": loss, "moe_aux": jnp.float32(0.0)}
+
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **parts, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step

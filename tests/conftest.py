@@ -1,0 +1,15 @@
+import jax
+import pytest
+
+# Propagation limit-point agreement needs f64 (paper runs double precision by
+# default); LM smoke configs pin their own float32 dtypes explicitly.
+# NOTE: do NOT set xla_force_host_platform_device_count here -- smoke tests
+# and benches must see 1 device (multi-device tests use subprocesses).
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture
+def rng():
+    import numpy as np
+
+    return np.random.default_rng(0)

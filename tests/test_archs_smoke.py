@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests (task deliverable f): every assigned arch
+instantiates a REDUCED config and runs a forward + one train step on CPU,
+asserting output shapes and finiteness.  Serving-path equivalence
+(prefill+decode == full forward) is checked for one representative of each
+attention family."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import (
+    SHAPES,
+    cell_supported,
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    input_specs,
+    prefill,
+)
+from repro.models.transformer import padded_vocab
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.serve_step import prefill_to_decode_cache
+from repro.train.train_step import make_train_step
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.frontend != "none":
+        batch["frontend_embeds"] = (
+            jax.random.normal(jax.random.PRNGKey(1), (b, cfg.n_frontend_tokens, cfg.d_model)) * 0.1
+        ).astype(jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = forward_train(
+        params, cfg, batch["tokens"], frontend_embeds=batch.get("frontend_embeds")
+    )
+    b, s = batch["tokens"].shape
+    s_total = s + (cfg.n_frontend_tokens if cfg.frontend != "none" else 0)
+    assert logits.shape == (b, s_total, padded_vocab(cfg))
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = OptimizerConfig(lr_peak=1e-3, warmup_steps=1, total_steps=10)
+    opt_state = init_opt_state(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    batch = _batch(cfg)
+    params2, opt_state2, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"])) and float(metrics["grad_norm"]) > 0
+    # Params actually moved.
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert moved
+    assert int(opt_state2.step) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_runs(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache = init_cache(cfg, batch=2, s_max=64)
+    logits, cache2 = decode_step(
+        params, cfg, jnp.zeros((2, 1), jnp.int32), cache, jnp.int32(0)
+    )
+    assert logits.shape == (2, 1, padded_vocab(cfg))
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+# Serving-path equivalence: one representative per attention family.
+@pytest.mark.parametrize(
+    "arch", ["granite-3-2b", "deepseek-v2-236b", "mamba2-780m", "recurrentgemma-9b"]
+)
+def test_prefill_decode_matches_full_forward(arch):
+    import dataclasses
+
+    # f64 isolates cache-LAYOUT bugs from chunked-vs-stepwise recurrence
+    # drift (which is tested at module level with appropriate tolerances).
+    cfg = dataclasses.replace(get_config(arch, smoke=True), dtype="float64")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, s_pre, s_max = 2, 24, 48
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s_pre + 4), 0, cfg.vocab_size)
+
+    # Reference: full forward over s_pre + 4 tokens.
+    full_logits, _ = forward_train(params, cfg, toks)
+
+    # Prefill on the first s_pre, then 4 decode steps.  Tolerances absorb
+    # chunked-vs-stepwise recurrence drift (SSD / online-softmax) amplified
+    # by the unembed projection; cache-layout bugs give O(1..10) diffs.
+    tol = dict(rtol=5e-2, atol=5e-2)
+    lg, caches = prefill(params, cfg, toks[:, :s_pre])
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0], np.float32),
+        np.asarray(full_logits[:, s_pre - 1], np.float32),
+        **tol,
+    )
+    cache = prefill_to_decode_cache(cfg, caches, s_pre, s_max)
+    for i in range(4):
+        lg, cache = decode_step(
+            params, cfg, toks[:, s_pre + i : s_pre + i + 1], cache,
+            jnp.int32(s_pre + i),
+        )
+        got = np.asarray(lg[:, 0], np.float32)
+        want = np.asarray(full_logits[:, s_pre + i], np.float32)
+        np.testing.assert_allclose(got, want, **tol)
+        # Greedy decisions must agree.
+        assert (got.argmax(-1) == want.argmax(-1)).mean() >= 0.99
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_all_shapes(arch):
+    """input_specs must build for every supported (arch x shape) cell."""
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        ok, why = cell_supported(cfg, shape)
+        if not ok:
+            assert shape.name == "long_500k" and why
+            continue
+        specs = input_specs(cfg, shape)
+        assert "tokens" in specs
+        leaves = jax.tree.leaves(specs)
+        assert all(hasattr(l, "shape") for l in leaves)
+
+
+def test_long_500k_skip_set_documented():
+    """Exactly the sub-quadratic archs run long_500k."""
+    runnable = {
+        a for a in ARCH_IDS
+        if cell_supported(get_config(a), SHAPES["long_500k"])[0]
+    }
+    assert runnable == {"mamba2-780m", "recurrentgemma-9b"}

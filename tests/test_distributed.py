@@ -1,0 +1,172 @@
+"""Multi-device tests (subprocess with forced host devices, so the main
+pytest process keeps seeing exactly 1 device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=timeout,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_sharded_propagation_matches_single_device():
+    out = _run("""
+        import jax, numpy as np
+        jax.config.update("jax_enable_x64", True)
+        from repro.core import propagate, propagate_sharded, bounds_equal
+        from repro.data import make_mixed, make_cascade_chain
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        for seed in range(3):
+            p = make_mixed(m=60, n=45, seed=seed)
+            a = propagate(p, driver="device_loop")
+            b = propagate_sharded(p, mesh)
+            assert bounds_equal(np.asarray(a.lb), np.asarray(a.ub),
+                                np.asarray(b.lb), np.asarray(b.ub)), seed
+            assert int(a.rounds) == int(b.rounds), (int(a.rounds), int(b.rounds))
+        p = make_cascade_chain(16)
+        a = propagate(p); b = propagate_sharded(p, mesh)
+        assert bounds_equal(np.asarray(a.lb), np.asarray(a.ub),
+                            np.asarray(b.lb), np.asarray(b.ub))
+        print("SHARDED_OK")
+    """)
+    assert "SHARDED_OK" in out
+
+
+@pytest.mark.slow
+def test_row_partitioned_propagation_matches():
+    """Beyond-paper §Perf variant: row partition == nnz partition == single."""
+    out = _run("""
+        import jax, numpy as np
+        jax.config.update("jax_enable_x64", True)
+        from repro.core import propagate, propagate_sharded_rows, bounds_equal
+        from repro.data import make_mixed, make_knapsack
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        for seed in range(3):
+            p = make_mixed(m=70, n=50, seed=seed + 20)
+            a = propagate(p)
+            b = propagate_sharded_rows(p, mesh)
+            assert bounds_equal(np.asarray(a.lb), np.asarray(a.ub),
+                                np.asarray(b.lb), np.asarray(b.ub)), seed
+            assert int(a.rounds) == int(b.rounds)
+        print("ROWS_OK")
+    """)
+    assert "ROWS_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_propagation_multipod_axes():
+    out = _run("""
+        import jax, numpy as np
+        jax.config.update("jax_enable_x64", True)
+        from repro.core import propagate, propagate_sharded, bounds_equal
+        from repro.data import make_mixed
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        p = make_mixed(m=50, n=40, seed=11)
+        a = propagate(p)
+        b = propagate_sharded(p, mesh)
+        assert bounds_equal(np.asarray(a.lb), np.asarray(a.ub),
+                            np.asarray(b.lb), np.asarray(b.ub))
+        print("MULTIPOD_OK")
+    """)
+    assert "MULTIPOD_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_unsharded():
+    """One train step on a (2,2) mesh == the same step on 1 logical device."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.models.transformer import init_params
+        from repro.train.optimizer import OptimizerConfig, init_opt_state
+        from repro.train.train_step import make_train_step
+        from repro.launch.sharding import param_shardings, opt_state_shardings, batch_shardings
+        from repro.models.config import InputShape, input_specs
+
+        cfg = get_config("granite-3-2b", smoke=True)
+        opt_cfg = OptimizerConfig(lr_peak=1e-3, warmup_steps=1, total_steps=10)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = init_opt_state(params, opt_cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab_size)
+        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+
+        ref_step = jax.jit(make_train_step(cfg, opt_cfg))
+        p1, o1, m1 = ref_step(params, opt, batch)
+
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        p_sh = param_shardings(cfg, mesh)
+        o_sh = opt_state_shardings(cfg, mesh, opt_cfg)
+        step = jax.jit(make_train_step(cfg, opt_cfg, mesh),
+                       in_shardings=(p_sh, o_sh, None),
+                       out_shardings=(p_sh, o_sh, None))
+        p2, o2, m2 = step(jax.device_put(params, p_sh),
+                          jax.device_put(opt, o_sh), batch)
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3, (float(m1["loss"]), float(m2["loss"]))
+        d = max(float(np.max(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
+                for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+        assert d < 2e-2, d
+        print("TRAIN_SHARDED_OK", float(m1["loss"]), float(m2["loss"]))
+    """)
+    assert "TRAIN_SHARDED_OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_cell_small_mesh():
+    """The dry-run path itself (lower+compile+memory+probe) on a tiny mesh."""
+    out = _run("""
+        import jax
+        from repro.configs import get_config
+        from repro.models.config import SHAPES
+        from repro.launch.dryrun import lower_cell
+        import dataclasses
+        cfg = get_config("granite-3-2b", smoke=True)
+        cfg = dataclasses.replace(cfg, dtype="bfloat16")
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64, global_batch=8)
+        lowered, compiled = lower_cell(cfg, shape, mesh, microbatches=2)
+        ma = compiled.memory_analysis()
+        assert ma.argument_size_in_bytes > 0
+        ca = compiled.cost_analysis()
+        assert ca.get("flops", 0) > 0
+        print("DRYRUN_OK")
+    """)
+    assert "DRYRUN_OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_checkpoint_reshard_across_meshes():
+    """Save sharded on (4,) devices, restore onto a (2,2) mesh layout."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.train.checkpoint import save_checkpoint, restore_checkpoint
+        state = {"w": jnp.arange(64.0).reshape(8, 8)}
+        mesh1 = jax.make_mesh((4,), ("data",))
+        s1 = {"w": NamedSharding(mesh1, P("data", None))}
+        state1 = jax.device_put(state, s1)
+        d = tempfile.mkdtemp()
+        save_checkpoint(d, 1, state1)
+        mesh2 = jax.make_mesh((2, 2), ("data", "model"))
+        s2 = {"w": NamedSharding(mesh2, P("data", "model"))}
+        restored, step = restore_checkpoint(d, state, shardings=s2)
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(state["w"]))
+        assert len(restored["w"].devices()) == 4
+        print("RESHARD_OK")
+    """)
+    assert "RESHARD_OK" in out

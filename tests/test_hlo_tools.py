@@ -1,0 +1,74 @@
+"""Roofline tooling: collective parser + dot-FLOPs parser on both synthetic
+HLO snippets and a real compiled module."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.analysis import RooflineTerms, collective_bytes, extrapolate
+from repro.roofline.hlo_flops import dot_flops_by_op, hbm_traffic_estimate
+
+SYNTHETIC = """
+  %all-reduce.1 = f32[16,4096]{1,0} all-reduce(%x), channel_id=1, replica_groups=[2,4]<=[8]
+  %all-gather.2 = bf16[1024,512]{1,0} all-gather(%y), replica_groups=[4,2]<=[8], dimensions={0}
+  %reduce-scatter.3 = f32[128]{0} reduce-scatter(%z), replica_groups=[1,8]<=[8], dimensions={0}
+  %all-to-all.4 = f32[64,64]{1,0} all-to-all(%w), replica_groups={{0,1,2,3},{4,5,6,7}}
+  %collective-permute.5 = bf16[256]{0} collective-permute(%v), source_target_pairs={{0,1}}
+"""
+
+
+def test_collective_parser_synthetic():
+    got = collective_bytes(SYNTHETIC)
+    assert got["all-reduce"] == 16 * 4096 * 4
+    assert got["all-gather"] == 1024 * 512 * 2 / 2   # result / group_size(2)
+    assert got["reduce-scatter"] == 128 * 4 * 8      # result * group_size(8)
+    assert got["all-to-all"] == 64 * 64 * 4
+    assert got["collective-permute"] == 256 * 2
+    assert got["total"] == sum(
+        got[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute")
+    )
+
+
+def test_dot_flops_on_compiled_module():
+    def f(a, b, c):
+        return (a @ b) @ c
+
+    sds = jax.ShapeDtypeStruct
+    m, k, n, p = 8, 16, 32, 4
+    compiled = (
+        jax.jit(f)
+        .lower(sds((m, k), jnp.float32), sds((k, n), jnp.float32), sds((n, p), jnp.float32))
+        .compile()
+    )
+    total, by_op = dot_flops_by_op(compiled.as_text())
+    want = 2 * m * k * n + 2 * m * n * p
+    assert abs(total - want) / want < 1e-6, (total, want)
+
+
+def test_hbm_traffic_estimate_counts_dots():
+    def f(a, b):
+        return a @ b
+
+    sds = jax.ShapeDtypeStruct
+    compiled = (
+        jax.jit(f)
+        .lower(sds((64, 128), jnp.float32), sds((128, 32), jnp.float32))
+        .compile()
+    )
+    traffic = hbm_traffic_estimate(compiled.as_text())
+    want = (64 * 128 + 128 * 32 + 64 * 32) * 4
+    assert traffic >= want
+
+
+def test_extrapolation_linear():
+    # cost(n) = 7 + 3n measured at n=1,2 -> n=10
+    assert extrapolate(10.0, 13.0, 1, 2, 10) == 7 + 3 * 10
+
+
+def test_roofline_terms_bottleneck():
+    t = RooflineTerms(flops=197e12, bytes_hbm=819e9 * 2, bytes_coll=50e9).finalize()
+    assert abs(t.t_compute - 1.0) < 1e-9
+    assert abs(t.t_memory - 2.0) < 1e-9
+    assert abs(t.t_collective - 1.0) < 1e-9
+    assert t.bottleneck == "memory"
+    assert t.t_bound == t.t_memory

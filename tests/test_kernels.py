@@ -1,0 +1,138 @@
+"""Pallas kernel validation: interpret-mode kernels vs the pure-jnp oracle
+(ref.py), swept over tile shapes and dtypes, plus the full block-ELL engine
+against the sequential reference."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import INF, bounds_equal, csr_to_block_ell, propagate_sequential
+from repro.data import make_cascade_chain, make_knapsack, make_mixed, make_set_cover
+from repro.kernels import (
+    activities_tiles,
+    candidates_tiles,
+    device_block_ell,
+    fused_round_tiles,
+    propagate_block_ell,
+)
+from repro.kernels import ref as kref
+
+
+def _tiles(rng, t, r, k, dtype, inf_frac=0.1):
+    val = rng.choice([-2.0, -1.0, 0.0, 1.0, 3.0], size=(t, r, k)).astype(dtype)
+    lb = rng.uniform(-5, 0, size=(t, r, k)).astype(dtype)
+    ub = rng.uniform(0, 5, size=(t, r, k)).astype(dtype)
+    lb[rng.random((t, r, k)) < inf_frac] = -INF
+    ub[rng.random((t, r, k)) < inf_frac] = INF
+    return jnp.asarray(val), jnp.asarray(lb), jnp.asarray(ub)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("t,r,k", [(1, 2, 4), (3, 4, 8), (2, 8, 16), (5, 1, 32)])
+def test_activities_kernel_matches_ref(dtype, t, r, k, rng):
+    val, lb, ub = _tiles(rng, t, r, k, dtype)
+    got = activities_tiles(val, lb, ub, interpret=True)
+    want = kref.activities_tiles_ref(val, lb, ub)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("t,r,k", [(2, 2, 4), (3, 4, 8)])
+def test_candidates_kernel_matches_ref(dtype, t, r, k, rng):
+    val, lb, ub = _tiles(rng, t, r, k, dtype)
+    ii = jnp.asarray(rng.random((t, r, k)) < 0.5)
+    mf, mc, xf, xc = kref.activities_tiles_ref(val, lb, ub)
+    lhs = jnp.asarray(rng.uniform(-10, 0, size=(t, r)).astype(dtype))
+    rhs = jnp.asarray(rng.uniform(0, 10, size=(t, r)).astype(dtype))
+    got = candidates_tiles(
+        val, lb, ub, ii, mf, mc, xf, xc, lhs, rhs, int_eps=1e-6, interpret=True
+    )
+    want = kref.candidates_tiles_ref(
+        val, lb, ub, ii, mf, mc, xf, xc, lhs, rhs, int_eps=1e-6
+    )
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-6)
+
+
+@pytest.mark.parametrize("t,r,k", [(2, 2, 8), (4, 4, 4)])
+def test_fused_kernel_matches_ref(t, r, k, rng):
+    val, lb, ub = _tiles(rng, t, r, k, np.float32)
+    ii = jnp.asarray(rng.random((t, r, k)) < 0.5)
+    lhs = jnp.asarray(rng.uniform(-10, 0, size=(t, r)).astype(np.float32))
+    rhs = jnp.asarray(rng.uniform(0, 10, size=(t, r)).astype(np.float32))
+    got = fused_round_tiles(val, lb, ub, ii, lhs, rhs, int_eps=1e-6, interpret=True)
+    want = kref.fused_round_tiles_ref(val, lb, ub, ii, lhs, rhs, int_eps=1e-6)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-6)
+
+
+class TestBlockEllConversion:
+    def test_covers_all_nonzeros(self):
+        p = make_mixed(m=40, n=30, seed=1)
+        b = csr_to_block_ell(p.csr, tile_rows=4, tile_width=8)
+        assert int((b.val != 0).sum()) == p.csr.nnz
+        # Row sums through chunks reproduce dense row sums.
+        dense = p.csr.to_dense()
+        chunk_sums = np.asarray(b.val).sum(axis=2).reshape(-1)
+        rows = np.asarray(b.chunk_row).reshape(-1)
+        got = np.zeros(p.m + 1)
+        np.add.at(got, rows, chunk_sums)
+        np.testing.assert_allclose(got[: p.m], dense.sum(axis=1), rtol=1e-12)
+
+    def test_long_rows_split(self):
+        p = make_knapsack(n=50, m=4, seed=0)
+        b = csr_to_block_ell(p.csr, tile_rows=2, tile_width=4)
+        rows = np.asarray(b.chunk_row).reshape(-1)
+        # Some row must span multiple chunks.
+        vals, counts = np.unique(rows[rows < p.m], return_counts=True)
+        assert counts.max() > 1
+
+    def test_empty_rows_ok(self):
+        from repro.core import Problem, csr_from_dense
+
+        A = np.array([[1.0, 2.0], [0.0, 0.0], [3.0, 0.0]])
+        csr = csr_from_dense(A)
+        b = csr_to_block_ell(csr, tile_rows=2, tile_width=2)
+        assert int((b.val != 0).sum()) == 3
+
+
+@pytest.mark.parametrize("fused", ["auto", "yes"])
+@pytest.mark.parametrize("gen,kwargs", [
+    (make_knapsack, dict(n=30, m=10, seed=3)),
+    (make_set_cover, dict(n=40, m=12, seed=4)),
+])
+def test_block_ell_engine_short_rows(gen, kwargs, fused):
+    p = gen(**kwargs)
+    a = propagate_sequential(p)
+    b = propagate_block_ell(p, tile_rows=4, tile_width=64, fused=fused,
+                            driver="device_loop")
+    assert bounds_equal(a.lb, a.ub, b.lb, b.ub)
+
+
+@pytest.mark.parametrize("tile_width", [4, 16])
+def test_block_ell_engine_row_splitting(tile_width):
+    """tile_width smaller than rows forces the multi-chunk (CSR-vector) path."""
+    p = make_mixed(m=50, n=35, seed=7)
+    a = propagate_sequential(p)
+    b = propagate_block_ell(p, tile_rows=4, tile_width=tile_width,
+                            fused="no", driver="host_loop")
+    assert bounds_equal(a.lb, a.ub, b.lb, b.ub)
+
+
+def test_block_ell_cascade():
+    p = make_cascade_chain(20)
+    a = propagate_sequential(p)
+    b = propagate_block_ell(p, tile_rows=2, tile_width=4)
+    assert bounds_equal(a.lb, a.ub, b.lb, b.ub)
+
+
+def test_pallas_vs_jnp_engine_identical():
+    """use_pallas=True/False must be bit-compatible (same arithmetic)."""
+    p = make_mixed(m=30, n=25, seed=9)
+    a = propagate_block_ell(p, tile_rows=4, tile_width=8, use_pallas=True,
+                            driver="host_loop")
+    b = propagate_block_ell(p, tile_rows=4, tile_width=8, use_pallas=False,
+                            driver="host_loop")
+    np.testing.assert_array_equal(np.asarray(a.lb), np.asarray(b.lb))
+    np.testing.assert_array_equal(np.asarray(a.ub), np.asarray(b.ub))

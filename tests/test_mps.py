@@ -1,0 +1,86 @@
+"""MPS reader/writer: hand-written fixture + roundtrip through the
+propagator (the limit point must survive serialization)."""
+import io
+
+import numpy as np
+
+from repro.core import INF, bounds_equal, propagate
+from repro.data.instances import make_mixed
+from repro.data.mps import read_mps, write_mps
+
+FIXTURE = """\
+NAME          TEST
+ROWS
+ N  COST
+ L  CAP
+ G  COVER
+ E  BAL
+COLUMNS
+    MARKER    'MARKER'  'INTORG'
+    X  CAP  2.0  COVER  1.0
+    X  COST  1.0
+    Y  CAP  3.0  BAL  4.0
+    MARKER    'MARKER'  'INTEND'
+    Z  COVER  1.0  BAL  -1.0
+RHS
+    RHS  CAP  6.0  COVER  1.0
+    RHS  BAL  2.0
+BOUNDS
+ UP BND  X  10.0
+ UP BND  Y  10.0
+ UP BND  Z  8.0
+ENDATA
+"""
+
+
+def test_read_fixture():
+    p = read_mps(io.StringIO(FIXTURE))
+    assert p.m == 3 and p.n == 3
+    assert p.is_int.tolist() == [True, True, False]
+    # CAP: <= 6; COVER: >= 1; BAL: == 2
+    np.testing.assert_allclose(p.rhs[0], 6.0)
+    assert p.lhs[0] <= -INF
+    np.testing.assert_allclose(p.lhs[1], 1.0)
+    assert p.rhs[1] >= INF
+    np.testing.assert_allclose([p.lhs[2], p.rhs[2]], [2.0, 2.0])
+    np.testing.assert_allclose(p.ub, [10.0, 10.0, 8.0])
+    # Same instance as examples/quickstart.py => same tightenings.
+    r = propagate(p)
+    np.testing.assert_allclose(np.asarray(r.ub), [1.0, 2.0, 6.0])
+    np.testing.assert_allclose(np.asarray(r.lb), [0.0, 1.0, 2.0])
+
+
+def test_roundtrip_preserves_limit_point():
+    p = make_mixed(m=40, n=30, seed=3)
+    buf = io.StringIO()
+    write_mps(p, buf)
+    buf.seek(0)
+    p2 = read_mps(buf)
+    assert p2.m == p.m and p2.n == p.n and p2.nnz == p.nnz
+    a = propagate(p)
+    b = propagate(p2)
+    assert bounds_equal(a.lb, a.ub, b.lb, b.ub)
+
+
+def test_ranges_section():
+    mps = """\
+NAME T
+ROWS
+ N OBJ
+ L R1
+COLUMNS
+    X  R1  1.0
+RHS
+    RHS  R1  5.0
+RANGES
+    RNG  R1  3.0
+BOUNDS
+ UP BND  X  100.0
+ENDATA
+"""
+    p = read_mps(io.StringIO(mps))
+    # L row with range 3: 2 <= x <= 5
+    np.testing.assert_allclose([p.lhs[0], p.rhs[0]], [2.0, 5.0])
+    r = propagate(p)
+    np.testing.assert_allclose(np.asarray(r.ub), [5.0])
+    np.testing.assert_allclose(np.asarray(r.lb), [2.0])

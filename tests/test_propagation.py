@@ -1,0 +1,169 @@
+"""Unit tests for the core domain-propagation engine (paper §1.1, §3.4)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    INF,
+    Problem,
+    PropagatorConfig,
+    analyze_constraints,
+    bounds_equal,
+    csr_from_dense,
+    propagate,
+    propagate_sequential,
+)
+from repro.core.propagator import DeviceProblem
+from repro.data import make_cascade_chain, make_knapsack
+
+
+def _prob(A, lhs, rhs, lb, ub, is_int=None):
+    A = np.asarray(A, dtype=np.float64)
+    n = A.shape[1]
+    return Problem(
+        csr=csr_from_dense(A),
+        lhs=np.asarray(lhs, dtype=np.float64),
+        rhs=np.asarray(rhs, dtype=np.float64),
+        lb=np.asarray(lb, dtype=np.float64),
+        ub=np.asarray(ub, dtype=np.float64),
+        is_int=(np.zeros(n, dtype=bool) if is_int is None else np.asarray(is_int)),
+    )
+
+
+class TestHandComputed:
+    def test_knapsack_row(self):
+        # 2x + 3y <= 6, x,y in [0,10] integer  =>  x <= 3, y <= 2
+        p = _prob([[2.0, 3.0]], [-INF], [6.0], [0, 0], [10, 10], [True, True])
+        for driver in ("host_loop", "device_loop", "unrolled"):
+            r = propagate(p, driver=driver)
+            np.testing.assert_allclose(np.asarray(r.ub), [3.0, 2.0])
+            np.testing.assert_allclose(np.asarray(r.lb), [0.0, 0.0])
+            assert bool(r.converged) and not bool(r.infeasible)
+
+    def test_lower_side(self):
+        # x + y >= 8 with x <= 3  =>  y >= 5
+        p = _prob([[1.0, 1.0]], [8.0], [INF], [0, 0], [3, 10])
+        r = propagate(p)
+        np.testing.assert_allclose(np.asarray(r.lb), [0.0, 5.0])
+
+    def test_negative_coefficient(self):
+        # x - y <= 0, x in [2,10], y in [0,5]  =>  x <= 5, y >= 2
+        p = _prob([[1.0, -1.0]], [-INF], [0.0], [2, 0], [10, 5])
+        r = propagate(p)
+        np.testing.assert_allclose(np.asarray(r.ub), [5.0, 5.0])
+        np.testing.assert_allclose(np.asarray(r.lb), [2.0, 2.0])
+
+    def test_integer_rounding(self):
+        # 2x <= 5, x integer => x <= 2 (floor of 2.5)
+        p = _prob([[2.0]], [-INF], [5.0], [0], [10], [True])
+        r = propagate(p)
+        np.testing.assert_allclose(np.asarray(r.ub), [2.0])
+
+    def test_infeasible_detection(self):
+        # x + y <= 1 with x,y >= 1 => infeasible after propagation
+        p = _prob([[1.0, 1.0]], [-INF], [1.0], [1, 1], [10, 10])
+        r = propagate(p)
+        assert bool(r.infeasible)
+        rs = propagate_sequential(p)
+        assert rs.infeasible
+
+    def test_equality_row_fixing(self):
+        # x + y == 4, x in [0,1] => y in [3,4]
+        p = _prob([[1.0, 1.0]], [4.0], [4.0], [0, 0], [1, 10])
+        r = propagate(p)
+        np.testing.assert_allclose(np.asarray(r.lb), [0.0, 3.0])
+        np.testing.assert_allclose(np.asarray(r.ub), [1.0, 4.0])
+
+
+class TestInfinityHandling:
+    """Paper §3.4: residual activities with infinite contributions."""
+
+    def test_single_infinite_bound_still_propagates(self):
+        # x + y <= 5, y unbounded above: residual for y is finite => y <= 5-lx
+        p = _prob([[1.0, 1.0]], [-INF], [5.0], [1, 0], [2, INF])
+        r = propagate(p)
+        # y's candidate uses residual min-activity of x = 1 => y <= 4
+        np.testing.assert_allclose(np.asarray(r.ub), [2.0, 4.0])
+
+    def test_two_infinite_bounds_no_tightening(self):
+        # x + y <= 5 with both unbounded above: no upper bound deducible for
+        # either (residuals infinite), lower bounds unaffected.
+        p = _prob([[1.0, 1.0]], [-INF], [5.0], [0, 0], [INF, INF])
+        r = propagate(p)
+        # each var: residual min activity = other's lb = 0 -> cand 5
+        np.testing.assert_allclose(np.asarray(r.ub), [5.0, 5.0])
+
+    def test_all_infinite(self):
+        p = _prob([[1.0, 1.0]], [-INF], [5.0], [-INF, -INF], [INF, INF])
+        r = propagate(p)
+        # residuals are -inf (other var unbounded below) -> no tightening
+        assert np.all(np.asarray(r.ub) >= INF)
+
+    def test_seq_matches_parallel_on_inf(self):
+        p = _prob(
+            [[1.0, 2.0, -1.0], [1.0, 0.0, 3.0]],
+            [-INF, 1.0],
+            [4.0, INF],
+            [0, -INF, 0],
+            [INF, 5, INF],
+        )
+        a = propagate_sequential(p)
+        b = propagate(p)
+        assert bounds_equal(a.lb, a.ub, b.lb, b.ub)
+
+
+class TestPresolveVerdicts:
+    def test_redundant_and_infeasible(self):
+        p = _prob(
+            [[1.0, 1.0], [1.0, 1.0]],
+            [-INF, -INF],
+            [100.0, -50.0],
+            [0, 0],
+            [10, 10],
+        )
+        dp = DeviceProblem(p)
+        v = analyze_constraints(
+            dp.row_id, dp.val, dp.col, dp.lhs, dp.rhs, dp.lb0, dp.ub0, p.m
+        )
+        assert bool(v.redundant[0])      # max activity 20 <= 100
+        assert bool(v.infeasible[1])     # min activity 0 > -50
+        assert bool(v.any_infeasible)
+
+
+class TestDrivers:
+    def test_all_drivers_same_result(self):
+        p = make_knapsack(n=30, m=8, seed=5)
+        results = [propagate(p, driver=d) for d in ("host_loop", "device_loop", "unrolled")]
+        for r in results[1:]:
+            assert bounds_equal(results[0].lb, results[0].ub, r.lb, r.ub)
+
+    def test_cascade_round_inflation(self):
+        """§2.2: cascade chain needs ~m parallel rounds but few sequential."""
+        p = make_cascade_chain(length=24)
+        rs = propagate_sequential(p)
+        rp = propagate(p, driver="device_loop")
+        assert rs.rounds <= 3
+        assert int(rp.rounds) >= 24
+        assert bounds_equal(rs.lb, rs.ub, rp.lb, rp.ub)
+
+    def test_round_cap_respected(self):
+        p = make_cascade_chain(length=64)
+        cfg = PropagatorConfig(max_rounds=10)
+        r = propagate(p, cfg=cfg)
+        assert int(r.rounds) <= 10 + 1
+        assert not bool(r.converged)
+
+    def test_no_marking_seq_same_limit(self):
+        p = make_knapsack(n=25, m=6, seed=2)
+        a = propagate_sequential(p, use_marking=True)
+        b = propagate_sequential(p, use_marking=False)
+        assert bounds_equal(a.lb, a.ub, b.lb, b.ub)
+
+
+class TestBoundsEqual:
+    def test_tolerance(self):
+        assert bounds_equal([1.0], [2.0], [1.0 + 1e-9], [2.0 - 1e-9])
+        assert not bounds_equal([1.0], [2.0], [1.1], [2.0])
+
+    def test_infinities_equal(self):
+        assert bounds_equal([-INF], [INF], [-INF * 1.0], [INF])

@@ -1,0 +1,124 @@
+"""Property-based tests (hypothesis) for system invariants:
+
+  * parallel == sequential limit point (paper's central correctness claim);
+  * monotonicity: propagation only tightens domains;
+  * idempotence: the fixed point is stable under one more round;
+  * row-scaling invariance: scaling a row and its sides by 2^k (exact in fp)
+    leaves the limit point unchanged;
+  * ordering invariance: row/col permutations permute the limit point
+    (App. B semantic counterpart).
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    INF,
+    Problem,
+    bounds_equal,
+    csr_from_coo,
+    permute_problem,
+    propagate,
+    propagate_sequential,
+)
+from repro.data.instances import make_mixed
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def problems(draw):
+    m = draw(st.integers(2, 18))
+    n = draw(st.integers(2, 14))
+    density = draw(st.floats(0.2, 0.7))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    nnz_mask = rng.random((m, n)) < density
+    # Ensure at least one nonzero per row.
+    for i in range(m):
+        if not nnz_mask[i].any():
+            nnz_mask[i, rng.integers(0, n)] = True
+    rows, cols = np.nonzero(nnz_mask)
+    vals = rng.choice([-3.0, -2.0, -1.0, 1.0, 2.0, 3.0], size=rows.size)
+    csr = csr_from_coo(rows.astype(np.int32), cols.astype(np.int32), vals, m, n)
+    ub = rng.integers(1, 8, size=n).astype(np.float64)
+    lb = -rng.integers(0, 3, size=n).astype(np.float64)
+    lb[rng.random(n) < 0.15] = -INF
+    ub[rng.random(n) < 0.15] = INF
+    is_int = rng.random(n) < 0.5
+    row_abs = np.zeros(m)
+    np.add.at(row_abs, rows, np.abs(vals) * 2.0)
+    lhs = np.where(rng.random(m) < 0.4, -INF, -row_abs * rng.uniform(0.1, 0.5, m))
+    rhs = np.where(rng.random(m) < 0.2, INF, row_abs * rng.uniform(0.1, 0.5, m))
+    swap = lhs > rhs
+    lhs[swap], rhs[swap] = rhs[swap], lhs[swap]
+    return Problem(csr=csr, lhs=lhs, rhs=rhs, lb=lb, ub=ub, is_int=is_int)
+
+
+@given(problems())
+@settings(**SETTINGS)
+def test_parallel_equals_sequential_limit_point(p):
+    a = propagate_sequential(p)
+    b = propagate(p, driver="device_loop")
+    if a.infeasible or bool(b.infeasible):
+        return  # infeasibility verdicts may be reached at different rounds
+    if not (a.converged and bool(b.converged)):
+        return  # round-cap hit: paper excludes these from comparison (§4.1)
+    assert bounds_equal(a.lb, a.ub, b.lb, b.ub), (
+        np.max(np.abs(a.lb - np.asarray(b.lb))),
+        np.max(np.abs(a.ub - np.asarray(b.ub))),
+    )
+
+
+@given(problems())
+@settings(**SETTINGS)
+def test_monotonicity(p):
+    r = propagate(p)
+    assert np.all(np.asarray(r.lb) >= p.lb - 1e-12)
+    assert np.all(np.asarray(r.ub) <= p.ub + 1e-12)
+
+
+@given(problems())
+@settings(**SETTINGS)
+def test_fixed_point_idempotent(p):
+    r = propagate(p)
+    if bool(r.infeasible) or not bool(r.converged):
+        return
+    p2 = p._replace(lb=np.asarray(r.lb), ub=np.asarray(r.ub))
+    r2 = propagate(p2)
+    assert int(r2.rounds) <= 1  # the confirming round finds nothing
+    assert bounds_equal(r.lb, r.ub, r2.lb, r2.ub)
+
+
+@given(problems(), st.integers(-2, 4))
+@settings(**SETTINGS)
+def test_row_scaling_invariance(p, k):
+    scale = float(2.0**k)
+    csr2 = p.csr._replace(val=p.csr.val * scale)
+    lhs2 = np.where(np.abs(p.lhs) >= INF, p.lhs, p.lhs * scale)
+    rhs2 = np.where(np.abs(p.rhs) >= INF, p.rhs, p.rhs * scale)
+    p2 = p._replace(csr=csr2, lhs=lhs2, rhs=rhs2)
+    a = propagate(p)
+    b = propagate(p2)
+    if bool(a.infeasible) or bool(b.infeasible):
+        return
+    assert bounds_equal(a.lb, a.ub, b.lb, b.ub)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_permutation_invariance(seed):
+    p = make_mixed(m=40, n=30, seed=seed % 100)
+    rng = np.random.default_rng(seed)
+    rp = rng.permutation(p.m)
+    cp = rng.permutation(p.n)
+    p2 = permute_problem(p, rp, cp)
+    a = propagate(p)
+    b = propagate(p2)
+    if bool(a.infeasible) or bool(b.infeasible):
+        return
+    if not (bool(a.converged) and bool(b.converged)):
+        return
+    # b's bounds are a's bounds under the column permutation.
+    assert bounds_equal(
+        np.asarray(a.lb)[cp], np.asarray(a.ub)[cp], b.lb, b.ub
+    )

@@ -1,0 +1,99 @@
+"""Mesh-independent sharding-rule checks: every parameter / cache / batch
+dimension that a rule shards must divide the production mesh axis sizes.
+These catch config regressions without compiling anything (no devices)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.sharding import (
+    _path_str,
+    cache_spec,
+    spec_for_param,
+)
+from repro.models import SHAPES, cell_supported, input_specs
+from repro.models.transformer import init_params
+
+AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+AXIS_SIZES_MULTI = {"pod": 2, "data": 32, "model": 16}  # data widened by pod
+
+
+def _check_divisible(spec, shape, ctx):
+    for dim, ax in zip(shape, tuple(spec)):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = 1
+        for a in axes:
+            total *= AXIS_SIZES[a]
+        assert dim % total == 0, f"{ctx}: dim {dim} not divisible by {axes}={total}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divisible(arch):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    n_sharded = 0
+    for path, leaf in flat:
+        ps = _path_str(path)
+        spec = spec_for_param(ps, len(leaf.shape))
+        _check_divisible(spec, leaf.shape, f"{arch}:{ps}")
+        if any(ax is not None for ax in tuple(spec)):
+            n_sharded += 1
+    # The bulk of parameters must actually be sharded.
+    assert n_sharded >= len(flat) // 3, f"{arch}: too few sharded params"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_no_replicated_giants(arch):
+    """No parameter >64MB may be fully replicated on the production mesh."""
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        ps = _path_str(path)
+        spec = spec_for_param(ps, len(leaf.shape))
+        import math
+
+        bytes_ = math.prod(leaf.shape) * 4
+        if bytes_ > 64 * 2**20:
+            assert any(ax is not None for ax in tuple(spec)), (
+                f"{arch}:{ps} ({bytes_/2**20:.0f} MiB) replicated"
+            )
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        if shape.kind != "decode" or not cell_supported(cfg, shape)[0]:
+            continue
+        specs = input_specs(cfg, shape)
+        flat = jax.tree_util.tree_flatten_with_path(specs["cache"])[0]
+        for path, leaf in flat:
+            ps = "cache/" + _path_str(path)
+            spec = cache_spec(cfg, ps, leaf.shape, ("data",))
+            _check_divisible(spec, leaf.shape, f"{arch}:{shape.name}:{ps}")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_batch_dims_divisible(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        if not cell_supported(cfg, shape)[0]:
+            continue
+        gb = shape.global_batch
+        if gb > 1:
+            assert gb % 16 == 0 and gb % 32 == 0 or gb % 16 == 0, (
+                f"{shape.name}: batch {gb}"
+            )
+
+
+def test_vocab_padding_divisible():
+    from repro.models.transformer import padded_vocab
+
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        assert padded_vocab(cfg) % 256 == 0
+        assert padded_vocab(cfg) >= cfg.vocab_size

@@ -1,0 +1,158 @@
+"""Optimizer, data pipeline, checkpointing, grad compression."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data.tokens import DataConfig, make_batch
+from repro.train.checkpoint import (
+    AsyncCheckpointer,
+    latest_step_dir,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.optimizer import (
+    OptimizerConfig,
+    adamw_update,
+    clip_by_global_norm,
+    compress_grads,
+    cosine_lr,
+    global_norm,
+    init_opt_state,
+)
+
+
+class TestOptimizer:
+    def test_adamw_minimizes_quadratic(self):
+        cfg = OptimizerConfig(lr_peak=0.1, lr_min=0.01, warmup_steps=5,
+                              total_steps=200, weight_decay=0.0)
+        params = {"w": jnp.array([5.0, -3.0, 2.0])}
+        state = init_opt_state(params, cfg)
+        loss = lambda p: jnp.sum(p["w"] ** 2)
+        for _ in range(200):
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw_update(params, g, state, cfg)
+        assert float(loss(params)) < 1e-3
+
+    def test_weight_decay_shrinks(self):
+        cfg = OptimizerConfig(lr_peak=0.1, warmup_steps=0, total_steps=10,
+                              weight_decay=0.5)
+        params = {"w": jnp.array([10.0])}
+        state = init_opt_state(params, cfg)
+        g = {"w": jnp.array([0.0])}
+        params, state, _ = adamw_update(params, g, state, cfg)
+        assert float(params["w"][0]) < 10.0
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert abs(float(norm) - 5.0) < 1e-6
+        assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+    def test_cosine_schedule_endpoints(self):
+        cfg = OptimizerConfig(lr_peak=1.0, lr_min=0.1, warmup_steps=10,
+                              total_steps=100)
+        assert float(cosine_lr(cfg, jnp.int32(0))) == 0.0
+        assert abs(float(cosine_lr(cfg, jnp.int32(10))) - 1.0) < 1e-6
+        assert abs(float(cosine_lr(cfg, jnp.int32(100))) - 0.1) < 1e-6
+
+    def test_bf16_state_dtype(self):
+        cfg = OptimizerConfig(state_dtype="bfloat16")
+        params = {"w": jnp.ones((4,), jnp.float32)}
+        state = init_opt_state(params, cfg)
+        assert state.m["w"].dtype == jnp.bfloat16
+        g = {"w": jnp.full((4,), 0.1, jnp.bfloat16)}
+        params2, state2, _ = adamw_update(params, g, state, cfg)
+        assert state2.m["w"].dtype == jnp.bfloat16
+        assert params2["w"].dtype == jnp.float32
+
+    def test_grad_compression_error_feedback(self):
+        g = {"w": jnp.array([0.1, -0.25, 0.7])}
+        ef = {"w": jnp.zeros(3)}
+        gq, ef2 = compress_grads(g, ef)
+        # Quantized + residual reconstructs the original exactly.
+        np.testing.assert_allclose(
+            np.asarray(gq["w"] + ef2["w"]), np.asarray(g["w"]), rtol=1e-6
+        )
+
+
+class TestData:
+    def test_determinism_and_restart_alignment(self):
+        cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=7)
+        a = make_batch(cfg, step=3)
+        b = make_batch(cfg, step=3)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_shards_partition_batch(self):
+        cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=8, seed=1)
+        s0 = make_batch(cfg, 0, shard=0, num_shards=2)
+        s1 = make_batch(cfg, 0, shard=1, num_shards=2)
+        assert s0["tokens"].shape == (4, 8)
+        assert not np.array_equal(s0["tokens"], s1["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = DataConfig(vocab_size=50, seq_len=12, global_batch=2, seed=2)
+        b = make_batch(cfg, 0)
+        assert b["tokens"].min() >= 0 and b["tokens"].max() < 50
+        assert b["tokens"].shape == b["labels"].shape
+
+
+class TestCheckpoint:
+    def _state(self, v=1.0):
+        return {
+            "params": {"w": jnp.full((3, 2), v), "b": jnp.zeros((2,))},
+            "step_info": jnp.int32(v),
+        }
+
+    def test_roundtrip(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        state = self._state(2.5)
+        save_checkpoint(d, 7, state)
+        restored, step = restore_checkpoint(d, self._state(0.0))
+        assert step == 7
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["w"]), np.asarray(state["params"]["w"])
+        )
+
+    def test_keep_n_retention(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        for s in range(5):
+            save_checkpoint(d, s, self._state(s), keep_n=2)
+        dirs = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert dirs == ["step_00000003", "step_00000004"]
+
+    def test_latest_pointer_and_fallback(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        save_checkpoint(d, 1, self._state())
+        save_checkpoint(d, 2, self._state())
+        assert latest_step_dir(d).endswith("step_00000002")
+        os.remove(os.path.join(d, "LATEST"))  # crash before pointer update
+        assert latest_step_dir(d).endswith("step_00000002")
+
+    def test_restore_empty_dir_returns_init(self, tmp_path):
+        like = self._state(9.0)
+        restored, step = restore_checkpoint(str(tmp_path / "none"), like)
+        assert step == 0
+        assert restored is like
+
+    def test_async_checkpointer(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        ck = AsyncCheckpointer(d, keep_n=2)
+        ck.save(5, self._state(5.0))
+        ck.wait()
+        _, step = restore_checkpoint(d, self._state())
+        assert step == 5
+
+    def test_elastic_reshard_restore(self, tmp_path):
+        """Restore with explicit (single-device) shardings = device_put path."""
+        d = str(tmp_path / "ckpt")
+        save_checkpoint(d, 3, self._state(1.5))
+        dev = jax.devices()[0]
+        sharding = jax.tree.map(
+            lambda _: jax.sharding.SingleDeviceSharding(dev), self._state()
+        )
+        restored, step = restore_checkpoint(d, self._state(), shardings=sharding)
+        assert step == 3
+        assert restored["params"]["w"].devices() == {dev}
