@@ -1,0 +1,94 @@
+"""Perf trajectory for the propagation engines.
+
+Times one round per engine (the jnp-oracle arithmetic of each dataflow --
+on CPU that is the honest number; interpret-mode Pallas timings measure the
+emulator) and measures bytes accessed per round via
+``repro.kernels.round_cost_analysis``, then writes ``BENCH_prop.json`` so
+future PRs have a comparable perf baseline.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+
+from repro.data.instances import instances_for_set
+from repro.kernels import (
+    legacy_round_fn_for,
+    prepare_block_ell,
+    round_cost_analysis,
+    round_fn_for,
+)
+
+from .common import geomean, time_fn
+
+SET = "Set-2"
+PER_FAMILY = 2
+ENGINES = ("fused", "segment", "legacy")
+OUT_PATH = "BENCH_prop.json"
+
+
+def bytes_per_round(engine: str, per_family: int = PER_FAMILY):
+    """Measured bytes/round of one engine over the benchmark set (shared by
+    this module and the roofline table so they report the same population)."""
+    return [
+        round_cost_analysis(p, engine)["bytes_accessed"]
+        for _, p in instances_for_set(SET, per_family=per_family)
+    ]
+
+
+def run(out_path: str = OUT_PATH):
+    insts = instances_for_set(SET, per_family=PER_FAMILY)
+    acc = {e: {"round_us": [], "bytes": []} for e in ENGINES}
+    for spec, p in insts:
+        prep = prepare_block_ell(p)
+        for engine in ENGINES:
+            if engine == "legacy":
+                fn = jax.jit(legacy_round_fn_for(prep, use_pallas=False))
+                lb, ub = prep.d.lb0, prep.d.ub0
+            else:
+                fn = jax.jit(round_fn_for(prep, use_pallas=False, scatter=engine))
+                lb, ub = prep.lb0, prep.ub0
+            fn(lb, ub)[0].block_until_ready()  # compile outside the timer
+            t = time_fn(lambda: fn(lb, ub)[0].block_until_ready())
+            acc[engine]["round_us"].append(t * 1e6)
+            acc[engine]["bytes"].append(
+                round_cost_analysis(p, engine)["bytes_accessed"]
+            )
+
+    report = {
+        "set": SET,
+        "instances": len(insts),
+        "engines": {
+            e: {
+                "geomean_round_us": geomean(v["round_us"]),
+                "geomean_bytes_per_round": geomean(v["bytes"]),
+            }
+            for e, v in acc.items()
+        },
+    }
+    report["bytes_reduction_fused_vs_legacy"] = geomean(
+        [l / f for l, f in zip(acc["legacy"]["bytes"], acc["fused"]["bytes"])]
+    )
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+
+    rows = [
+        (
+            f"bench_prop_{e}",
+            report["engines"][e]["geomean_round_us"],
+            f"geomean_bytes_per_round={report['engines'][e]['geomean_bytes_per_round']:.0f}",
+        )
+        for e in ENGINES
+    ]
+    rows.append(
+        ("bench_prop_json", 0.0,
+         f"written={out_path} "
+         f"bytes_reduction_fused_vs_legacy={report['bytes_reduction_fused_vs_legacy']:.2f}x")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

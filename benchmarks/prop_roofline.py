@@ -75,6 +75,21 @@ def run():
         ("prop_round_measured_cpu", t * 1e6,
          f"nnz={p.csr.nnz} GB/s={b1/t/1e9:.2f} GFLOP/s={f1/t/1e9:.2f}")
     )
+
+    # Measured bytes accessed per round (cost analysis, not the model above):
+    # the fused in-VMEM gather+scatter round vs the seed candidates+segment
+    # dataflow, on Set-2 (the acceptance set for the fused engine).  Shares
+    # bench_prop's measurement so both tables report the same population.
+    from .bench_prop import bytes_per_round
+
+    fused_b = bytes_per_round("fused")
+    legacy_b = bytes_per_round("legacy")
+    reduction = geomean([l / f for l, f in zip(legacy_b, fused_b)])
+    rows.append(
+        ("prop_bytes_per_round_set2", 0.0,
+         f"geomean_fused={geomean(fused_b):.0f}B geomean_legacy={geomean(legacy_b):.0f}B "
+         f"reduction={reduction:.2f}x")
+    )
     return rows
 
 

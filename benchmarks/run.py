@@ -14,6 +14,7 @@ jax.config.update("jax_enable_x64", True)
 def main() -> None:
     from . import (
         baseline_validation,
+        bench_prop,
         block_ell_engine,
         loop_variants,
         ordering,
@@ -32,6 +33,7 @@ def main() -> None:
         ("App C loop variants", loop_variants),
         ("§4.4 propagation roofline", prop_roofline),
         ("beyond-paper: block-ELL engine", block_ell_engine),
+        ("perf trajectory: BENCH_prop.json", bench_prop),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

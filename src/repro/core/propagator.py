@@ -138,12 +138,41 @@ def check_infeasible(lb, ub, feas_eps: float):
 # ---------------------------------------------------------------------------
 
 
+def donate_supported() -> bool:
+    """XLA implements buffer donation on accelerators only; on CPU it is a
+    no-op that warns, so zero-copy drivers request it where it works."""
+    return jax.default_backend() in ("tpu", "gpu", "cuda", "rocm")
+
+
+def donate_kwargs(argnums=None, argnames=None) -> dict:
+    """``jax.jit`` donation kwargs for the zero-copy drivers, empty on
+    backends without donation support (single place for the gating policy)."""
+    if not donate_supported():
+        return {}
+    out = {}
+    if argnums is not None:
+        out["donate_argnums"] = tuple(argnums)
+    if argnames is not None:
+        out["donate_argnames"] = tuple(argnames)
+    return out
+
+
+def owned_copy(x):
+    """Private copy of a cached device array.  The zero-copy drivers donate
+    their bound buffers; handing them copies keeps the DeviceProblem /
+    prepare() caches' initial bounds valid across repeated propagations."""
+    return jnp.array(x, copy=True)
+
+
 def propagate_host_loop(
     dp: DeviceProblem, cfg: PropagatorConfig = DEFAULT_CONFIG
 ) -> PropagationResult:
-    """cpu_loop analogue: host iterates rounds, syncing one flag per round."""
-    round_fn = jax.jit(_round_fn(dp, cfg))
-    lb, ub = dp.lb0, dp.ub0
+    """cpu_loop analogue: host iterates rounds, syncing one flag per round.
+
+    Zero-copy: (lb, ub) are donated each call, so XLA reuses the same two
+    bound buffers round over round instead of allocating fresh ones."""
+    round_fn = jax.jit(_round_fn(dp, cfg), **donate_kwargs(argnames=("lb", "ub")))
+    lb, ub = owned_copy(dp.lb0), owned_copy(dp.ub0)
     rounds = 0
     changed = True
     while changed and rounds < cfg.max_rounds:
@@ -185,10 +214,13 @@ def _device_fixed_point(round_fn, lb0, ub0, max_rounds: int, unroll: int = 1):
 def propagate_device_loop(
     dp: DeviceProblem, cfg: PropagatorConfig = DEFAULT_CONFIG, unroll: int = 1
 ) -> PropagationResult:
-    """gpu_loop analogue: the whole fixed point is one XLA dispatch."""
+    """gpu_loop analogue: the whole fixed point is one XLA dispatch.
+
+    Zero-copy: the initial bounds are donated into the while_loop carry, so
+    the fixed point runs in place on two device buffers."""
     round_fn = _round_fn(dp, cfg)
 
-    @jax.jit
+    @functools.partial(jax.jit, **donate_kwargs(argnums=(0, 1)))
     def run(lb0, ub0):
         lb, ub, changed, rounds = _device_fixed_point(
             round_fn, lb0, ub0, cfg.max_rounds, unroll=unroll
@@ -196,7 +228,7 @@ def propagate_device_loop(
         infeasible = check_infeasible(lb, ub, cfg.feas_eps)
         return lb, ub, rounds, ~changed, infeasible
 
-    lb, ub, rounds, converged, infeasible = run(dp.lb0, dp.ub0)
+    lb, ub, rounds, converged, infeasible = run(owned_copy(dp.lb0), owned_copy(dp.ub0))
     return PropagationResult(lb, ub, rounds, converged, infeasible)
 
 

@@ -24,11 +24,29 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+
+try:  # jax >= 0.6 exports shard_map at the top level
+    from jax import shard_map as _shard_map
+except ImportError:  # older jax: experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """Version-compatible ``shard_map``: newer jax spells the "skip the
+    varying-manual-axes check" flag ``check_vma``, older jax ``check_rep``."""
+    try:
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    except TypeError:
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+        )
 
 from . import activities as act
 from . import bounds as bnd
+from .propagator import donate_kwargs
 from .sparse import Problem
 from .types import DEFAULT_CONFIG, INF, PropagationResult, PropagatorConfig
 
@@ -141,7 +159,9 @@ def propagate_sharded(
         out_specs=(rep, rep, rep, rep, rep),
         check_vma=False,
     )
-    lb, ub, rounds, converged, infeasible = jax.jit(fn)(
+    # Zero-copy fixed point: the freshly built bound buffers are donated into
+    # the on-device while_loop where the backend implements donation.
+    lb, ub, rounds, converged, infeasible = jax.jit(fn, **donate_kwargs(argnums=(6, 7)))(
         row_id, col, val, lhs, rhs, is_int, lb0, ub0
     )
     return PropagationResult(lb, ub, rounds, converged, infeasible)
@@ -277,7 +297,7 @@ def propagate_sharded_rows(
         out_specs=(rep, rep, rep, rep, rep),
         check_vma=False,
     )
-    lb, ub, r, converged, infeasible = jax.jit(fn)(
+    lb, ub, r, converged, infeasible = jax.jit(fn, **donate_kwargs(argnums=(6, 7)))(
         jnp.asarray(lrow), jnp.asarray(col), jnp.asarray(val, dtype=dtype),
         jnp.asarray(lhs, dtype=dtype), jnp.asarray(rhs, dtype=dtype),
         jnp.asarray(p.is_int),

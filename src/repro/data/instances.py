@@ -17,6 +17,7 @@ the set boundaries keep the paper's *relative* 2x spacing.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Callable, Dict, List, Tuple
 
 import numpy as np
@@ -293,7 +294,9 @@ def instances_for_set(
 ) -> List[Tuple[InstanceSpec, Problem]]:
     lo, hi = next((a, b) for nm, a, b in SIZE_SETS if nm == set_name)
     out = []
-    rng = np.random.default_rng(hash(set_name) % (2**32))
+    # NOT hash(): str hashes are salted per process (PYTHONHASHSEED), which
+    # silently made every benchmark run on a different instance draw.
+    rng = np.random.default_rng(zlib.crc32(set_name.encode("utf-8")))
     for fam in families:
         for k in range(per_family):
             size = int(rng.integers(lo, hi))

@@ -1,12 +1,28 @@
 """Pallas TPU kernels for the paper's compute hot spot -- the fused
 propagation round (Alg. 3) -- plus jnp oracles (ref.py) and the jit'd
-block-ELL propagation engine (ops.py)."""
+block-ELL propagation engine (ops.py) with its fully fused scatter round."""
 from .ops import (
     DeviceBlockEll,
+    PreparedBlockEll,
     device_block_ell,
+    prepare_block_ell,
+    clear_prepare_cache,
     block_ell_round,
+    round_fn_for,
+    legacy_round_fn_for,
+    round_cost_analysis,
     propagate_block_ell,
     rows_fit_one_chunk,
+    SCATTER_MAX_NPAD,
 )
-from .prop_round import activities_tiles, candidates_tiles, fused_round_tiles
+from .prop_round import (
+    activities_tiles,
+    activities_gather_tiles,
+    candidates_tiles,
+    fused_round_tiles,
+    fused_scatter_round_tiles,
+    candidates_scatter_tiles,
+    apply_updates_tiles,
+    col_pad,
+)
 from . import ref

@@ -6,7 +6,10 @@ On the target (TPU v5e) K=128 matches the lane width and R=8 the sublane
 count, so a tile is exactly one VREG-aligned VMEM block; grid steps pipeline
 HBM->VMEM DMAs of consecutive tiles.
 
-Three kernels:
+Kernel inventory
+----------------
+
+Split-phase kernels (general case, long rows span chunks):
 
   * ``_activities_kernel``  -- per-chunk activity partials + inf counters
                                (CSR-stream/CSR-vector unified: long rows span
@@ -20,10 +23,35 @@ Three kernels:
                                (activities stay in VMEM and are reused
                                immediately -- the shared-memory trick).
 
-All kernels are elementwise/reduction over dense tiles: the irregular
-gather (bounds at column ids) and scatter (column-wise min/max merge) live
-outside in XLA, which on TPU lowers them to dynamic-gather / segment ops.
-Kernels are validated on CPU via ``interpret=True`` against ``ref.py``.
+Fully fused scatter kernels (the zero-HBM-tensor round engine):
+
+  * ``_fused_scatter_kernel``      -- bound gather + activities + candidates
+        + column-wise best-bound reduction in ONE kernel.  The bound vectors
+        and the ``(2, n_pad)`` best-bound accumulators live in VMEM and are
+        revisited by every grid step (the TPU grid is sequential, so a block
+        whose index map is constant acts as an on-chip reduction buffer);
+        neither the gathered bounds nor the candidates EVER touch HBM.  The
+        column scatter is the atomic-free replacement for the paper's
+        atomicMax/atomicMin: a lane-blocked one-hot compare-and-reduce
+        against each 128-wide column block (see ``_scatter_tile``); the
+        gather is its exact dual (see ``_gather_bounds_tile``).
+  * ``_activities_gather_kernel``  -- activity partials with the in-kernel
+        bound gather, for rows spanning several chunks (partials are
+        segment-combined outside, they are only (T, R)-sized).
+  * ``_candidates_scatter_kernel`` -- same fused gather+scatter, but
+        candidates are computed from completed row aggregates gathered per
+        chunk (rows that span several chunks; the CSR-vector analogue).
+  * ``_apply_updates_kernel``      -- the small merge kernel: folds the
+        accumulated best bounds into (lb, ub) with the shared
+        ``bounds.apply_updates`` semantics.  ``input_output_aliases`` donates
+        the bound buffers so the fixed-point loop updates bounds in place.
+
+In the fused engine the irregular gather itself moves into the kernels
+(``_gather_bounds_tile``): the bound vectors ride along as VMEM-resident
+``(1, n_pad)`` blocks, so no nnz-proportional tensor exists in HBM at all
+during a round -- per grid step HBM only streams the tile's static matrix
+data.  Kernels are validated on CPU via ``interpret=True`` against
+``ref.py``.
 """
 from __future__ import annotations
 
@@ -33,7 +61,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core import bounds as bnd
 from ..core.types import INF
+
+# Column accumulators are padded to a multiple of the TPU lane width so the
+# in-kernel scatter can walk aligned 128-wide column blocks.
+LANE = 128
+
+
+def col_pad(n: int, lane: int = LANE) -> int:
+    """Columns padded up to a lane-width multiple (scatter accumulator size)."""
+    return max(lane, -(-n // lane) * lane)
 
 
 def _on_cpu() -> bool:
@@ -41,85 +79,14 @@ def _on_cpu() -> bool:
 
 
 # ---------------------------------------------------------------------------
-# Kernel A: activity partials
+# Shared tile math (used by every kernel AND by the jnp oracles in ref.py)
 # ---------------------------------------------------------------------------
 
 
-def _activities_kernel(val_ref, lb_ref, ub_ref, mf_ref, mc_ref, xf_ref, xc_ref, *, inf):
-    val = val_ref[...]          # (1, R, K) VMEM block
-    lb_g = lb_ref[...]
-    ub_g = ub_ref[...]
-    pos = val > 0
-    pad = val == 0
-    b_min = jnp.where(pos, lb_g, ub_g)
-    b_max = jnp.where(pos, ub_g, lb_g)
-    min_is_inf = (jnp.abs(b_min) >= inf) & ~pad
-    max_is_inf = (jnp.abs(b_max) >= inf) & ~pad
-    mf_ref[...] = jnp.where(min_is_inf | pad, 0.0, val * b_min).sum(axis=-1)
-    xf_ref[...] = jnp.where(max_is_inf | pad, 0.0, val * b_max).sum(axis=-1)
-    mc_ref[...] = min_is_inf.astype(jnp.int32).sum(axis=-1)
-    xc_ref[...] = max_is_inf.astype(jnp.int32).sum(axis=-1)
+def tile_contributions(val, lb_g, ub_g, inf):
+    """Per-nonzero activity contributions of one (or many) (.., R, K) tiles.
 
-
-def activities_tiles(val, lb_g, ub_g, inf: float = INF, interpret: bool | None = None):
-    """Pallas-backed per-chunk activity partials. Shapes: (T, R, K) -> (T, R)."""
-    if interpret is None:
-        interpret = _on_cpu()
-    t, r, k = val.shape
-    dtype = val.dtype
-    tile = pl.BlockSpec((1, r, k), lambda i: (i, 0, 0))
-    out_tile = pl.BlockSpec((1, r), lambda i: (i, 0))
-    out_shape = [
-        jax.ShapeDtypeStruct((t, r), dtype),
-        jax.ShapeDtypeStruct((t, r), jnp.int32),
-        jax.ShapeDtypeStruct((t, r), dtype),
-        jax.ShapeDtypeStruct((t, r), jnp.int32),
-    ]
-    fn = pl.pallas_call(
-        functools.partial(_activities_kernel, inf=inf),
-        grid=(t,),
-        in_specs=[tile, tile, tile],
-        out_specs=[out_tile, out_tile, out_tile, out_tile],
-        out_shape=out_shape,
-        interpret=interpret,
-    )
-    mf, mc, xf, xc = fn(val, lb_g, ub_g)
-    return mf, mc, xf, xc
-
-
-# ---------------------------------------------------------------------------
-# Kernel B: candidates from completed row aggregates
-# ---------------------------------------------------------------------------
-
-
-def _candidates_kernel(
-    val_ref,
-    lb_ref,
-    ub_ref,
-    ii_ref,
-    rmf_ref,
-    rmc_ref,
-    rxf_ref,
-    rxc_ref,
-    lhs_ref,
-    rhs_ref,
-    lc_ref,
-    uc_ref,
-    *,
-    int_eps,
-    inf,
-):
-    val = val_ref[...]            # (1, R, K)
-    lb_g = lb_ref[...]
-    ub_g = ub_ref[...]
-    is_int_g = ii_ref[...] != 0
-    rmf = rmf_ref[...][..., None]  # (1, R, 1)
-    rmc = rmc_ref[...][..., None]
-    rxf = rxf_ref[...][..., None]
-    rxc = rxc_ref[...][..., None]
-    lhs_b = lhs_ref[...][..., None]
-    rhs_b = rhs_ref[...][..., None]
-
+    Returns (pos, pad, min_is_inf, max_is_inf, c_min, c_max)."""
     pos = val > 0
     pad = val == 0
     b_min = jnp.where(pos, lb_g, ub_g)
@@ -128,6 +95,35 @@ def _candidates_kernel(
     max_is_inf = (jnp.abs(b_max) >= inf) & ~pad
     c_min = jnp.where(min_is_inf | pad, 0.0, val * b_min)
     c_max = jnp.where(max_is_inf | pad, 0.0, val * b_max)
+    return pos, pad, min_is_inf, max_is_inf, c_min, c_max
+
+
+def tile_candidates(
+    val,
+    lb_g,
+    ub_g,
+    is_int_g,
+    row_min_fin,
+    row_min_cnt,
+    row_max_fin,
+    row_max_cnt,
+    lhs,
+    rhs,
+    int_eps,
+    inf,
+):
+    """Residual activities (§3.4 single-infinity rule) + bound candidates
+    (Eqs. 4/5) + integrality rounding.  Row aggregates / sides are (.., R)
+    and broadcast over the K axis.  Pure jnp: callable inside kernels."""
+    pos, pad, min_is_inf, max_is_inf, c_min, c_max = tile_contributions(
+        val, lb_g, ub_g, inf
+    )
+    rmf = row_min_fin[..., None]
+    rmc = row_min_cnt[..., None]
+    rxf = row_max_fin[..., None]
+    rxc = row_max_cnt[..., None]
+    lhs_b = lhs[..., None]
+    rhs_b = rhs[..., None]
 
     min_res = jnp.where(
         min_is_inf,
@@ -159,8 +155,156 @@ def _candidates_kernel(
 
     do_l = is_int_g & (jnp.abs(lcand) < inf)
     do_u = is_int_g & (jnp.abs(ucand) < inf)
-    lc_ref[...] = jnp.where(do_l, jnp.ceil(lcand - int_eps), lcand)
-    uc_ref[...] = jnp.where(do_u, jnp.floor(ucand + int_eps), ucand)
+    lcand = jnp.where(do_l, jnp.ceil(lcand - int_eps), lcand)
+    ucand = jnp.where(do_u, jnp.floor(ucand + int_eps), ucand)
+    return lcand, ucand
+
+
+def tile_row_aggregates(val, lb_g, ub_g, inf):
+    """In-register row aggregates of a chunk-complete tile (.., R)."""
+    _, _, min_is_inf, max_is_inf, c_min, c_max = tile_contributions(
+        val, lb_g, ub_g, inf
+    )
+    rmf = c_min.sum(axis=-1)
+    rxf = c_max.sum(axis=-1)
+    rmc = min_is_inf.sum(axis=-1, dtype=jnp.int32)
+    rxc = max_is_inf.sum(axis=-1, dtype=jnp.int32)
+    return rmf, rmc, rxf, rxc
+
+
+# ---------------------------------------------------------------------------
+# Kernel A: activity partials
+# ---------------------------------------------------------------------------
+
+
+def _activities_kernel(val_ref, lb_ref, ub_ref, mf_ref, mc_ref, xf_ref, xc_ref, *, inf):
+    # (1, R, K) VMEM blocks -> (1, R) per-chunk partials.
+    rmf, rmc, rxf, rxc = tile_row_aggregates(val_ref[...], lb_ref[...], ub_ref[...], inf)
+    mf_ref[...] = rmf
+    mc_ref[...] = rmc
+    xf_ref[...] = rxf
+    xc_ref[...] = rxc
+
+
+def activities_tiles(val, lb_g, ub_g, inf: float = INF, interpret: bool | None = None):
+    """Pallas-backed per-chunk activity partials. Shapes: (T, R, K) -> (T, R)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    t, r, k = val.shape
+    dtype = val.dtype
+    tile = pl.BlockSpec((1, r, k), lambda i: (i, 0, 0))
+    out_tile = pl.BlockSpec((1, r), lambda i: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((t, r), dtype),
+        jax.ShapeDtypeStruct((t, r), jnp.int32),
+        jax.ShapeDtypeStruct((t, r), dtype),
+        jax.ShapeDtypeStruct((t, r), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_activities_kernel, inf=inf),
+        grid=(t,),
+        in_specs=[tile, tile, tile],
+        out_specs=[out_tile, out_tile, out_tile, out_tile],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    mf, mc, xf, xc = fn(val, lb_g, ub_g)
+    return mf, mc, xf, xc
+
+
+def _activities_gather_kernel(
+    val_ref, col_ref, lb_ref, ub_ref, mf_ref, mc_ref, xf_ref, xc_ref, *, inf, block
+):
+    """Kernel A': activity partials with the bound gather done in-kernel
+    from the VMEM-resident (1, n_pad) bound vectors (no HBM-side gather)."""
+    val = val_ref[...]
+    r, k = val.shape[-2:]
+    val = val.reshape(r, k)
+    col = col_ref[...].reshape(r, k)
+    lb_g, ub_g = _gather_bounds_tile(col, lb_ref, ub_ref, block=block)
+    rmf, rmc, rxf, rxc = tile_row_aggregates(val, lb_g, ub_g, inf)
+    mf_ref[...] = rmf.reshape(1, r)
+    mc_ref[...] = rmc.reshape(1, r)
+    xf_ref[...] = rxf.reshape(1, r)
+    xc_ref[...] = rxc.reshape(1, r)
+
+
+def activities_gather_tiles(
+    val,
+    col,
+    lb,
+    ub,
+    n_pad: int,
+    inf: float = INF,
+    interpret: bool | None = None,
+    block: int = LANE,
+):
+    """Per-chunk activity partials with in-kernel bound gather.
+
+    (T, R, K) tiles + (n_pad,) bounds -> 4 x (T, R); the gathered-bound
+    tensors never exist in HBM."""
+    if interpret is None:
+        interpret = _on_cpu()
+    if n_pad % block:
+        raise ValueError(f"n_pad={n_pad} must be a multiple of block={block}")
+    t, r, k = val.shape
+    dtype = val.dtype
+    tile = pl.BlockSpec((1, r, k), lambda i: (i, 0, 0))
+    vec = pl.BlockSpec((1, n_pad), lambda i: (0, 0))
+    out_tile = pl.BlockSpec((1, r), lambda i: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((t, r), dtype),
+        jax.ShapeDtypeStruct((t, r), jnp.int32),
+        jax.ShapeDtypeStruct((t, r), dtype),
+        jax.ShapeDtypeStruct((t, r), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_activities_gather_kernel, inf=inf, block=block),
+        grid=(t,),
+        in_specs=[tile, tile, vec, vec],
+        out_specs=[out_tile, out_tile, out_tile, out_tile],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(val, col, lb.reshape(1, n_pad), ub.reshape(1, n_pad))
+
+
+# ---------------------------------------------------------------------------
+# Kernel B: candidates from completed row aggregates
+# ---------------------------------------------------------------------------
+
+
+def _candidates_kernel(
+    val_ref,
+    lb_ref,
+    ub_ref,
+    ii_ref,
+    rmf_ref,
+    rmc_ref,
+    rxf_ref,
+    rxc_ref,
+    lhs_ref,
+    rhs_ref,
+    lc_ref,
+    uc_ref,
+    *,
+    int_eps,
+    inf,
+):
+    lc_ref[...], uc_ref[...] = tile_candidates(
+        val_ref[...],
+        lb_ref[...],
+        ub_ref[...],
+        ii_ref[...] != 0,
+        rmf_ref[...],
+        rmc_ref[...],
+        rxf_ref[...],
+        rxc_ref[...],
+        lhs_ref[...],
+        rhs_ref[...],
+        int_eps,
+        inf,
+    )
 
 
 def candidates_tiles(
@@ -222,55 +366,12 @@ def _fused_round_kernel(
     val = val_ref[...]
     lb_g = lb_ref[...]
     ub_g = ub_ref[...]
-    pos = val > 0
-    pad = val == 0
-    b_min = jnp.where(pos, lb_g, ub_g)
-    b_max = jnp.where(pos, ub_g, lb_g)
-    min_is_inf = (jnp.abs(b_min) >= inf) & ~pad
-    max_is_inf = (jnp.abs(b_max) >= inf) & ~pad
-    c_min = jnp.where(min_is_inf | pad, 0.0, val * b_min)
-    c_max = jnp.where(max_is_inf | pad, 0.0, val * b_max)
-
     # Row aggregates entirely in VMEM (the paper's shared-memory reuse).
-    rmf = c_min.sum(axis=-1, keepdims=True)
-    rxf = c_max.sum(axis=-1, keepdims=True)
-    rmc = min_is_inf.astype(jnp.int32).sum(axis=-1, keepdims=True)
-    rxc = max_is_inf.astype(jnp.int32).sum(axis=-1, keepdims=True)
-
-    min_res = jnp.where(
-        min_is_inf,
-        jnp.where(rmc == 1, rmf, -inf),
-        jnp.where(rmc == 0, rmf - c_min, -inf),
+    rmf, rmc, rxf, rxc = tile_row_aggregates(val, lb_g, ub_g, inf)
+    lc_ref[...], uc_ref[...] = tile_candidates(
+        val, lb_g, ub_g, ii_ref[...] != 0,
+        rmf, rmc, rxf, rxc, lhs_ref[...], rhs_ref[...], int_eps, inf,
     )
-    max_res = jnp.where(
-        max_is_inf,
-        jnp.where(rxc == 1, rxf, inf),
-        jnp.where(rxc == 0, rxf - c_max, inf),
-    )
-
-    lhs_b = lhs_ref[...][..., None]
-    rhs_b = rhs_ref[...][..., None]
-    safe_a = jnp.where(pad, 1.0, val)
-    num_l = jnp.where(pos, lhs_b - max_res, rhs_b - min_res)
-    num_u = jnp.where(pos, rhs_b - min_res, lhs_b - max_res)
-    lcand = num_l / safe_a
-    ucand = num_u / safe_a
-    valid_l = (
-        jnp.where(pos, (lhs_b > -inf) & (max_res < inf), (rhs_b < inf) & (min_res > -inf))
-        & ~pad
-    )
-    valid_u = (
-        jnp.where(pos, (rhs_b < inf) & (min_res > -inf), (lhs_b > -inf) & (max_res < inf))
-        & ~pad
-    )
-    lcand = jnp.where(valid_l, jnp.clip(lcand, -inf, inf), -inf)
-    ucand = jnp.where(valid_u, jnp.clip(ucand, -inf, inf), inf)
-
-    is_int_g = ii_ref[...] != 0
-    do_l = is_int_g & (jnp.abs(lcand) < inf)
-    do_u = is_int_g & (jnp.abs(ucand) < inf)
-    lc_ref[...] = jnp.where(do_l, jnp.ceil(lcand - int_eps), lcand)
-    uc_ref[...] = jnp.where(do_u, jnp.floor(ucand + int_eps), ucand)
 
 
 def fused_round_tiles(
@@ -304,3 +405,315 @@ def fused_round_tiles(
         interpret=interpret,
     )
     return fn(val, lb_g, ub_g, is_int_g.astype(jnp.int32), lhs_g, rhs_g)
+
+
+# ---------------------------------------------------------------------------
+# Kernels D/E: fused column scatter -- candidates never leave VMEM
+# ---------------------------------------------------------------------------
+
+
+def _scatter_tile(lcand, ucand, col, bl_ref, bu_ref, *, inf, block):
+    """Column-wise max/min merge of one (1, R, K) candidate tile into the
+    (1, n_pad) best-bound accumulators resident in VMEM.
+
+    The scatter is expressed as a lane-blocked one-hot reduction: for each
+    aligned ``block``-wide column window, compare column ids against the
+    window's lanes, reduce hits, and combine into the accumulator window.
+    The slot axis is walked one sublane row at a time (inner loop over R) so
+    the one-hot working set is a single (K, block) VREG-sized mask instead
+    of an (R*K, block) buffer.  max/min are associative and commutative, so
+    the result is bit-identical to a global segment reduction regardless of
+    tile or visit order.  Padding slots carry sentinel candidates
+    (-inf/+inf) and are absorbed as reduction identity.
+    """
+    r, k = lcand.shape[-2], lcand.shape[-1]
+    lc = lcand.reshape(r, k)
+    uc = ucand.reshape(r, k)
+    cc = col.reshape(r, k)
+    n_pad = bl_ref.shape[-1]
+    dtype = lc.dtype
+
+    def col_block(j, carry):
+        base = j * block
+        lanes = base + jax.lax.broadcasted_iota(jnp.int32, (k, block), 1)
+
+        def row_step(i, best):
+            best_l, best_u = best
+            ci = jax.lax.dynamic_slice_in_dim(cc, i, 1, 0).reshape(k)
+            li = jax.lax.dynamic_slice_in_dim(lc, i, 1, 0).reshape(k)
+            ui = jax.lax.dynamic_slice_in_dim(uc, i, 1, 0).reshape(k)
+            hit = ci[:, None] == lanes
+            best_l = jnp.maximum(best_l, jnp.where(hit, li[:, None], -inf).max(axis=0))
+            best_u = jnp.minimum(best_u, jnp.where(hit, ui[:, None], inf).min(axis=0))
+            return best_l, best_u
+
+        best_l, best_u = jax.lax.fori_loop(
+            0,
+            r,
+            row_step,
+            (jnp.full((block,), -inf, dtype), jnp.full((block,), inf, dtype)),
+        )
+        bl_ref[0, pl.ds(base, block)] = jnp.maximum(
+            bl_ref[0, pl.ds(base, block)], best_l
+        )
+        bu_ref[0, pl.ds(base, block)] = jnp.minimum(
+            bu_ref[0, pl.ds(base, block)], best_u
+        )
+        return carry
+
+    jax.lax.fori_loop(0, n_pad // block, col_block, 0)
+
+
+def _init_accumulators(bl_ref, bu_ref, inf):
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        bl_ref[...] = jnp.full_like(bl_ref[...], -inf)
+        bu_ref[...] = jnp.full_like(bu_ref[...], inf)
+
+
+def _gather_bounds_tile(col, lb_ref, ub_ref, *, block):
+    """In-kernel bound gather: reconstruct (lb, ub) at each tile slot from
+    the (1, n_pad) bound vectors resident in VMEM.
+
+    Dual of ``_scatter_tile``: for each aligned ``block``-wide column
+    window, one-hot-select the window's bound lanes into the matching slots
+    and accumulate by sum -- every slot's column id matches exactly one lane
+    of exactly one window, so the sum has a single nonzero term and the
+    gather is exact.  This removes the per-round XLA gather entirely: the
+    (T, R, K) gathered-bound tensors never exist in HBM.
+    """
+    r, k = col.shape
+    n_pad = lb_ref.shape[-1]
+    dtype = lb_ref.dtype
+
+    def row(i, acc):
+        lbg, ubg = acc
+        ci = jax.lax.dynamic_slice_in_dim(col, i, 1, 0).reshape(k)
+
+        def win(j, rowacc):
+            gl, gu = rowacc
+            base = j * block
+            lanes = base + jax.lax.broadcasted_iota(jnp.int32, (k, block), 1)
+            hit = ci[:, None] == lanes
+            lb_w = lb_ref[0, pl.ds(base, block)]
+            ub_w = ub_ref[0, pl.ds(base, block)]
+            gl = gl + jnp.where(hit, lb_w[None, :], 0.0).sum(axis=1)[None]
+            gu = gu + jnp.where(hit, ub_w[None, :], 0.0).sum(axis=1)[None]
+            return gl, gu
+
+        gl, gu = jax.lax.fori_loop(
+            0,
+            n_pad // block,
+            win,
+            (jnp.zeros((1, k), dtype), jnp.zeros((1, k), dtype)),
+        )
+        lbg = jax.lax.dynamic_update_slice_in_dim(lbg, gl, i, 0)
+        ubg = jax.lax.dynamic_update_slice_in_dim(ubg, gu, i, 0)
+        return lbg, ubg
+
+    return jax.lax.fori_loop(
+        0, r, row, (jnp.zeros((r, k), dtype), jnp.zeros((r, k), dtype))
+    )
+
+
+def _fused_scatter_kernel(
+    val_ref, col_ref, ii_ref, lhs_ref, rhs_ref, lb_ref, ub_ref,
+    bl_ref, bu_ref, *, int_eps, inf, block,
+):
+    """Kernel D: the whole round for chunk-complete rows.  Bound gather,
+    activities, residuals, candidates AND the column-wise best-bound
+    reduction happen in VMEM; per grid step HBM only streams the tile's
+    matrix data (val, col, is_int) -- the bound vectors and the (2, n_pad)
+    accumulators stay resident across all steps."""
+    _init_accumulators(bl_ref, bu_ref, inf)
+    val = val_ref[...]
+    r, k = val.shape[-2:]
+    val = val.reshape(r, k)
+    col = col_ref[...].reshape(r, k)
+    lb_g, ub_g = _gather_bounds_tile(col, lb_ref, ub_ref, block=block)
+    rmf, rmc, rxf, rxc = tile_row_aggregates(val, lb_g, ub_g, inf)
+    lcand, ucand = tile_candidates(
+        val, lb_g, ub_g, ii_ref[...].reshape(r, k) != 0,
+        rmf, rmc, rxf, rxc,
+        lhs_ref[...].reshape(r), rhs_ref[...].reshape(r), int_eps, inf,
+    )
+    _scatter_tile(lcand, ucand, col, bl_ref, bu_ref, inf=inf, block=block)
+
+
+def fused_scatter_round_tiles(
+    val,
+    col,
+    is_int_g,
+    lhs_g,
+    rhs_g,
+    lb,
+    ub,
+    n_pad: int,
+    int_eps: float,
+    inf: float = INF,
+    interpret: bool | None = None,
+    block: int = LANE,
+):
+    """Fully fused round: (T, R, K) tiles + (n_pad,) bounds -> (n_pad,)
+    best_l / best_u.
+
+    Neither the gathered-bound nor the candidate tensors ever materialize
+    in HBM.  Requires max row length <= K (rows complete within their
+    chunk) and n_pad % block == 0."""
+    if interpret is None:
+        interpret = _on_cpu()
+    if n_pad % block:
+        raise ValueError(f"n_pad={n_pad} must be a multiple of block={block}")
+    t, r, k = val.shape
+    dtype = val.dtype
+    tile = pl.BlockSpec((1, r, k), lambda i: (i, 0, 0))
+    row_tile = pl.BlockSpec((1, r), lambda i: (i, 0))
+    vec = pl.BlockSpec((1, n_pad), lambda i: (0, 0))  # resident every step
+    out_shape = [
+        jax.ShapeDtypeStruct((1, n_pad), dtype),
+        jax.ShapeDtypeStruct((1, n_pad), dtype),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_fused_scatter_kernel, int_eps=int_eps, inf=inf, block=block),
+        grid=(t,),
+        in_specs=[tile, tile, tile, row_tile, row_tile, vec, vec],
+        out_specs=[vec, vec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    best_l, best_u = fn(
+        val, col, is_int_g.astype(jnp.int32), lhs_g, rhs_g,
+        lb.reshape(1, n_pad), ub.reshape(1, n_pad),
+    )
+    return best_l.reshape(n_pad), best_u.reshape(n_pad)
+
+
+def _candidates_scatter_kernel(
+    val_ref, col_ref, ii_ref,
+    rmf_ref, rmc_ref, rxf_ref, rxc_ref, lhs_ref, rhs_ref,
+    lb_ref, ub_ref, bl_ref, bu_ref, *, int_eps, inf, block,
+):
+    """Kernel E: in-kernel bound gather + candidates from completed row
+    aggregates + in-VMEM column scatter (rows spanning several chunks;
+    aggregates combined outside)."""
+    _init_accumulators(bl_ref, bu_ref, inf)
+    val = val_ref[...]
+    r, k = val.shape[-2:]
+    val = val.reshape(r, k)
+    col = col_ref[...].reshape(r, k)
+    lb_g, ub_g = _gather_bounds_tile(col, lb_ref, ub_ref, block=block)
+    lcand, ucand = tile_candidates(
+        val, lb_g, ub_g, ii_ref[...].reshape(r, k) != 0,
+        rmf_ref[...].reshape(r), rmc_ref[...].reshape(r),
+        rxf_ref[...].reshape(r), rxc_ref[...].reshape(r),
+        lhs_ref[...].reshape(r), rhs_ref[...].reshape(r), int_eps, inf,
+    )
+    _scatter_tile(lcand, ucand, col, bl_ref, bu_ref, inf=inf, block=block)
+
+
+def candidates_scatter_tiles(
+    val,
+    col,
+    is_int_g,
+    row_min_fin,
+    row_min_cnt,
+    row_max_fin,
+    row_max_cnt,
+    lhs_g,
+    rhs_g,
+    lb,
+    ub,
+    n_pad: int,
+    int_eps: float,
+    inf: float = INF,
+    interpret: bool | None = None,
+    block: int = LANE,
+):
+    """Candidates + fused column reduction: (T, R, K) tiles + (T, R) row
+    aggregates + (n_pad,) bounds -> (n_pad,) x2.  Neither the gathered
+    bounds nor the candidates ever materialize in HBM."""
+    if interpret is None:
+        interpret = _on_cpu()
+    if n_pad % block:
+        raise ValueError(f"n_pad={n_pad} must be a multiple of block={block}")
+    t, r, k = val.shape
+    dtype = val.dtype
+    tile = pl.BlockSpec((1, r, k), lambda i: (i, 0, 0))
+    row_tile = pl.BlockSpec((1, r), lambda i: (i, 0))
+    vec = pl.BlockSpec((1, n_pad), lambda i: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((1, n_pad), dtype),
+        jax.ShapeDtypeStruct((1, n_pad), dtype),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(
+            _candidates_scatter_kernel, int_eps=int_eps, inf=inf, block=block
+        ),
+        grid=(t,),
+        in_specs=[tile, tile, tile,
+                  row_tile, row_tile, row_tile, row_tile, row_tile, row_tile,
+                  vec, vec],
+        out_specs=[vec, vec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    best_l, best_u = fn(
+        val, col, is_int_g.astype(jnp.int32),
+        row_min_fin, row_min_cnt, row_max_fin, row_max_cnt, lhs_g, rhs_g,
+        lb.reshape(1, n_pad), ub.reshape(1, n_pad),
+    )
+    return best_l.reshape(n_pad), best_u.reshape(n_pad)
+
+
+# ---------------------------------------------------------------------------
+# Kernel F: merge -- fold best bounds into (lb, ub) in place
+# ---------------------------------------------------------------------------
+
+
+def _apply_updates_kernel(
+    lb_ref, ub_ref, bl_ref, bu_ref, nlb_ref, nub_ref, ch_ref, *, eps, inf
+):
+    new_lb, new_ub, changed = bnd.apply_updates(
+        lb_ref[...], ub_ref[...], bl_ref[...], bu_ref[...], eps, inf
+    )
+    nlb_ref[...] = new_lb
+    nub_ref[...] = new_ub
+    ch_ref[...] = changed.astype(jnp.int32).reshape(1, 1)
+
+
+def apply_updates_tiles(
+    lb,
+    ub,
+    best_l,
+    best_u,
+    eps: float,
+    inf: float = INF,
+    interpret: bool | None = None,
+):
+    """Pallas merge kernel: (n_pad,) bounds x best candidates -> updated
+    bounds + changed flag.  The bound buffers are donated
+    (``input_output_aliases``) so the update is in place on device.
+
+    Shares ``bounds.apply_updates`` with every other engine, so all paths
+    converge to identical fixed points by construction."""
+    if interpret is None:
+        interpret = _on_cpu()
+    (n_pad,) = lb.shape
+    dtype = lb.dtype
+    vec = pl.BlockSpec((1, n_pad), lambda: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((1, n_pad), dtype),
+        jax.ShapeDtypeStruct((1, n_pad), dtype),
+        jax.ShapeDtypeStruct((1, 1), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_apply_updates_kernel, eps=eps, inf=inf),
+        in_specs=[vec, vec, vec, vec],
+        out_specs=[vec, vec, pl.BlockSpec((1, 1), lambda: (0, 0))],
+        out_shape=out_shape,
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )
+    r2 = lambda x: x.reshape(1, n_pad)
+    new_lb, new_ub, changed = fn(r2(lb), r2(ub), r2(best_l), r2(best_u))
+    return new_lb.reshape(n_pad), new_ub.reshape(n_pad), changed.reshape(()) != 0

@@ -142,6 +142,8 @@ def test_dryrun_cell_small_mesh():
         ma = compiled.memory_analysis()
         assert ma.argument_size_in_bytes > 0
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # older jax wraps the dict
+            ca = ca[0]
         assert ca.get("flops", 0) > 0
         print("DRYRUN_OK")
     """)

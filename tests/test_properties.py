@@ -9,6 +9,9 @@
     (App. B semantic counterpart).
 """
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
