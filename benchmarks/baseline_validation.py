@@ -8,7 +8,6 @@ single-device engine, on both results (bound equality) and runtime order of
 magnitude."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import bounds_equal, propagate, propagate_sequential
 from repro.data.instances import instances_for_set

@@ -3,19 +3,31 @@
 Times one round per engine (the jnp-oracle arithmetic of each dataflow --
 on CPU that is the honest number; interpret-mode Pallas timings measure the
 emulator) and measures bytes accessed per round via
-``repro.kernels.round_cost_analysis``, then writes ``BENCH_prop.json`` so
-future PRs have a comparable perf baseline.
+``repro.kernels.round_cost_analysis``; additionally times full batched
+propagation (one dispatch per bucket, ``propagate_batch``) against
+sequential per-instance dispatches and reports instances/sec throughput.
+
+Results are MERGED into ``BENCH_prop.json`` (engine rows are updated or
+added, unknown keys from earlier PRs are preserved) so the perf trajectory
+stays comparable across PRs.
 """
 from __future__ import annotations
 
 import json
+import os
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
+from repro.core.propagator import owned_copy
 from repro.data.instances import instances_for_set
 from repro.kernels import (
+    batched_device_runner,
     legacy_round_fn_for,
+    packed_problems,
     prepare_block_ell,
+    prepare_problem_batch,
     round_cost_analysis,
     round_fn_for,
 )
@@ -27,6 +39,14 @@ PER_FAMILY = 2
 ENGINES = ("fused", "segment", "legacy")
 OUT_PATH = "BENCH_prop.json"
 
+# Batched-throughput population: >= 8 Set-2 instances of the quick-verdict
+# serving shape (set-cover presolves converge in one round, so the batch has
+# no stragglers and the comparison isolates dispatch amortization -- the
+# thing batching is for; straggler behaviour is covered by the per-instance
+# convergence-mask tests instead).
+BATCH_FAMILIES = ("set_cover",)
+BATCH_PER_FAMILY = 12
+
 
 def bytes_per_round(engine: str, per_family: int = PER_FAMILY):
     """Measured bytes/round of one engine over the benchmark set (shared by
@@ -35,6 +55,101 @@ def bytes_per_round(engine: str, per_family: int = PER_FAMILY):
         round_cost_analysis(p, engine)["bytes_accessed"]
         for _, p in instances_for_set(SET, per_family=per_family)
     ]
+
+
+def _single_dispatch_runner(prep, max_rounds: int = 100):
+    """Per-instance jitted device-loop fixed point (the strongest sequential
+    baseline: compile paid once outside the timer, one dispatch per call)."""
+    round_fn = round_fn_for(prep, use_pallas=False)
+    n = prep.n
+
+    @jax.jit
+    def run(lb0, ub0):
+        def body(s):
+            lb, ub, _, r = s
+            lb, ub, ch = round_fn(lb, ub)
+            return lb, ub, ch, r + 1
+
+        def cond(s):
+            return s[2] & (s[3] < max_rounds)
+
+        lb, ub, ch, r = jax.lax.while_loop(
+            cond, body, (lb0, ub0, jnp.asarray(True), jnp.int32(0))
+        )
+        return lb[:n], ub[:n], r
+
+    return run
+
+
+def batched_throughput():
+    """Instances/sec: one batched dispatch per bucket vs sequential
+    per-instance dispatches, over >= 8 Set-2 instances (both sides use
+    precompiled runners and identical tile layouts; compile excluded)."""
+    problems = [
+        p
+        for _, p in instances_for_set(
+            SET, per_family=BATCH_PER_FAMILY, families=BATCH_FAMILIES
+        )
+    ]
+
+    seq_runners = [
+        (_single_dispatch_runner(prep), prep)
+        for prep in (prepare_block_ell(p) for p in problems)
+    ]
+
+    def run_sequential():
+        for run, prep in seq_runners:
+            lb, _, _ = run(owned_copy(prep.lb0), owned_copy(prep.ub0))
+        lb.block_until_ready()
+
+    batches = packed_problems(problems)
+    batch_runners = [
+        (batched_device_runner(prep, use_pallas=False), prep)
+        for prep in (prepare_problem_batch(b) for b in batches)
+    ]
+
+    def run_batched():
+        for run, prep in batch_runners:
+            lb, *_ = run(owned_copy(prep.d.lb0), owned_copy(prep.d.ub0))
+        lb.block_until_ready()
+
+    # Paired trials (sequential and batched alternate within each trial) with
+    # a median-of-trials speedup: robust against the container's background
+    # load drifting between the two measurements.
+    trials = []
+    for _ in range(7):
+        t_seq = time_fn(run_sequential, repeats=3, warmup=1)
+        t_bat = time_fn(run_batched, repeats=3, warmup=1)
+        trials.append((t_seq, t_bat))
+    speedup = float(np.median([ts / tb for ts, tb in trials]))
+    t_seq = float(np.median([ts for ts, _ in trials]))
+    t_bat = float(np.median([tb for _, tb in trials]))
+    n_inst = len(problems)
+    return {
+        "instances": n_inst,
+        "buckets": len(batches),
+        "bucket_shapes": [list(b.ell.val.shape) for b in batches],
+        "sequential_instances_per_sec": n_inst / t_seq,
+        "batched_instances_per_sec": n_inst / t_bat,
+        "batched_speedup": speedup,
+    }
+
+
+def _merge_report(report: dict, out_path: str) -> dict:
+    """Merge new engine rows into an existing BENCH_prop.json: engine rows
+    are updated/added, any other keys from earlier PRs are preserved."""
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                old = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            old = {}
+        engines = dict(old.get("engines", {}))
+        engines.update(report.get("engines", {}))
+        merged = {**old, **report}
+        merged["engines"] = engines
+        return merged
+    return report
 
 
 def run(out_path: str = OUT_PATH):
@@ -56,6 +171,7 @@ def run(out_path: str = OUT_PATH):
                 round_cost_analysis(p, engine)["bytes_accessed"]
             )
 
+    thru = batched_throughput()
     report = {
         "set": SET,
         "instances": len(insts),
@@ -67,9 +183,15 @@ def run(out_path: str = OUT_PATH):
             for e, v in acc.items()
         },
     }
+    report["engines"]["batched"] = {
+        "instances_per_sec": thru["batched_instances_per_sec"],
+        "speedup_vs_sequential_dispatch": thru["batched_speedup"],
+    }
     report["bytes_reduction_fused_vs_legacy"] = geomean(
         [l / f for l, f in zip(acc["legacy"]["bytes"], acc["fused"]["bytes"])]
     )
+    report["batched_throughput"] = thru
+    report = _merge_report(report, out_path)
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
 
@@ -82,6 +204,13 @@ def run(out_path: str = OUT_PATH):
         for e in ENGINES
     ]
     rows.append(
+        ("bench_prop_batched",
+         1e6 / thru["batched_instances_per_sec"],
+         f"instances_per_sec={thru['batched_instances_per_sec']:.1f} "
+         f"speedup_vs_sequential={thru['batched_speedup']:.2f}x "
+         f"buckets={thru['buckets']} instances={thru['instances']}")
+    )
+    rows.append(
         ("bench_prop_json", 0.0,
          f"written={out_path} "
          f"bytes_reduction_fused_vs_legacy={report['bytes_reduction_fused_vs_legacy']:.2f}x")
@@ -90,5 +219,6 @@ def run(out_path: str = OUT_PATH):
 
 
 if __name__ == "__main__":
+    jax.config.update("jax_enable_x64", True)  # match benchmarks.run
     for r in run():
         print(",".join(map(str, r)))

@@ -7,7 +7,7 @@ timing covers first propagation round to results available.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, List, Tuple
 
 import numpy as np
 

@@ -11,7 +11,6 @@ benchmark reports the measured ratios.
 """
 from __future__ import annotations
 
-from repro.core import propagate
 from repro.data.instances import instances_for_set
 
 from .common import geomean, time_fn
@@ -22,8 +21,7 @@ def _timed(p, driver, unroll=1):
 
     from repro.core.propagator import DeviceProblem, _round_fn, _device_fixed_point
     from repro.core.types import DEFAULT_CONFIG as cfg
-    import jax.numpy as jnp
-
+    
     dp = DeviceProblem(p)
     round_fn = _round_fn(dp, cfg)
     if driver == "host_loop":

@@ -8,8 +8,8 @@ import numpy as np
 from repro.core import bounds_equal, propagate, propagate_sequential
 from repro.data.instances import instances_for_set
 
-from .common import geomean, time_fn
-from .speedup_sets import _timed_parallel, _timed_seq
+from .common import geomean
+from .speedup_sets import _timed_parallel
 
 
 def run(max_set: int = 4):

@@ -3,7 +3,6 @@ vs the parallel algorithm over a heterogeneous instance set, plus the
 cascade worst case (m-fold inflation)."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import propagate, propagate_sequential
 from repro.data import make_cascade_chain

@@ -10,7 +10,6 @@ V100 (memory-bound), 23.64% of attainable performance on average.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import DeviceProblem
 from repro.data.instances import instances_for_set

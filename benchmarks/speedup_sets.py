@@ -12,7 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import DeviceProblem, propagate_sequential
-from repro.core.propagator import _round_fn, check_infeasible
+from repro.core.propagator import _round_fn
 from repro.core.types import DEFAULT_CONFIG
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,6 @@ hundred steps on the synthetic token pipeline, with checkpointing.
 
 (This drives the same launcher as production: repro.launch.train.)
 """
-import dataclasses
 import sys
 
 sys.argv = [sys.argv[0]]  # launcher parses its own args below
@@ -14,7 +13,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
 from repro.data.tokens import DataConfig, make_batch
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_params, param_count

@@ -14,8 +14,14 @@ from .types import (
 from .sparse import (
     CSR,
     CSC,
+    LANE,
     BlockEll,
+    BatchedBlockEll,
     Problem,
+    ProblemBatch,
+    col_pad,
+    pack_problems,
+    batch_stats,
     csr_from_dense,
     csr_from_coo,
     csr_to_csc,
@@ -27,6 +33,8 @@ from .activities import compute_activities, activity_values
 from .propagator import (
     DeviceProblem,
     propagate,
+    propagate_batch,
+    batched_fixed_point,
     propagate_host_loop,
     propagate_device_loop,
     propagate_unrolled,
@@ -38,6 +46,7 @@ from .presolve import analyze_constraints, PresolveVerdict
 from .sharded import (
     propagate_sharded,
     propagate_sharded_rows,
+    propagate_batch_sharded,
     lower_sharded,
     partition_nnz,
     partition_rows,
@@ -52,8 +61,14 @@ __all__ = [
     "DEFAULT_CONFIG",
     "CSR",
     "CSC",
+    "LANE",
     "BlockEll",
+    "BatchedBlockEll",
     "Problem",
+    "ProblemBatch",
+    "col_pad",
+    "pack_problems",
+    "batch_stats",
     "csr_from_dense",
     "csr_from_coo",
     "csr_to_csc",
@@ -64,6 +79,8 @@ __all__ = [
     "activity_values",
     "DeviceProblem",
     "propagate",
+    "propagate_batch",
+    "batched_fixed_point",
     "propagate_host_loop",
     "propagate_device_loop",
     "propagate_unrolled",
@@ -75,6 +92,7 @@ __all__ = [
     "PresolveVerdict",
     "propagate_sharded",
     "propagate_sharded_rows",
+    "propagate_batch_sharded",
     "partition_rows",
     "lower_sharded",
     "partition_nnz",

@@ -88,3 +88,18 @@ def apply_updates(lb, ub, best_lcand, best_ucand, eps: float, inf: float = INF):
     new_ub = jnp.where(take_u, jnp.clip(best_ucand, inf * -1, inf), ub)
     changed = jnp.any(take_l) | jnp.any(take_u)
     return new_lb, new_ub, changed
+
+
+def apply_updates_batch(lb, ub, best_lcand, best_ucand, eps: float, inf: float = INF):
+    """Batched merge: ``(B, n_pad)`` bounds/candidates -> per-instance change.
+
+    Identical elementwise semantics to :func:`apply_updates`; only the
+    ``changed`` reduction stays per instance (axis -1), which is what lets a
+    batched fixed point converge each instance independently.
+    """
+    take_l = improved_lb(best_lcand, lb, eps)
+    take_u = improved_ub(best_ucand, ub, eps)
+    new_lb = jnp.where(take_l, jnp.clip(best_lcand, -inf, inf), lb)
+    new_ub = jnp.where(take_u, jnp.clip(best_ucand, -inf, inf), ub)
+    changed = jnp.any(take_l, axis=-1) | jnp.any(take_u, axis=-1)
+    return new_lb, new_ub, changed

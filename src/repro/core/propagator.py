@@ -24,15 +24,13 @@ fixed point by construction.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import activities as act
 from . import bounds as bnd
-from .sparse import CSR, Problem
+from .sparse import Problem
 from .types import DEFAULT_CONFIG, INF, PropagationResult, PropagatorConfig
 
 
@@ -209,6 +207,75 @@ def _device_fixed_point(round_fn, lb0, ub0, max_rounds: int, unroll: int = 1):
     # First iteration must run: seed changed=True, but do not count it.
     lb, ub, changed, rounds = jax.lax.while_loop(cond, body, init)
     return lb, ub, changed, rounds
+
+
+def batched_fixed_point(round_fn, lb0, ub0, max_rounds: int, active0=None):
+    """Batched while_loop fixed point with a per-instance convergence mask.
+
+    ``round_fn(lb, ub, active) -> (lb, ub, changed)`` operates on
+    ``(B, n_pad)`` bounds and per-instance ``(B,)`` flags.  The loop runs
+    until *every* instance has converged (or hit ``max_rounds``); an
+    instance whose round produced no change drops out of ``active`` and its
+    bounds are frozen -- finished instances are no-ops, not stragglers'
+    hostages.  Per-instance round counts match what each instance would
+    have seen in its own single-instance ``device_loop``.
+
+    Returns ``(lb, ub, rounds, converged)`` with ``rounds``/``converged``
+    per instance.
+    """
+    bsz = lb0.shape[0]
+    if active0 is None:
+        active0 = jnp.ones((bsz,), dtype=bool)
+
+    def body(state):
+        lb, ub, active, last_changed, rounds = state
+        lb, ub, changed = round_fn(lb, ub, active)
+        rounds = rounds + active.astype(jnp.int32)
+        last_changed = jnp.where(active, changed, last_changed)
+        active = active & changed & (rounds < max_rounds)
+        return lb, ub, active, last_changed, rounds
+
+    def cond(state):
+        return jnp.any(state[2])
+
+    init = (lb0, ub0, active0, active0, jnp.zeros((bsz,), jnp.int32))
+    lb, ub, _, last_changed, rounds = jax.lax.while_loop(cond, body, init)
+    return lb, ub, rounds, ~last_changed
+
+
+def propagate_batch(
+    problems,
+    cfg: PropagatorConfig = DEFAULT_CONFIG,
+    tile_rows: int = 8,
+    tile_width: int = 128,
+    dtype=None,
+    use_pallas: bool = True,
+    driver: str = "device_loop",
+    interpret: bool | None = None,
+    donate: bool | None = None,
+):
+    """Propagate a batch of instances, thousands per device dispatch.
+
+    Front end over the batched block-ELL engine: instances are bucketed by
+    padded shape (``core.sparse.pack_problems``), each bucket runs its
+    fixed point in ONE dispatch with a per-instance convergence mask, and
+    results come back as one ``PropagationResult`` per instance, input
+    order.  See ``kernels.ops.propagate_batch_block_ell`` for the engine
+    knobs.
+    """
+    from ..kernels.ops import propagate_batch_block_ell  # lazy: kernels imports core
+
+    return propagate_batch_block_ell(
+        problems,
+        cfg=cfg,
+        tile_rows=tile_rows,
+        tile_width=tile_width,
+        dtype=dtype,
+        use_pallas=use_pallas,
+        driver=driver,
+        interpret=interpret,
+        donate=donate,
+    )
 
 
 def propagate_device_loop(

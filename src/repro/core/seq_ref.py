@@ -22,7 +22,7 @@ import dataclasses
 import numpy as np
 
 from .sparse import Problem, csr_to_csc
-from .types import DEFAULT_CONFIG, INF, PropagatorConfig
+from .types import DEFAULT_CONFIG, PropagatorConfig
 
 
 @dataclasses.dataclass

@@ -19,8 +19,6 @@ the GPU" (§3.7).
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -304,6 +302,193 @@ def propagate_sharded_rows(
         jnp.asarray(p.lb, dtype=dtype), jnp.asarray(p.ub, dtype=dtype),
     )
     return PropagationResult(lb, ub, r, converged, infeasible)
+
+
+# ---------------------------------------------------------------------------
+# Batch-axis sharding: many instances, devices split the batch
+# ---------------------------------------------------------------------------
+
+
+# Built shard runners, LRU-cached per (problem identities, mesh, config):
+# the serving loop re-propagates the same request list, and rebuilding the
+# shard_map closure per call would recompile the whole multi-device fixed
+# point every time (mirrors the runner caches in kernels.ops).
+_batch_shard_cache: "dict" = {}
+_BATCH_SHARD_CACHE_CAPACITY = 4
+
+
+def _build_batch_shard_runner(problems, mesh, cfg, tile_rows, tile_width, dtype):
+    from ..kernels.ops import (  # lazy: kernels imports core at module scope
+        batched_reference_round,
+        prepare_problem_batch,
+    )
+    from .propagator import batched_fixed_point
+    from .sparse import col_pad, pack_problems
+
+    axes = tuple(mesh.axis_names)
+    num_shards = int(np.prod(mesh.devices.shape))
+    n_pad = max(col_pad(p.n) for p in problems)
+
+    # Greedy nnz-balanced instance partition (the CSR-adaptive balancing
+    # idea at batch scope -- mirrors partition_rows, one level up).
+    order = sorted(range(len(problems)), key=lambda i: -problems[i].nnz)
+    loads = np.zeros(num_shards, dtype=np.int64)
+    assign = [[] for _ in range(num_shards)]
+    for i in order:
+        s = int(np.argmin(loads))
+        assign[s].append(i)
+        loads[s] += max(1, problems[i].nnz)
+
+    # One flat bucket per shard (forced common n_pad), then pad every
+    # per-shard array to the common maxima so the shard axis stacks.  Idle
+    # shards carry the SMALLEST instance as an all-inactive dummy: it never
+    # iterates (active0 False), so it costs only the dispatch.
+    preps = []
+    for members in assign:
+        sub = [problems[i] for i in members] or [problems[order[-1]]]
+        (bucket,) = pack_problems(
+            sub, tile_rows=tile_rows, tile_width=tile_width, n_pad=n_pad
+        )
+        preps.append((members, bucket, prepare_problem_batch(bucket, dtype)))
+
+    t_max = max(prep.d.val.shape[0] for _, _, prep in preps)
+    b_max = max(prep.size for _, _, prep in preps)
+    m_max = max(prep.m_total for _, _, prep in preps)
+    fits = all(prep.fits_one_chunk for _, _, prep in preps)
+    eps = cfg.eps_for(preps[0][2].d.val.dtype)
+
+    def pad_to(x, size, axis=0, fill=0):
+        pad = size - x.shape[axis]
+        if pad == 0:
+            return np.asarray(x)
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return np.pad(np.asarray(x), widths, constant_values=fill)
+
+    stacked = []
+    for members, bucket, prep in preps:
+        d = prep.d
+        nb = len(bucket.problems) if members else 0  # idle dummy: inactive
+        stacked.append(dict(
+            # Padding tiles: val == 0 everywhere -> all candidates are
+            # sentinels; their rows/cols point at the extra dummy row m_max
+            # / instance 0's column 0, both reduction-identity targets.
+            val=pad_to(d.val, t_max),
+            col_g=pad_to(d.col_g, t_max),
+            ii_g=pad_to(d.ii_g, t_max),
+            chunk_row=pad_to(d.chunk_row, t_max, fill=m_max),
+            lhs_g=pad_to(d.lhs_g, t_max),
+            rhs_g=pad_to(d.rhs_g, t_max),
+            lb0=pad_to(d.lb0, b_max),
+            ub0=pad_to(d.ub0, b_max),
+            active0=(np.arange(b_max) < nb),
+            col_valid=pad_to(d.col_valid, b_max),
+        ))
+    j = lambda name: jnp.asarray(np.stack([s[name] for s in stacked]))
+
+    round_kw = dict(
+        m_total=m_max, n_pad=n_pad, fits_one_chunk=fits,
+        eps=eps, int_eps=cfg.int_eps, inf=cfg.inf,
+    )
+
+    def shard_body(val, col_g, crow, ii_g, lhs_g, rhs_g, lb0, ub0, active0, col_valid):
+        # Each shard sees a leading axis of length 1: its own super-tile.
+        val, col_g, crow, ii_g = val[0], col_g[0], crow[0], ii_g[0]
+        lhs_g, rhs_g = lhs_g[0], rhs_g[0]
+        lb0, ub0, active0, col_valid = lb0[0], ub0[0], active0[0], col_valid[0]
+
+        def round_fn(lb, ub, active):
+            return batched_reference_round(
+                val, col_g, ii_g, crow, lhs_g, rhs_g, lb, ub, active, **round_kw
+            )
+
+        lb, ub, rounds, converged = batched_fixed_point(
+            round_fn, lb0, ub0, cfg.max_rounds, active0
+        )
+        infeasible = jnp.any((lb > ub + cfg.feas_eps) & col_valid, axis=-1)
+        add = lambda x: x[None]
+        return add(lb), add(ub), add(rounds), add(converged), add(infeasible)
+
+    def spec_for(rank):  # shard axis split over ALL mesh axes jointly
+        return P(axes, *([None] * (rank - 1)))
+
+    args = (
+        j("val"), j("col_g"), j("chunk_row"), j("ii_g"),
+        j("lhs_g"), j("rhs_g"), j("lb0"), j("ub0"), j("active0"), j("col_valid"),
+    )
+    fn = shard_map(
+        shard_body,
+        mesh=mesh,
+        in_specs=tuple(spec_for(a.ndim) for a in args),
+        out_specs=(spec_for(3), spec_for(3), spec_for(2), spec_for(2), spec_for(2)),
+        check_vma=False,
+    )
+    return {
+        "preps": preps,
+        "args": args,
+        "run": jax.jit(fn, **donate_kwargs(argnums=(6, 7))),
+    }
+
+
+def propagate_batch_sharded(
+    problems,
+    mesh: Mesh,
+    cfg: PropagatorConfig = DEFAULT_CONFIG,
+    tile_rows: int = 8,
+    tile_width: int = 128,
+    dtype=None,
+):
+    """Shard the *batch* axis of packed instances across every mesh device.
+
+    The serving-scale complement of :func:`propagate_sharded`: instead of
+    splitting one instance's nonzeros, instances are greedily partitioned
+    across devices (balanced by nonzero count), each device's share is
+    packed into its own flat super-tile, and every device runs its batched
+    fixed point to local convergence -- instances are independent, so one
+    multi-device propagation of thousands of subproblems is a single XLA
+    dispatch with ZERO collectives and zero host involvement.  Per-shard
+    layouts are padded to common shapes (zero tiles / inactive dummy
+    instances), which cost their shard nothing but the dispatch.  The
+    packed layout and the jitted shard runner are LRU-cached per problem
+    list, so a serving loop re-propagating the same instances pays
+    partitioning and compilation once.
+
+    Returns one ``PropagationResult`` per instance, input order.
+    """
+    from .propagator import owned_copy
+
+    problems = list(problems)
+    if not problems:
+        return []
+    dt = np.dtype(dtype).str if dtype is not None else None
+    key = (tuple(id(p) for p in problems), mesh, cfg, tile_rows, tile_width, dt)
+    hit = _batch_shard_cache.get(key)
+    if hit is not None and all(a is b for a, b in zip(hit[0], problems)):
+        built = hit[1]
+    else:
+        built = _build_batch_shard_runner(
+            problems, mesh, cfg, tile_rows, tile_width, dtype
+        )
+        _batch_shard_cache[key] = (tuple(problems), built)
+        while len(_batch_shard_cache) > _BATCH_SHARD_CACHE_CAPACITY:
+            _batch_shard_cache.pop(next(iter(_batch_shard_cache)))
+
+    args = list(built["args"])
+    # Private copies of the cached initial bounds: they are donated into the
+    # on-device loop and must not invalidate the cached runner's buffers.
+    args[6], args[7] = owned_copy(args[6]), owned_copy(args[7])
+    lb, ub, rounds, converged, infeasible = built["run"](*args)
+
+    out = [None] * len(problems)
+    for s, (members, bucket, prep) in enumerate(built["preps"]):
+        if not members:
+            continue  # idle shard carries an inactive dummy instance
+        for i, (sub_idx, p) in enumerate(zip(bucket.indices, bucket.problems)):
+            out[members[sub_idx]] = PropagationResult(
+                lb[s, i, : p.n], ub[s, i, : p.n],
+                rounds[s, i], converged[s, i], infeasible[s, i],
+            )
+    return out
 
 
 def lower_sharded(

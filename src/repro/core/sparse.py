@@ -14,14 +14,31 @@ Three layouts, mirroring the paper's storage pipeline (§3):
     (CSR-vector/multi-warp analogue).  Padding entries carry ``val == 0`` and
     ``col == 0`` and are masked out by ``val != 0``.
 
+Batching (the serving shape): :class:`ProblemBatch` packs many instances
+into one flat block-ELL layout so a whole batch propagates in a single
+device dispatch.  Instances are *bucketed* by lane-padded column width
+(``col_pad(n)``) only; within a bucket their tile streams concatenate into
+ONE ``(T_total, R, K)`` super-tile with per-instance row/col offsets, so
+ragged batches pay at most one partial tail tile per instance -- never a
+pad-to-the-largest blowup.
+
 All containers are pytrees of plain arrays so they can cross ``jit`` /
 ``shard_map`` boundaries.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import numpy as np
+
+# TPU lane width: column-padded domains are multiples of this so in-kernel
+# scatter/gather walk aligned 128-wide windows (see kernels/prop_round.py).
+LANE = 128
+
+
+def col_pad(n: int, lane: int = LANE) -> int:
+    """Columns padded up to a lane-width multiple (scatter accumulator size)."""
+    return max(lane, -(-n // lane) * lane)
 
 
 class Problem(NamedTuple):
@@ -236,6 +253,194 @@ def csr_to_block_ell(csr: CSR, tile_rows: int = 8, tile_width: int = 128) -> Blo
         m=np.int32(m),
         n=np.int32(csr.n),
     )
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-instance packing (the serving shape)
+# ---------------------------------------------------------------------------
+
+
+class BatchedBlockEll(NamedTuple):
+    """A bucket of instances packed as ONE flat tile stream (super-tile).
+
+    Instances' tile streams are concatenated along the tile axis -- no
+    per-instance tile padding at all, so ragged batches cost at most
+    ``R - 1`` empty chunks per instance (the per-instance tail tile), never
+    a stack-to-the-maximum blowup.  Per-instance offsets knit the shared
+    domains together:
+
+      * ``tile_inst[t]`` -- which instance tile ``t`` belongs to (tiles of
+        one instance are contiguous);
+      * ``chunk_row`` -- GLOBAL row ids: instance ``i``'s rows live at
+        ``row_offset[i] + local_row``, its padding chunks at its own dummy
+        row ``row_offset[i] + m_i``, so one flat segment reduction covers
+        the whole batch;
+      * columns stay instance-local (each instance owns one ``n_pad``-wide
+        window of the ``(B, n_pad)`` bound plane; the global column id is
+        ``col + tile_inst * n_pad``).
+
+    ``val == 0`` marks padding slots, exactly as in :class:`BlockEll`.
+    """
+
+    val: np.ndarray         # (T, R, K) float; 0 == padding
+    col: np.ndarray         # (T, R, K) int32 instance-local columns
+    chunk_row: np.ndarray   # (T, R) int32 global row ids
+    tile_inst: np.ndarray   # (T,) int32 instance of each tile
+    row_offset: np.ndarray  # (B + 1,) int32; instance i owns rows
+                            # [row_offset[i], row_offset[i] + m_i], the last
+                            # being its dummy padding row
+    m: np.ndarray           # (B,) int32 original row counts
+    n: np.ndarray           # (B,) int32 original column counts
+
+    @property
+    def size(self) -> int:
+        return int(self.m.shape[0])
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.val.shape[0])
+
+    @property
+    def tile_rows(self) -> int:
+        return int(self.val.shape[1])
+
+    @property
+    def tile_width(self) -> int:
+        return int(self.val.shape[2])
+
+
+class ProblemBatch(NamedTuple):
+    """A bucket of propagation instances packed for one device dispatch.
+
+    Built by :func:`pack_problems`.  Constraint sides are stacked into one
+    flat ``(m_total,)`` row domain (each instance contributes its ``m_i``
+    rows plus one zero dummy row addressed by its padding chunks); bounds
+    live on the ``(B, n_pad)`` plane, zero-padded -- padded columns are
+    never referenced by any nonzero, so they stay at their (trivially
+    converged) initial values.
+    """
+
+    problems: tuple          # the original Problem objects, batch order
+    indices: tuple           # position of each instance in the packed input
+    ell: BatchedBlockEll     # flat tile stream
+    lhs1: np.ndarray         # (m_total,) stacked sides incl. dummy rows
+    rhs1: np.ndarray         # (m_total,)
+    lb: np.ndarray           # (B, n_pad) initial bounds, zero-padded
+    ub: np.ndarray           # (B, n_pad)
+    is_int: np.ndarray       # (B, n_pad) bool, False-padded
+
+    @property
+    def size(self) -> int:
+        return len(self.problems)
+
+    @property
+    def m_total(self) -> int:
+        return int(self.lhs1.shape[0])
+
+    @property
+    def n_pad(self) -> int:
+        return int(self.lb.shape[1])
+
+
+def pack_problems(
+    problems: Sequence[Problem],
+    tile_rows: int = 8,
+    tile_width: int = 128,
+    lane: int = LANE,
+    n_pad: "int | None" = None,
+) -> "list[ProblemBatch]":
+    """Bucket + pack instances into flat batched block-ELL super-tiles.
+
+    Instances are bucketed by ``col_pad(n)`` only -- the lane-padded column
+    width must be uniform within a bucket because every instance owns one
+    ``n_pad``-wide window of the bound plane.  Within a bucket the tile
+    streams concatenate exactly (no tile quantization), so one bucket is
+    one dispatch shape regardless of how ragged the instance sizes are.
+    Pass ``n_pad`` to force a single shared column width (used by the
+    batch-sharded driver to give every device slice the same shape).
+    """
+    buckets: "dict[int, list[tuple[int, Problem, BlockEll]]]" = {}
+    for idx, p in enumerate(problems):
+        b = csr_to_block_ell(p.csr, tile_rows=tile_rows, tile_width=tile_width)
+        width = col_pad(p.n, lane) if n_pad is None else int(n_pad)
+        if width < p.n:
+            raise ValueError(f"forced n_pad={width} < n={p.n}")
+        buckets.setdefault(width, []).append((idx, p, b))
+
+    out = []
+    for width, members in sorted(buckets.items()):
+        bsz = len(members)
+        # Mixed-precision buckets promote to the widest member dtype so no
+        # instance's coefficients are silently truncated by the stacking.
+        dtype = np.result_type(*[b.val.dtype for _, _, b in members])
+        tiles = [b for _, _, b in members]
+        t_total = sum(b.num_tiles for b in tiles)
+        m_total = sum(p.m + 1 for _, p, _ in members)
+        val = np.zeros((t_total, tile_rows, tile_width), dtype=dtype)
+        col = np.zeros((t_total, tile_rows, tile_width), dtype=np.int32)
+        chunk_row = np.zeros((t_total, tile_rows), dtype=np.int32)
+        tile_inst = np.zeros((t_total,), dtype=np.int32)
+        row_offset = np.zeros((bsz + 1,), dtype=np.int32)
+        lhs1 = np.zeros((m_total,), dtype=np.float64)
+        rhs1 = np.zeros((m_total,), dtype=np.float64)
+        lb = np.zeros((bsz, width), dtype=np.float64)
+        ub = np.zeros((bsz, width), dtype=np.float64)
+        is_int = np.zeros((bsz, width), dtype=bool)
+        t0, r0 = 0, 0
+        for i, (_, p, b) in enumerate(members):
+            t = b.num_tiles
+            val[t0 : t0 + t] = b.val
+            col[t0 : t0 + t] = b.col
+            # Local chunk rows -> global; padding chunks (local id m_i) land
+            # on this instance's dummy row r0 + m_i.
+            chunk_row[t0 : t0 + t] = b.chunk_row + r0
+            tile_inst[t0 : t0 + t] = i
+            row_offset[i] = r0
+            lhs1[r0 : r0 + p.m] = p.lhs
+            rhs1[r0 : r0 + p.m] = p.rhs
+            lb[i, : p.n] = p.lb
+            ub[i, : p.n] = p.ub
+            is_int[i, : p.n] = p.is_int
+            t0 += t
+            r0 += p.m + 1
+        row_offset[bsz] = r0
+        out.append(
+            ProblemBatch(
+                problems=tuple(p for _, p, _ in members),
+                indices=tuple(idx for idx, _, _ in members),
+                ell=BatchedBlockEll(
+                    val=val,
+                    col=col,
+                    chunk_row=chunk_row,
+                    tile_inst=tile_inst,
+                    row_offset=row_offset,
+                    m=np.array([p.m for _, p, _ in members], dtype=np.int32),
+                    n=np.array([p.n for _, p, _ in members], dtype=np.int32),
+                ),
+                lhs1=lhs1,
+                rhs1=rhs1,
+                lb=lb,
+                ub=ub,
+                is_int=is_int,
+            )
+        )
+    return out
+
+
+def batch_stats(batches: Sequence[ProblemBatch]) -> dict:
+    """Packing diagnostics: bucket shapes, fill, padding overhead."""
+    total = sum(b.size for b in batches)
+    slots = sum(b.ell.val.size for b in batches)
+    nnz = sum(int((b.ell.val != 0).sum()) for b in batches)
+    return {
+        "instances": total,
+        "buckets": len(batches),
+        "bucket_shapes": [tuple(b.ell.val.shape) for b in batches],
+        "bucket_sizes": [b.size for b in batches],
+        "padded_slots": slots,
+        "nnz": nnz,
+        "padding_fraction": 1.0 - (nnz / slots if slots else 0.0),
+    }
 
 
 def block_ell_stats(b: BlockEll) -> dict:

@@ -135,7 +135,11 @@ def read_mps(f: TextIO) -> Problem:
 
 
 def write_mps(p: Problem, f: TextIO, name: str = "REPRO"):
-    """Write a Problem as free-format MPS (ranged rows via RANGES)."""
+    """Write a Problem as free-format MPS (ranged rows via RANGES).
+
+    Values are printed with 17 significant digits, so every finite float64
+    survives the write -> read round trip bit-exactly.
+    """
     f.write(f"NAME          {name}\n")
     f.write("ROWS\n N  COST\n")
     kinds = []
@@ -167,27 +171,27 @@ def write_mps(p: Problem, f: TextIO, name: str = "REPRO"):
             f.write("    MARKER    'MARKER'  'INTEND'\n")
             int_open = False
         for i, v in csc_order.get(j, []):
-            f.write(f"    C{j}  R{i}  {v:.12g}\n")
+            f.write(f"    C{j}  R{i}  {v:.17g}\n")
     if int_open:
         f.write("    MARKER    'MARKER'  'INTEND'\n")
     f.write("RHS\n")
     for i, kind in enumerate(kinds):
         if kind in ("L", "R"):
-            f.write(f"    RHS  R{i}  {p.rhs[i]:.12g}\n")
+            f.write(f"    RHS  R{i}  {p.rhs[i]:.17g}\n")
         elif kind == "G":
-            f.write(f"    RHS  R{i}  {p.lhs[i]:.12g}\n")
+            f.write(f"    RHS  R{i}  {p.lhs[i]:.17g}\n")
         elif kind == "E":
-            f.write(f"    RHS  R{i}  {p.rhs[i]:.12g}\n")
+            f.write(f"    RHS  R{i}  {p.rhs[i]:.17g}\n")
     f.write("RANGES\n")
     for i, kind in enumerate(kinds):
         if kind == "R":
-            f.write(f"    RNG  R{i}  {p.rhs[i] - p.lhs[i]:.12g}\n")
+            f.write(f"    RNG  R{i}  {p.rhs[i] - p.lhs[i]:.17g}\n")
     f.write("BOUNDS\n")
     for j in range(p.n):
         if p.lb[j] <= -INF:
             f.write(f" MI BND  C{j}\n")
         elif p.lb[j] != 0.0:
-            f.write(f" LO BND  C{j}  {p.lb[j]:.12g}\n")
+            f.write(f" LO BND  C{j}  {p.lb[j]:.17g}\n")
         if p.ub[j] < INF:
-            f.write(f" UP BND  C{j}  {p.ub[j]:.12g}\n")
+            f.write(f" UP BND  C{j}  {p.ub[j]:.17g}\n")
     f.write("ENDATA\n")

@@ -3,7 +3,9 @@ propagation round (Alg. 3) -- plus jnp oracles (ref.py) and the jit'd
 block-ELL propagation engine (ops.py) with its fully fused scatter round."""
 from .ops import (
     DeviceBlockEll,
+    DeviceProblemBatch,
     PreparedBlockEll,
+    PreparedBatch,
     device_block_ell,
     prepare_block_ell,
     clear_prepare_cache,
@@ -12,6 +14,14 @@ from .ops import (
     legacy_round_fn_for,
     round_cost_analysis,
     propagate_block_ell,
+    prepare_problem_batch,
+    batched_round_fn_for,
+    batched_reference_round,
+    propagate_batch_prepared,
+    propagate_batch_block_ell,
+    batched_device_runner,
+    packed_problems,
+    clear_batch_caches,
     rows_fit_one_chunk,
     SCATTER_MAX_NPAD,
 )
@@ -23,6 +33,8 @@ from .prop_round import (
     fused_scatter_round_tiles,
     candidates_scatter_tiles,
     apply_updates_tiles,
+    batched_fused_scatter_round_tiles,
+    apply_updates_batch_tiles,
     col_pad,
 )
 from . import ref

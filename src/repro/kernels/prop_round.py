@@ -62,16 +62,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core import bounds as bnd
+# col_pad moved to core.sparse with the batch packing; re-exported here (the
+# redundant alias marks the intentional re-export) for kernel-level callers.
+from ..core.sparse import LANE as LANE, col_pad as col_pad
 from ..core.types import INF
-
-# Column accumulators are padded to a multiple of the TPU lane width so the
-# in-kernel scatter can walk aligned 128-wide column blocks.
-LANE = 128
-
-
-def col_pad(n: int, lane: int = LANE) -> int:
-    """Columns padded up to a lane-width multiple (scatter accumulator size)."""
-    return max(lane, -(-n // lane) * lane)
 
 
 def _on_cpu() -> bool:
@@ -717,3 +711,165 @@ def apply_updates_tiles(
     r2 = lambda x: x.reshape(1, n_pad)
     new_lb, new_ub, changed = fn(r2(lb), r2(ub), r2(best_l), r2(best_u))
     return new_lb.reshape(n_pad), new_ub.reshape(n_pad), changed.reshape(()) != 0
+
+
+# ---------------------------------------------------------------------------
+# Batched kernels: flat super-tile grid + per-instance convergence mask
+# ---------------------------------------------------------------------------
+
+
+def _batched_fused_scatter_kernel(
+    inst_ref, act_ref,
+    val_ref, col_ref, ii_ref, lhs_ref, rhs_ref, lb_ref, ub_ref,
+    bl_ref, bu_ref, *, int_eps, inf, block,
+):
+    """Kernel D over a packed batch: the grid walks the flat tile stream
+    and the scalar-prefetched ``tile_inst`` map routes every block.
+
+    The batch lives in the leading dimension of the ``(B, n_pad)`` bound
+    plane and accumulators; each tile's blocks are selected by its
+    instance id (``inst_ref``), so instance boundaries are where the
+    resident accumulator block is flushed/reloaded -- tiles of one
+    instance are contiguous by construction, giving each instance exactly
+    one flush, like the single-instance kernel.  ``act_ref`` is the
+    per-instance convergence mask: a converged instance's tiles skip
+    gather/compute/scatter entirely (their accumulators stay at the
+    reduction identity, so the merge kernel reports them unchanged) --
+    finished instances become no-ops instead of blocking the batch.
+    """
+    i = pl.program_id(0)
+    inst = inst_ref[i]
+    first = jnp.where(i == 0, True, inst_ref[jnp.maximum(i - 1, 0)] != inst)
+
+    @pl.when(first)
+    def _():
+        bl_ref[...] = jnp.full_like(bl_ref[...], -inf)
+        bu_ref[...] = jnp.full_like(bu_ref[...], inf)
+
+    @pl.when(act_ref[inst] != 0)
+    def _():
+        val = val_ref[...]
+        r, k = val.shape[-2:]
+        val = val.reshape(r, k)
+        col = col_ref[...].reshape(r, k)
+        lb_g, ub_g = _gather_bounds_tile(col, lb_ref, ub_ref, block=block)
+        rmf, rmc, rxf, rxc = tile_row_aggregates(val, lb_g, ub_g, inf)
+        lcand, ucand = tile_candidates(
+            val, lb_g, ub_g, ii_ref[...].reshape(r, k) != 0,
+            rmf, rmc, rxf, rxc,
+            lhs_ref[...].reshape(r), rhs_ref[...].reshape(r), int_eps, inf,
+        )
+        _scatter_tile(lcand, ucand, col, bl_ref, bu_ref, inf=inf, block=block)
+
+
+def batched_fused_scatter_round_tiles(
+    val,
+    col,
+    is_int_g,
+    lhs_g,
+    rhs_g,
+    lb,
+    ub,
+    tile_inst,
+    active,
+    n_pad: int,
+    int_eps: float,
+    inf: float = INF,
+    interpret: bool | None = None,
+    block: int = LANE,
+):
+    """Fully fused round over a packed batch: ``(T, R, K)`` flat tile
+    stream (instance-local columns) + ``(B, n_pad)`` bound plane + ``(T,)``
+    tile->instance map + ``(B,)`` active mask -> ``(B, n_pad)`` best_l /
+    best_u.
+
+    Same per-instance semantics as :func:`fused_scatter_round_tiles`
+    (requires every row of every instance to fit one chunk); inactive
+    instances produce identity accumulator rows."""
+    if interpret is None:
+        interpret = _on_cpu()
+    if n_pad % block:
+        raise ValueError(f"n_pad={n_pad} must be a multiple of block={block}")
+    from jax.experimental.pallas import tpu as pltpu
+
+    t, r, k = val.shape
+    bsz = lb.shape[0]
+    dtype = val.dtype
+    tile = pl.BlockSpec((1, r, k), lambda i, inst, act: (i, 0, 0))
+    row_tile = pl.BlockSpec((1, r), lambda i, inst, act: (i, 0))
+    vec = pl.BlockSpec((1, n_pad), lambda i, inst, act: (inst[i], 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(t,),
+        in_specs=[tile, tile, tile, row_tile, row_tile, vec, vec],
+        out_specs=[vec, vec],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, n_pad), dtype),
+        jax.ShapeDtypeStruct((bsz, n_pad), dtype),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(
+            _batched_fused_scatter_kernel, int_eps=int_eps, inf=inf, block=block
+        ),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(
+        tile_inst.astype(jnp.int32), active.astype(jnp.int32),
+        val, col, is_int_g.astype(jnp.int32), lhs_g, rhs_g, lb, ub,
+    )
+
+
+def _apply_updates_batch_kernel(
+    lb_ref, ub_ref, bl_ref, bu_ref, act_ref, nlb_ref, nub_ref, ch_ref, *, eps, inf
+):
+    lb, ub = lb_ref[...], ub_ref[...]
+    new_lb, new_ub, changed = bnd.apply_updates(
+        lb, ub, bl_ref[...], bu_ref[...], eps, inf
+    )
+    act = act_ref[0, 0] != 0
+    nlb_ref[...] = jnp.where(act, new_lb, lb)
+    nub_ref[...] = jnp.where(act, new_ub, ub)
+    ch_ref[...] = (changed & act).astype(jnp.int32).reshape(1, 1)
+
+
+def apply_updates_batch_tiles(
+    lb,
+    ub,
+    best_l,
+    best_u,
+    active,
+    eps: float,
+    inf: float = INF,
+    interpret: bool | None = None,
+):
+    """Batched merge kernel: ``(B, n_pad)`` bounds x best candidates ->
+    updated bounds + ``(B,)`` per-instance changed flags.  The bound buffers
+    are donated (``input_output_aliases``); inactive instances pass through
+    untouched and report unchanged."""
+    if interpret is None:
+        interpret = _on_cpu()
+    bsz, n_pad = lb.shape
+    dtype = lb.dtype
+    vec = pl.BlockSpec((1, n_pad), lambda b: (b, 0))
+    flag = pl.BlockSpec((1, 1), lambda b: (b, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, n_pad), dtype),
+        jax.ShapeDtypeStruct((bsz, n_pad), dtype),
+        jax.ShapeDtypeStruct((bsz, 1), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_apply_updates_batch_kernel, eps=eps, inf=inf),
+        grid=(bsz,),
+        in_specs=[vec, vec, vec, vec, flag],
+        out_specs=[vec, vec, flag],
+        out_shape=out_shape,
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )
+    new_lb, new_ub, changed = fn(
+        lb, ub, best_l, best_u, active.astype(jnp.int32).reshape(bsz, 1)
+    )
+    return new_lb, new_ub, changed.reshape(bsz) != 0

@@ -215,3 +215,61 @@ def candidates_scatter_tiles_ref(
         lhs_g, rhs_g, int_eps, inf,
     )
     return scatter_round_ref(lcand, ucand, col, n_pad, inf)
+
+
+# ---------------------------------------------------------------------------
+# Batched oracles: flat super-tile stream, per-instance column windows
+# ---------------------------------------------------------------------------
+
+
+def batched_scatter_round_ref(lcand, ucand, col_g, batch: int, n_pad: int, inf: float = INF):
+    """Column reduction over the whole batch in ONE flat segment op.
+
+    ``col_g`` carries global column ids (``col + tile_inst * n_pad``), so
+    instance windows never alias; within each window the element order is
+    the instance's own tile order, which keeps the per-instance reduction
+    bit-identical to :func:`scatter_round_ref`."""
+    flat_col = col_g.reshape(-1)
+    best_l = jax.ops.segment_max(lcand.reshape(-1), flat_col, num_segments=batch * n_pad)
+    best_u = jax.ops.segment_min(ucand.reshape(-1), flat_col, num_segments=batch * n_pad)
+    best_l = jnp.maximum(best_l, -inf).reshape(batch, n_pad)
+    best_u = jnp.minimum(best_u, inf).reshape(batch, n_pad)
+    return best_l, best_u
+
+
+def batched_fused_scatter_round_ref(
+    val, col_g, is_int_g, lhs_g, rhs_g, lb, ub, n_pad: int,
+    int_eps: float, inf: float = INF,
+):
+    """Oracle for the batched fused-scatter kernel: ``(T, R, K)`` flat tile
+    stream + ``(B, n_pad)`` bound plane -> ``(B, n_pad)`` x2.  The bound
+    gather indexes the flattened plane with global column ids; per instance
+    the arithmetic is exactly the single-instance fused round."""
+    batch = lb.shape[0]
+    lbf, ubf = lb.reshape(-1), ub.reshape(-1)
+    lcand, ucand = fused_round_tiles_ref(
+        val, lbf[col_g], ubf[col_g], is_int_g, lhs_g, rhs_g, int_eps, inf
+    )
+    return batched_scatter_round_ref(lcand, ucand, col_g, batch, n_pad, inf)
+
+
+def batched_candidates_scatter_round_ref(
+    val, col_g, is_int_g, chunk_row, lhs_g, rhs_g, lb, ub,
+    m_total: int, n_pad: int, int_eps: float, inf: float = INF,
+):
+    """Batched round for rows spanning several chunks: one flat activity
+    segment-combine over GLOBAL row ids (instance ``i``'s padding chunks
+    target its own dummy row, so segments never alias across instances),
+    then candidates + the flat column reduction."""
+    batch = lb.shape[0]
+    lbf, ubf = lb.reshape(-1), ub.reshape(-1)
+    lb_t, ub_t = lbf[col_g], ubf[col_g]
+    mf, mc, xf, xc = activities_tiles_ref(val, lb_t, ub_t, inf)
+    flat = chunk_row.reshape(-1)
+    seg = lambda x: jax.ops.segment_sum(x.reshape(-1), flat, num_segments=m_total + 1)
+    g = lambda x: seg(x)[chunk_row]
+    lcand, ucand = candidates_tiles_ref(
+        val, lb_t, ub_t, is_int_g, g(mf), g(mc), g(xf), g(xc),
+        lhs_g, rhs_g, int_eps, inf,
+    )
+    return batched_scatter_round_ref(lcand, ucand, col_g, batch, n_pad, inf)

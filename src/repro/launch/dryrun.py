@@ -27,7 +27,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from ..configs import ARCH_IDS, get_config
 from ..models.config import SHAPES, cell_supported, input_specs

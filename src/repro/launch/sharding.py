@@ -8,10 +8,8 @@ sharding, so the full optimizer is sharded over all 256/512 chips.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..models.config import ModelConfig

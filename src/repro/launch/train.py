@@ -19,7 +19,7 @@ import numpy as np
 
 from ..configs import get_config
 from ..data.tokens import DataConfig, make_batch
-from ..models.transformer import init_params, padded_vocab
+from ..models.transformer import init_params
 from ..train.checkpoint import AsyncCheckpointer, restore_checkpoint
 from ..train.optimizer import OptimizerConfig, init_opt_state
 from ..train.train_step import make_train_step

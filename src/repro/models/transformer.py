@@ -18,8 +18,7 @@ emit cache), decode (one token, consume+emit cache).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

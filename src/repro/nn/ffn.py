@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .layers import dense_init, normal_init
+from .layers import normal_init
 
 
 def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):

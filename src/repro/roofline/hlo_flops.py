@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import collections
 import re
-from typing import Dict, Tuple
+from typing import Dict
 
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z]\w*\[[0-9,]*\](?:\{[^}]*\})?))\s*([\w\-]+)\(")
 _SHAPE_RE = re.compile(r"([a-z]+\d*)\[([0-9,]*)\]")

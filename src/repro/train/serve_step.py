@@ -5,8 +5,6 @@ against a KV cache of size seq_len (the task-spec definition).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -7,7 +7,6 @@ with the shardings from ``launch.sharding``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -1,0 +1,337 @@
+"""Batched multi-instance propagation: packing, kernels, drivers.
+
+Four layers:
+  * packing: flat super-tile structure (per-instance row/col offsets,
+    contiguous tile streams, index round-trip);
+  * acceptance: ``propagate_batch`` over a bucket of >= 8 Set-2 instances is
+    BITWISE identical to per-instance ``scatter='fused'`` runs;
+  * convergence mask: a batch mixing a 1-round instance with a many-round
+    instance converges each to its own fixed point (own round count, no
+    cross-instance bound leakage), finished instances are no-ops;
+  * kernels: the batched fused-scatter kernel (scalar-prefetch instance
+    routing + active gating) and the batched merge kernel vs their oracles.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    INF,
+    Problem,
+    batch_stats,
+    bounds_equal,
+    csr_from_coo,
+    pack_problems,
+    propagate_batch,
+)
+from repro.core import bounds as bnd
+from repro.data import make_cascade_chain, make_knapsack, make_mixed, make_set_cover
+from repro.kernels import (
+    apply_updates_batch_tiles,
+    batched_fused_scatter_round_tiles,
+    col_pad,
+    propagate_block_ell,
+)
+from repro.kernels import ref as kref
+
+
+def _set2_bucket(count=8, m=120, n=100):
+    """Set-2-sized instances (size in [100, 200)) that share one bucket."""
+    return [make_mixed(m=m, n=n, seed=s) for s in range(count)]
+
+
+def _free_problem(m=20, n=60, seed=0):
+    """Converges in one (no-change) round: every side is infinite."""
+    p = make_knapsack(n=n, m=m, seed=seed)
+    return p._replace(lhs=np.full(p.m, -INF), rhs=np.full(p.m, INF))
+
+
+# ---------------------------------------------------------------------------
+# Packing
+# ---------------------------------------------------------------------------
+
+
+def test_pack_problems_flat_structure():
+    probs = _set2_bucket(3) + [make_knapsack(n=60, m=20, seed=7)]
+    batches = pack_problems(probs)
+    assert len(batches) == 1  # all pad to n_pad == 128
+    b = batches[0]
+    ell = b.ell
+    assert sorted(b.indices) == [0, 1, 2, 3]
+    # Tile streams are contiguous per instance and ordered.
+    assert (np.diff(ell.tile_inst) >= 0).all()
+    # Global rows: instance i's chunks stay inside its row window.
+    for i, p in enumerate(b.problems):
+        rows = ell.chunk_row[ell.tile_inst == i]
+        assert rows.min() >= ell.row_offset[i]
+        assert rows.max() <= ell.row_offset[i] + p.m  # dummy row included
+    # Side stacking: dummy rows are zero, real rows match.
+    for i, p in enumerate(b.problems):
+        off = ell.row_offset[i]
+        np.testing.assert_array_equal(b.lhs1[off : off + p.m], p.lhs)
+        assert b.lhs1[off + p.m] == 0.0
+    stats = batch_stats(batches)
+    assert stats["instances"] == 4 and stats["buckets"] == 1
+
+
+def test_pack_problems_buckets_by_col_pad():
+    probs = [make_mixed(m=120, n=100, seed=0), make_mixed(m=120, n=200, seed=1)]
+    batches = pack_problems(probs)
+    assert len(batches) == 2  # n_pad 128 vs 256
+    assert {b.n_pad for b in batches} == {128, 256}
+    # Forcing a common width packs them together (the batch-sharded path).
+    (single,) = pack_problems(probs, n_pad=256)
+    assert single.size == 2 and single.n_pad == 256
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: batched == per-instance fused, bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_batched_matches_single_instance_fused_bitwise():
+    probs = _set2_bucket(8)
+    assert len(pack_problems(probs)) == 1  # one bucket of >= 8 Set-2 instances
+    results = propagate_batch(probs, use_pallas=False)
+    for p, r in zip(probs, results):
+        single = propagate_block_ell(
+            p, scatter="fused", use_pallas=False, driver="device_loop"
+        )
+        np.testing.assert_array_equal(np.asarray(r.lb), np.asarray(single.lb))
+        np.testing.assert_array_equal(np.asarray(r.ub), np.asarray(single.ub))
+        assert int(r.rounds) == int(single.rounds)
+        assert bool(r.converged) == bool(single.converged)
+        assert bool(r.infeasible) == bool(single.infeasible)
+
+
+def test_batched_matches_single_instance_multichunk_bitwise():
+    """tile_width below the longest row forces the multi-chunk batched path."""
+    probs = [make_knapsack(n=40, m=10, seed=s) for s in range(3)]
+    assert any(int(np.diff(p.csr.row_ptr).max()) > 8 for p in probs)
+    results = propagate_batch(probs, tile_rows=2, tile_width=8, use_pallas=False)
+    for p, r in zip(probs, results):
+        single = propagate_block_ell(
+            p, tile_rows=2, tile_width=8, scatter="fused",
+            use_pallas=False, driver="device_loop",
+        )
+        np.testing.assert_array_equal(np.asarray(r.lb), np.asarray(single.lb))
+        np.testing.assert_array_equal(np.asarray(r.ub), np.asarray(single.ub))
+        assert int(r.rounds) == int(single.rounds)
+
+
+def test_batched_pallas_interpret_matches_jnp_engine():
+    probs = [make_knapsack(n=60, m=20, seed=s) for s in range(2)] + [
+        make_set_cover(n=60, m=22, seed=9),
+        make_cascade_chain(16),
+    ]
+    assert len(pack_problems(probs)) == 1
+    rp = propagate_batch(probs, use_pallas=True, interpret=True)
+    rj = propagate_batch(probs, use_pallas=False)
+    for a, b in zip(rp, rj):
+        np.testing.assert_allclose(
+            np.asarray(a.lb), np.asarray(b.lb), rtol=1e-12, atol=1e-12
+        )
+        np.testing.assert_allclose(
+            np.asarray(a.ub), np.asarray(b.ub), rtol=1e-12, atol=1e-12
+        )
+        assert int(a.rounds) == int(b.rounds)
+
+
+def test_batched_host_loop_matches_device_loop():
+    probs = _set2_bucket(3)
+    rh = propagate_batch(probs, use_pallas=False, driver="host_loop")
+    rd = propagate_batch(probs, use_pallas=False, driver="device_loop")
+    for a, b in zip(rh, rd):
+        np.testing.assert_array_equal(np.asarray(a.lb), np.asarray(b.lb))
+        np.testing.assert_array_equal(np.asarray(a.ub), np.asarray(b.ub))
+        assert int(a.rounds) == int(b.rounds)
+
+
+# ---------------------------------------------------------------------------
+# Per-instance convergence mask
+# ---------------------------------------------------------------------------
+
+
+def test_convergence_mask_mixed_rounds_no_leakage():
+    """One-round instance + many-round cascade in ONE bucket: each converges
+    to its own fixed point with its own round count, and the bounds are
+    bitwise what each instance gets when propagated alone."""
+    fast = _free_problem(m=20, n=60)
+    slow = make_cascade_chain(16)  # needs ~18 rounds
+    probs = [fast, slow]
+    assert len(pack_problems(probs)) == 1
+    res = propagate_batch(probs, use_pallas=False)
+    assert int(res[0].rounds) == 1
+    assert int(res[1].rounds) > 10
+    for p, r in zip(probs, res):
+        single = propagate_block_ell(
+            p, scatter="fused", use_pallas=False, driver="device_loop"
+        )
+        assert int(r.rounds) == int(single.rounds)
+        np.testing.assert_array_equal(np.asarray(r.lb), np.asarray(single.lb))
+        np.testing.assert_array_equal(np.asarray(r.ub), np.asarray(single.ub))
+    assert bool(res[0].converged) and bool(res[1].converged)
+
+
+def test_per_instance_infeasibility_is_isolated():
+    """An infeasible instance reports infeasible without poisoning its
+    bucket mates."""
+    ok = make_set_cover(n=30, m=10, seed=1)
+    bad = Problem(
+        csr=csr_from_coo(
+            np.array([0]), np.array([0]), np.array([1.0]), 1, 30
+        ),
+        lhs=np.full(1, 5.0),  # x0 >= 5 with ub = 1: empty domain
+        rhs=np.full(1, INF),
+        lb=np.zeros(30),
+        ub=np.ones(30),
+        is_int=np.zeros(30, dtype=bool),
+    )
+    res = propagate_batch([ok, bad], use_pallas=False)
+    assert not bool(res[0].infeasible)
+    assert bool(res[1].infeasible)
+
+
+# ---------------------------------------------------------------------------
+# Batched kernels vs oracles
+# ---------------------------------------------------------------------------
+
+
+def _flat_batch(rng, sizes, r, k, n, dtype=np.float64):
+    """Random flat tile stream: ``sizes[i]`` tiles for instance i."""
+    t = sum(sizes)
+    bsz = len(sizes)
+    n_pad = col_pad(n)
+    val = rng.choice([-2.0, -1.0, 0.0, 1.0, 3.0], size=(t, r, k)).astype(dtype)
+    col = rng.integers(0, n, size=(t, r, k)).astype(np.int32)
+    col[val == 0] = 0
+    tile_inst = np.repeat(np.arange(bsz, dtype=np.int32), sizes)
+    lb = rng.uniform(-5, 0, size=(bsz, n_pad)).astype(dtype)
+    ub = rng.uniform(0, 5, size=(bsz, n_pad)).astype(dtype)
+    lb[rng.random((bsz, n_pad)) < 0.15] = -INF
+    ub[rng.random((bsz, n_pad)) < 0.15] = INF
+    ii = rng.random((t, r, k)) < 0.5
+    lhs = rng.uniform(-10, 0, size=(t, r)).astype(dtype)
+    rhs = rng.uniform(0, 10, size=(t, r)).astype(dtype)
+    j = jnp.asarray
+    return (j(val), j(col), j(ii), j(lhs), j(rhs), j(lb), j(ub),
+            j(tile_inst), n_pad)
+
+
+@pytest.mark.parametrize("sizes,n", [((2, 3), 20), ((1, 4, 2), 150)])
+def test_batched_fused_scatter_kernel_matches_ref(sizes, n, rng):
+    val, col, ii, lhs, rhs, lb, ub, tile_inst, n_pad = _flat_batch(
+        rng, sizes, 4, 8, n
+    )
+    active = jnp.ones(len(sizes), dtype=bool)
+    got = batched_fused_scatter_round_tiles(
+        val, col, ii, lhs, rhs, lb, ub, tile_inst, active, n_pad,
+        int_eps=1e-6, interpret=True,
+    )
+    col_g = col + tile_inst[:, None, None] * n_pad
+    want = kref.batched_fused_scatter_round_ref(
+        val, col_g, ii, lhs, rhs, lb, ub, n_pad, int_eps=1e-6
+    )
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-12, atol=1e-12)
+
+
+def test_batched_kernel_inactive_instances_emit_identity(rng):
+    val, col, ii, lhs, rhs, lb, ub, tile_inst, n_pad = _flat_batch(
+        rng, (2, 2, 3), 4, 8, 30
+    )
+    active = jnp.asarray([True, False, True])
+    bl, bu = batched_fused_scatter_round_tiles(
+        val, col, ii, lhs, rhs, lb, ub, tile_inst, active, n_pad,
+        int_eps=1e-6, interpret=True,
+    )
+    assert (np.asarray(bl)[1] == -INF).all()
+    assert (np.asarray(bu)[1] == INF).all()
+    # Active rows match the all-active oracle.
+    col_g = col + tile_inst[:, None, None] * n_pad
+    wl, wu = kref.batched_fused_scatter_round_ref(
+        val, col_g, ii, lhs, rhs, lb, ub, n_pad, int_eps=1e-6
+    )
+    np.testing.assert_allclose(np.asarray(bl)[[0, 2]], np.asarray(wl)[[0, 2]])
+    np.testing.assert_allclose(np.asarray(bu)[[0, 2]], np.asarray(wu)[[0, 2]])
+
+
+def test_apply_updates_batch_tiles_matches_shared_semantics(rng):
+    bsz, n_pad = 3, 128
+    lb = jnp.asarray(rng.uniform(-5, 0, (bsz, n_pad)))
+    ub = jnp.asarray(rng.uniform(0, 5, (bsz, n_pad)))
+    best_l = jnp.asarray(rng.uniform(-6, 2, (bsz, n_pad)))
+    best_u = jnp.asarray(rng.uniform(-2, 6, (bsz, n_pad)))
+    active = jnp.asarray([True, False, True])
+    got = apply_updates_batch_tiles(
+        lb, ub, best_l, best_u, active, eps=1e-9, interpret=True
+    )
+    want = bnd.apply_updates_batch(lb, ub, best_l, best_u, eps=1e-9)
+    for i in range(bsz):
+        if bool(active[i]):
+            np.testing.assert_array_equal(np.asarray(got[0])[i], np.asarray(want[0])[i])
+            np.testing.assert_array_equal(np.asarray(got[1])[i], np.asarray(want[1])[i])
+            assert bool(got[2][i]) == bool(want[2][i])
+        else:  # inactive: bounds pass through, unchanged
+            np.testing.assert_array_equal(np.asarray(got[0])[i], np.asarray(lb)[i])
+            np.testing.assert_array_equal(np.asarray(got[1])[i], np.asarray(ub)[i])
+            assert not bool(got[2][i])
+
+
+def test_batched_results_have_unpadded_shapes():
+    probs = [make_mixed(m=30, n=25, seed=1), make_mixed(m=40, n=31, seed=2)]
+    res = propagate_batch(probs, use_pallas=False)
+    assert res[0].lb.shape == (25,) and res[1].lb.shape == (31,)
+
+
+def test_repeated_propagate_batch_is_stable():
+    """Runner/prepare/pack caches + donation must not corrupt state across
+    repeated propagations of the same problem list."""
+    probs = _set2_bucket(3)
+    r1 = propagate_batch(probs, use_pallas=False)
+    r2 = propagate_batch(probs, use_pallas=False)
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(np.asarray(a.lb), np.asarray(b.lb))
+        np.testing.assert_array_equal(np.asarray(a.ub), np.asarray(b.ub))
+
+
+# ---------------------------------------------------------------------------
+# Batch-axis sharding (subprocess with forced host devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_batch_sharded_matches_batched():
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = src
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        jax.config.update("jax_enable_x64", True)
+        from repro.core import propagate_batch, propagate_batch_sharded, bounds_equal
+        from repro.data import make_mixed, make_knapsack, make_cascade_chain
+        probs = ([make_mixed(m=80, n=60, seed=s) for s in range(5)]
+                 + [make_knapsack(n=60, m=20, seed=3), make_cascade_chain(12)])
+        mesh = jax.make_mesh((4,), ("b",))
+        rs = propagate_batch_sharded(probs, mesh)
+        rb = propagate_batch(probs, use_pallas=False)
+        for p, a, b in zip(probs, rs, rb):
+            assert bounds_equal(np.asarray(a.lb), np.asarray(a.ub),
+                                np.asarray(b.lb), np.asarray(b.ub)), p.m
+            assert int(a.rounds) == int(b.rounds)
+            assert bool(a.converged) == bool(b.converged)
+        print("BATCH_SHARDED_OK")
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env, timeout=420,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "BATCH_SHARDED_OK" in out.stdout

@@ -1,6 +1,5 @@
 """Multi-device tests (subprocess with forced host devices, so the main
 pytest process keeps seeing exactly 1 device)."""
-import json
 import os
 import subprocess
 import sys

@@ -18,7 +18,6 @@ from repro.core import (
     Problem,
     bounds_equal,
     csr_from_coo,
-    csr_from_dense,
     propagate_sequential,
 )
 from repro.core import bounds as bnd

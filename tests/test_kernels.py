@@ -11,7 +11,6 @@ from repro.data import make_cascade_chain, make_knapsack, make_mixed, make_set_c
 from repro.kernels import (
     activities_tiles,
     candidates_tiles,
-    device_block_ell,
     fused_round_tiles,
     propagate_block_ell,
 )

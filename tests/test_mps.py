@@ -3,8 +3,9 @@ propagator (the limit point must survive serialization)."""
 import io
 
 import numpy as np
+import pytest
 
-from repro.core import INF, bounds_equal, propagate
+from repro.core import INF, Problem, bounds_equal, propagate
 from repro.data.instances import make_mixed
 from repro.data.mps import read_mps, write_mps
 
@@ -84,3 +85,102 @@ ENDATA
     r = propagate(p)
     np.testing.assert_allclose(np.asarray(r.ub), [5.0])
     np.testing.assert_allclose(np.asarray(r.lb), [2.0])
+
+
+# ---------------------------------------------------------------------------
+# Round-trip property: write_mps -> read_mps reproduces the Problem
+# ---------------------------------------------------------------------------
+
+
+def _random_roundtrip_problem(seed):
+    """Random Problem exercising every writer construct: L/G/E/ranged/free
+    rows, BV/MI/UI-equivalent bound types, FX, infinite bounds, integrality
+    markers.  Every row and column has at least one entry (the writer drops
+    empty columns by construction)."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(4, 20))
+    n = int(rng.integers(4, 16))
+    mask = rng.random((m, n)) < 0.35
+    mask[np.arange(m), rng.integers(0, n, size=m)] = True   # rows nonempty
+    mask[rng.integers(0, m, size=n), np.arange(n)] = True   # cols nonempty
+    rows, cols = np.nonzero(mask)
+    vals = rng.standard_normal(rows.size) * 10.0            # arbitrary floats
+    vals[vals == 0] = 1.0
+    from repro.core import csr_from_coo
+
+    csr = csr_from_coo(rows.astype(np.int32), cols.astype(np.int32), vals, m, n)
+
+    kind = rng.integers(0, 5, size=m)  # 0=L 1=G 2=E 3=ranged 4=free
+    lo = rng.standard_normal(m) * 5.0
+    hi = lo + np.abs(rng.standard_normal(m)) * 5.0 + 1e-3
+    lhs = np.where(kind == 0, -INF, lo)
+    rhs = np.where(kind == 1, INF, np.where(kind == 2, lo, hi))
+    lhs = np.where(kind == 4, -INF, lhs)
+    rhs = np.where(kind == 4, INF, rhs)
+
+    is_int = rng.random(n) < 0.5
+    btype = rng.integers(0, 5, size=n)  # 0=[0,U] 1=MI 2=free 3=FX 4=[L,U]
+    lb = np.zeros(n)
+    ub = np.abs(rng.standard_normal(n)) * 9.0 + 0.5
+    lb[btype == 1] = -INF
+    lb[btype == 2] = -INF
+    ub[btype == 2] = INF
+    fx = btype == 3
+    lb[fx] = ub[fx] = rng.standard_normal(fx.sum()) * 3.0
+    lb[btype == 4] = -np.abs(rng.standard_normal((btype == 4).sum())) * 3.0
+    binary = (rng.random(n) < 0.3) & ~fx
+    lb[binary], ub[binary], is_int[binary] = 0.0, 1.0, True  # BV-equivalent
+    return Problem(csr=csr, lhs=lhs, rhs=rhs, lb=lb, ub=ub, is_int=is_int)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_roundtrip_reproduces_problem(seed):
+    """write_mps -> read_mps reproduces the Problem: identical sparsity
+    and values (17-digit exact), identical bounds/integrality, and sides
+    equal up to one rounding in the RANGES reconstruction."""
+    p = _random_roundtrip_problem(seed)
+    buf = io.StringIO()
+    write_mps(p, buf)
+    buf.seek(0)
+    p2 = read_mps(buf)
+    assert (p2.m, p2.n, p2.nnz) == (p.m, p.n, p.nnz)
+    np.testing.assert_array_equal(p2.csr.to_dense(), p.csr.to_dense())
+    np.testing.assert_array_equal(np.asarray(p2.is_int), np.asarray(p.is_int))
+    np.testing.assert_array_equal(p2.lb, p.lb)
+    np.testing.assert_array_equal(p2.ub, p.ub)
+    # Ranged rows reconstruct lhs as rhs - |range|: exact values everywhere,
+    # one float rounding allowed in that reconstruction.
+    np.testing.assert_allclose(p2.rhs, p.rhs, rtol=0, atol=0)
+    np.testing.assert_allclose(p2.lhs, p.lhs, rtol=1e-15, atol=1e-12)
+
+
+def test_reader_bound_types_bv_mi_ui():
+    """BV / MI / UI / LI bound cards: integrality + bound semantics."""
+    mps = """\
+NAME T
+ROWS
+ N OBJ
+ L R1
+COLUMNS
+    A  R1  1.0
+    B  R1  1.0
+    C  R1  1.0
+    D  R1  1.0
+RHS
+    RHS  R1  10.0
+BOUNDS
+ BV BND  A
+ MI BND  B
+ UI BND  C  7
+ LI BND  D  -2
+ENDATA
+"""
+    p = read_mps(io.StringIO(mps))
+    # BV: binary [0, 1] integer.
+    assert p.is_int[0] and p.lb[0] == 0.0 and p.ub[0] == 1.0
+    # MI: lower bound -inf, continuous.
+    assert not p.is_int[1] and p.lb[1] <= -INF and p.ub[1] >= INF
+    # UI: integer upper bound.
+    assert p.is_int[2] and p.lb[2] == 0.0 and p.ub[2] == 7.0
+    # LI: integer lower bound.
+    assert p.is_int[3] and p.lb[3] == -2.0 and p.ub[3] >= INF

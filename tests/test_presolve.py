@@ -1,0 +1,118 @@
+"""Direct unit tests for ``core.presolve.analyze_constraints`` (paper §1.1
+Steps 1 and 2): redundancy / infeasibility verdicts from row activities,
+including rows with infinite activity contributions."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import INF, analyze_constraints
+from repro.core.propagator import DeviceProblem
+from repro.data import make_mixed
+
+
+def _analyze(rows, cols, vals, lhs, rhs, lb, ub, m):
+    return analyze_constraints(
+        jnp.asarray(np.asarray(rows, dtype=np.int32)),
+        jnp.asarray(np.asarray(vals, dtype=np.float64)),
+        jnp.asarray(np.asarray(cols, dtype=np.int32)),
+        jnp.asarray(np.asarray(lhs, dtype=np.float64)),
+        jnp.asarray(np.asarray(rhs, dtype=np.float64)),
+        jnp.asarray(np.asarray(lb, dtype=np.float64)),
+        jnp.asarray(np.asarray(ub, dtype=np.float64)),
+        m,
+    )
+
+
+def test_redundant_row():
+    # x0 + x1 <= 5 with x in [0, 1]^2: amax = 2 <= 5, lhs = -inf  ->  Step 1.
+    v = _analyze([0, 0], [0, 1], [1.0, 1.0], [-INF], [5.0], [0, 0], [1, 1], 1)
+    assert bool(v.redundant[0])
+    assert not bool(v.infeasible[0])
+    assert not bool(v.any_infeasible)
+
+
+def test_infeasible_row_lhs_unreachable():
+    # x0 >= 5 with x0 in [0, 1]: amax = 1 < lhs  ->  Step 2.
+    v = _analyze([0], [0], [1.0], [5.0], [INF], [0], [1], 1)
+    assert bool(v.infeasible[0])
+    assert not bool(v.redundant[0])
+    assert bool(v.any_infeasible)
+
+
+def test_infeasible_row_rhs_unreachable():
+    # -2 x0 <= -10 i.e. amin = -2 > rhs with x0 in [0, 1].
+    v = _analyze([0], [0], [-2.0], [-INF], [-10.0], [0], [1], 1)
+    assert bool(v.infeasible[0])
+    assert bool(v.any_infeasible)
+
+
+def test_mixed_verdicts():
+    # Row 0 redundant, row 1 infeasible, row 2 neither.
+    rows = [0, 1, 2]
+    cols = [0, 1, 2]
+    vals = [1.0, 1.0, 1.0]
+    lhs = [-INF, 5.0, 0.5]
+    rhs = [10.0, INF, INF]
+    lb = [0.0, 0.0, 0.0]
+    ub = [1.0, 1.0, 1.0]
+    v = _analyze(rows, cols, vals, lhs, rhs, lb, ub, 3)
+    assert np.asarray(v.redundant).tolist() == [True, False, False]
+    assert np.asarray(v.infeasible).tolist() == [False, True, False]
+    assert bool(v.any_infeasible)
+
+
+def test_infinite_activity_rows():
+    # x0 has ub = +inf: amax = +inf, so a finite-rhs row is neither
+    # redundant (amax > rhs) nor infeasible (amin = 0 <= rhs).
+    v = _analyze([0], [0], [1.0], [-INF], [3.0], [0.0], [INF], 1)
+    assert not bool(v.redundant[0])
+    assert not bool(v.infeasible[0])
+    # Both bounds infinite: amin = -inf, amax = +inf -- never a verdict
+    # unless the sides are infinite too.
+    v = _analyze([0], [0], [1.0], [-2.0], [3.0], [-INF], [INF], 1)
+    assert not bool(v.redundant[0])
+    assert not bool(v.infeasible[0])
+    # Free row (both sides infinite) IS redundant whatever the activity.
+    v = _analyze([0], [0], [1.0], [-INF], [INF], [-INF], [INF], 1)
+    assert bool(v.redundant[0])
+
+
+def test_single_infinity_does_not_mask_other_contributions():
+    # Row: x0 + x1 >= 1 with x0 in [0, inf), x1 in [0, 1].
+    # amin = 0 (finite), amax = +inf -> not redundant (rhs fine: +inf),
+    # not infeasible (amax >= lhs).
+    v = _analyze([0, 0], [0, 1], [1.0, 1.0], [1.0], [INF],
+                 [0.0, 0.0], [INF, 1.0], 1)
+    assert not bool(v.redundant[0])
+    assert not bool(v.infeasible[0])
+
+
+def test_feas_eps_tolerance():
+    # amin exceeds rhs by less than feas_eps: not flagged infeasible.
+    v = _analyze([0], [0], [1.0], [-INF], [1.0 - 1e-12], [1.0], [1.0], 1)
+    assert not bool(v.infeasible[0])
+    # ... but a clear violation is.
+    v = _analyze([0], [0], [1.0], [-INF], [0.5], [1.0], [1.0], 1)
+    assert bool(v.infeasible[0])
+
+
+def test_matches_bruteforce_on_random_instance():
+    p = make_mixed(m=60, n=45, seed=7)
+    dp = DeviceProblem(p)
+    v = analyze_constraints(
+        dp.row_id, dp.val, dp.col, dp.lhs, dp.rhs, dp.lb0, dp.ub0, p.m
+    )
+    # Dense brute force with sentinel-infinity semantics.
+    a = p.csr.to_dense()
+    lb = np.where(np.abs(p.lb) >= INF, np.sign(p.lb) * np.inf, p.lb)
+    ub = np.where(np.abs(p.ub) >= INF, np.sign(p.ub) * np.inf, p.ub)
+    with np.errstate(invalid="ignore"):
+        cmin = np.where(a > 0, a * lb, a * ub)
+        cmax = np.where(a > 0, a * ub, a * lb)
+    amin = np.where(a == 0, 0.0, cmin).sum(axis=1)  # mask 0 * inf = NaN
+    amax = np.where(a == 0, 0.0, cmax).sum(axis=1)
+    lhs = np.where(p.lhs <= -INF, -np.inf, p.lhs)  # sentinel sides -> IEEE inf
+    rhs = np.where(p.rhs >= INF, np.inf, p.rhs)
+    redundant = (lhs <= amin) & (amax <= rhs)
+    infeasible = (amin > rhs + 1e-8) | (lhs > amax + 1e-8)
+    np.testing.assert_array_equal(np.asarray(v.redundant), redundant)
+    np.testing.assert_array_equal(np.asarray(v.infeasible), infeasible)

@@ -1,7 +1,5 @@
 """Unit tests for the core domain-propagation engine (paper §1.1, §3.4)."""
 import numpy as np
-import jax.numpy as jnp
-import pytest
 
 from repro.core import (
     INF,

@@ -2,7 +2,6 @@
 dimension that a rule shards must divide the production mesh axis sizes.
 These catch config regressions without compiling anything (no devices)."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCH_IDS, get_config

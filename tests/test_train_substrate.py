@@ -4,7 +4,6 @@ import os
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.data.tokens import DataConfig, make_batch
 from repro.train.checkpoint import (
