@@ -5,7 +5,10 @@ on CPU that is the honest number; interpret-mode Pallas timings measure the
 emulator) and measures bytes accessed per round via
 ``repro.kernels.round_cost_analysis``; additionally times full batched
 propagation (one dispatch per bucket, ``propagate_batch``) against
-sequential per-instance dispatches and reports instances/sec throughput.
+sequential per-instance dispatches, and warm-start NODE batches (B nodes of
+one instance over a shared resident matrix, ``propagate_nodes``) against
+repacking each node as a fresh instance, reporting instances/sec and
+nodes/sec throughput.
 
 Results are MERGED into ``BENCH_prop.json`` (engine rows are updated or
 added, unknown keys from earlier PRs are preserved) so the perf trajectory
@@ -20,8 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.propagator import owned_copy
-from repro.data.instances import instances_for_set
+from repro.core.nodes import branch_children, propagate_nodes
+from repro.core.propagator import fresh_instance_runner, owned_copy, propagate
+from repro.data.instances import instances_for_set, make_pseudo_boolean
 from repro.kernels import (
     batched_device_runner,
     legacy_round_fn_for,
@@ -135,6 +139,72 @@ def batched_throughput():
     }
 
 
+# Node-batch population: one Set-2-sized pseudo-boolean instance (the paper's
+# §1 target workload; rows carry <= 8 nonzeros so tile_width=8 keeps the
+# block-ELL padding proportional to nnz) x NODE_BATCH warm-started nodes,
+# each differing from the propagated root by a couple of branching fixings.
+NODE_BATCH = 32
+NODE_TILE = dict(tile_rows=8, tile_width=8)
+
+
+def _node_population():
+    root = make_pseudo_boolean(n=150, m=160, seed=1)  # seed 1: feasible root
+    r0 = propagate(root)
+    assert not bool(r0.infeasible)
+    lb0, ub0 = np.asarray(r0.lb), np.asarray(r0.ub)
+    rng = np.random.default_rng(0)
+    lb_nodes = np.repeat(lb0[None, :], NODE_BATCH, axis=0)
+    ub_nodes = np.repeat(ub0[None, :], NODE_BATCH, axis=0)
+    for i in range(NODE_BATCH):
+        lb, ub = lb_nodes[i], ub_nodes[i]
+        for _ in range(2):
+            free = np.flatnonzero(root.is_int & (lb < ub))
+            var = int(rng.choice(free))
+            (dlb, dub), (ulb, uub) = branch_children(lb, ub, var, lb[var])
+            lb, ub = (dlb, dub) if rng.random() < 0.5 else (ulb, uub)
+        lb_nodes[i], ub_nodes[i] = lb, ub
+    return root, lb_nodes, ub_nodes
+
+
+def node_throughput():
+    """Nodes/sec: one warm-start node-batch dispatch over the shared
+    resident matrix vs repacking-and-dispatching each node as a fresh
+    instance (``core.fresh_instance_runner``: per-node host repack + full
+    re-upload, compile excluded; paired median-of-trials as above)."""
+    root, lb_nodes, ub_nodes = _node_population()
+
+    def run_shared():
+        res = propagate_nodes(
+            root, lb_nodes, ub_nodes, use_pallas=False, **NODE_TILE
+        )
+        res.lb.block_until_ready()
+
+    propagate_fresh = fresh_instance_runner(root)
+
+    def run_repack():
+        for i in range(NODE_BATCH):
+            lb, *_ = propagate_fresh(lb_nodes[i], ub_nodes[i])
+        lb.block_until_ready()
+
+    propagate_fresh(lb_nodes[0], ub_nodes[0])[0].block_until_ready()  # compile
+    trials = []
+    for _ in range(7):
+        t_rep = time_fn(run_repack, repeats=3, warmup=1)
+        t_sha = time_fn(run_shared, repeats=3, warmup=1)
+        trials.append((t_rep, t_sha))
+    speedup = float(np.median([tr / ts for tr, ts in trials]))
+    t_rep = float(np.median([tr for tr, _ in trials]))
+    t_sha = float(np.median([ts for _, ts in trials]))
+    return {
+        "instance": {"family": "pseudo_boolean", "m": root.m, "n": root.n,
+                     "nnz": root.nnz},
+        "nodes": NODE_BATCH,
+        "repack_nodes_per_sec": NODE_BATCH / t_rep,
+        "shared_nodes_per_sec": NODE_BATCH / t_sha,
+        "shared_matrix_speedup": speedup,
+    }
+
+
 def _merge_report(report: dict, out_path: str) -> dict:
     """Merge new engine rows into an existing BENCH_prop.json: engine rows
     are updated/added, any other keys from earlier PRs are preserved."""
@@ -172,9 +242,15 @@ def run(out_path: str = OUT_PATH):
             )
 
     thru = batched_throughput()
+    nodes = node_throughput()
     report = {
         "set": SET,
         "instances": len(insts),
+        # The engine-row population (PR 3 added pseudo_boolean to the
+        # default families, growing it 6 -> 8 instances): recorded so the
+        # cross-PR trajectory is read against its workload, not assumed
+        # constant.
+        "families": sorted({spec.family for spec, _ in insts}),
         "engines": {
             e: {
                 "geomean_round_us": geomean(v["round_us"]),
@@ -187,10 +263,15 @@ def run(out_path: str = OUT_PATH):
         "instances_per_sec": thru["batched_instances_per_sec"],
         "speedup_vs_sequential_dispatch": thru["batched_speedup"],
     }
+    report["engines"]["nodes"] = {
+        "nodes_per_sec": nodes["shared_nodes_per_sec"],
+        "speedup_vs_repack_dispatch": nodes["shared_matrix_speedup"],
+    }
     report["bytes_reduction_fused_vs_legacy"] = geomean(
         [l / f for l, f in zip(acc["legacy"]["bytes"], acc["fused"]["bytes"])]
     )
     report["batched_throughput"] = thru
+    report["node_throughput"] = nodes
     report = _merge_report(report, out_path)
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
@@ -209,6 +290,13 @@ def run(out_path: str = OUT_PATH):
          f"instances_per_sec={thru['batched_instances_per_sec']:.1f} "
          f"speedup_vs_sequential={thru['batched_speedup']:.2f}x "
          f"buckets={thru['buckets']} instances={thru['instances']}")
+    )
+    rows.append(
+        ("bench_prop_nodes",
+         1e6 / nodes["shared_nodes_per_sec"],
+         f"nodes_per_sec={nodes['shared_nodes_per_sec']:.1f} "
+         f"speedup_vs_repack={nodes['shared_matrix_speedup']:.2f}x "
+         f"nodes={nodes['nodes']}")
     )
     rows.append(
         ("bench_prop_json", 0.0,

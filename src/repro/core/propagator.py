@@ -162,15 +162,45 @@ def owned_copy(x):
     return jnp.array(x, copy=True)
 
 
+def initial_bounds(dp_or_arrays, lb0=None, ub0=None, dtype=None, n: int | None = None):
+    """Resolve the warm-start bound overrides of a driver call.
+
+    ``(lb0, ub0)`` are RUNTIME arguments, not prepare-time constants: a
+    branch-and-bound node that differs from its parent by one branching
+    bound propagates through the same prepared engine by passing its bounds
+    here.  ``None`` falls back to the prepared root bounds.  The returned
+    arrays are private copies, so donation into a zero-copy fixed point can
+    never invalidate caller-held buffers or the prepare() caches.
+    """
+    default_lb, default_ub = dp_or_arrays
+    dtype = dtype or default_lb.dtype
+    n = int(default_lb.shape[-1]) if n is None else n
+
+    def pick(override, default):
+        if override is None:
+            return owned_copy(default)
+        arr = jnp.asarray(override, dtype)
+        if arr.shape != (n,):
+            raise ValueError(f"bounds override has shape {arr.shape}, expected {(n,)}")
+        return owned_copy(arr)
+
+    return pick(lb0, default_lb), pick(ub0, default_ub)
+
+
 def propagate_host_loop(
-    dp: DeviceProblem, cfg: PropagatorConfig = DEFAULT_CONFIG
+    dp: DeviceProblem,
+    cfg: PropagatorConfig = DEFAULT_CONFIG,
+    lb0=None,
+    ub0=None,
 ) -> PropagationResult:
     """cpu_loop analogue: host iterates rounds, syncing one flag per round.
 
     Zero-copy: (lb, ub) are donated each call, so XLA reuses the same two
-    bound buffers round over round instead of allocating fresh ones."""
+    bound buffers round over round instead of allocating fresh ones.
+    ``lb0``/``ub0`` warm-start the fixed point from caller-supplied bounds
+    (default: the problem's root bounds)."""
     round_fn = jax.jit(_round_fn(dp, cfg), **donate_kwargs(argnames=("lb", "ub")))
-    lb, ub = owned_copy(dp.lb0), owned_copy(dp.ub0)
+    lb, ub = initial_bounds((dp.lb0, dp.ub0), lb0, ub0, dp.dtype, dp.n)
     rounds = 0
     changed = True
     while changed and rounds < cfg.max_rounds:
@@ -253,6 +283,7 @@ def propagate_batch(
     driver: str = "device_loop",
     interpret: bool | None = None,
     donate: bool | None = None,
+    bounds=None,
 ):
     """Propagate a batch of instances, thousands per device dispatch.
 
@@ -260,8 +291,9 @@ def propagate_batch(
     padded shape (``core.sparse.pack_problems``), each bucket runs its
     fixed point in ONE dispatch with a per-instance convergence mask, and
     results come back as one ``PropagationResult`` per instance, input
-    order.  See ``kernels.ops.propagate_batch_block_ell`` for the engine
-    knobs.
+    order.  ``bounds`` (one ``(lb, ub)`` pair or ``None`` per problem)
+    warm-starts instances from caller bounds without repacking.  See
+    ``kernels.ops.propagate_batch_block_ell`` for the engine knobs.
     """
     from ..kernels.ops import propagate_batch_block_ell  # lazy: kernels imports core
 
@@ -275,16 +307,22 @@ def propagate_batch(
         driver=driver,
         interpret=interpret,
         donate=donate,
+        bounds=bounds,
     )
 
 
 def propagate_device_loop(
-    dp: DeviceProblem, cfg: PropagatorConfig = DEFAULT_CONFIG, unroll: int = 1
+    dp: DeviceProblem,
+    cfg: PropagatorConfig = DEFAULT_CONFIG,
+    unroll: int = 1,
+    lb0=None,
+    ub0=None,
 ) -> PropagationResult:
     """gpu_loop analogue: the whole fixed point is one XLA dispatch.
 
     Zero-copy: the initial bounds are donated into the while_loop carry, so
-    the fixed point runs in place on two device buffers."""
+    the fixed point runs in place on two device buffers.  ``lb0``/``ub0``
+    warm-start the fixed point from caller-supplied bounds."""
     round_fn = _round_fn(dp, cfg)
 
     @functools.partial(jax.jit, **donate_kwargs(argnums=(0, 1)))
@@ -295,15 +333,20 @@ def propagate_device_loop(
         infeasible = check_infeasible(lb, ub, cfg.feas_eps)
         return lb, ub, rounds, ~changed, infeasible
 
-    lb, ub, rounds, converged, infeasible = run(owned_copy(dp.lb0), owned_copy(dp.ub0))
+    lb_init, ub_init = initial_bounds((dp.lb0, dp.ub0), lb0, ub0, dp.dtype, dp.n)
+    lb, ub, rounds, converged, infeasible = run(lb_init, ub_init)
     return PropagationResult(lb, ub, rounds, converged, infeasible)
 
 
 def propagate_unrolled(
-    dp: DeviceProblem, cfg: PropagatorConfig = DEFAULT_CONFIG, unroll: int = 4
+    dp: DeviceProblem,
+    cfg: PropagatorConfig = DEFAULT_CONFIG,
+    unroll: int = 4,
+    lb0=None,
+    ub0=None,
 ) -> PropagationResult:
     """megakernel-flavored driver: k fused rounds per convergence check."""
-    return propagate_device_loop(dp, cfg, unroll=unroll)
+    return propagate_device_loop(dp, cfg, unroll=unroll, lb0=lb0, ub0=ub0)
 
 
 def propagate(
@@ -311,16 +354,64 @@ def propagate(
     cfg: PropagatorConfig = DEFAULT_CONFIG,
     driver: str = "device_loop",
     dtype=None,
+    lb0=None,
+    ub0=None,
 ) -> PropagationResult:
-    """Convenience front end: Problem -> PropagationResult."""
+    """Convenience front end: Problem -> PropagationResult.
+
+    ``lb0``/``ub0`` override the problem's bounds for this call only (the
+    warm-start path: propagate a B&B node's domain through the root
+    problem's prepared arrays without rebuilding anything)."""
     dp = DeviceProblem(p, dtype=dtype)
     if driver == "host_loop":
-        return propagate_host_loop(dp, cfg)
+        return propagate_host_loop(dp, cfg, lb0=lb0, ub0=ub0)
     if driver == "device_loop":
-        return propagate_device_loop(dp, cfg)
+        return propagate_device_loop(dp, cfg, lb0=lb0, ub0=ub0)
     if driver == "unrolled":
-        return propagate_unrolled(dp, cfg)
+        return propagate_unrolled(dp, cfg, lb0=lb0, ub0=ub0)
     raise ValueError(f"unknown driver: {driver}")
+
+
+def fresh_instance_runner(p: Problem, cfg: PropagatorConfig = DEFAULT_CONFIG):
+    """One jitted fixed point whose matrix arrays are RUNTIME arguments.
+
+    Returns ``propagate_fresh(lb, ub) -> (lb, ub, rounds)``.  Each call
+    re-expands the CSR row structure on the host and re-uploads the whole
+    matrix before its single dispatch -- i.e. it treats the node as a
+    brand-new instance.  Shapes are stable across calls, so XLA compiles
+    once; this is the honest "repack each node" baseline the warm-start
+    engines are benchmarked against (``benchmarks/bench_prop.py``,
+    ``examples/bnb_dive.py``), and doubles as a one-off runner for streams
+    of same-shape instances."""
+    eps = cfg.eps_for(p.csr.val.dtype)
+    round_fn = functools.partial(
+        propagation_round, m=p.m, n=p.n, eps=eps, int_eps=cfg.int_eps, inf=cfg.inf
+    )
+
+    @jax.jit
+    def run(row_id, col, val, lhs, rhs, is_int, lb0, ub0):
+        def body(s):
+            lb, ub, _, r = s
+            lb, ub, ch = round_fn(row_id, col, val, lhs, rhs, is_int, lb, ub)
+            return lb, ub, ch, r + 1
+
+        def cond(s):
+            return s[2] & (s[3] < cfg.max_rounds)
+
+        lb, ub, ch, r = jax.lax.while_loop(
+            cond, body, (lb0, ub0, jnp.asarray(True), jnp.int32(0))
+        )
+        return lb, ub, r
+
+    def propagate_fresh(lb, ub):
+        # The per-node repack: row expansion on the host + full re-upload.
+        return run(
+            jnp.asarray(p.csr.row_ids()), jnp.asarray(p.csr.col),
+            jnp.asarray(p.csr.val), jnp.asarray(p.lhs), jnp.asarray(p.rhs),
+            jnp.asarray(p.is_int), jnp.asarray(lb), jnp.asarray(ub),
+        )
+
+    return propagate_fresh
 
 
 # ---------------------------------------------------------------------------

@@ -44,7 +44,7 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
 
 from . import activities as act
 from . import bounds as bnd
-from .propagator import donate_kwargs
+from .propagator import donate_kwargs, initial_bounds
 from .sparse import Problem
 from .types import DEFAULT_CONFIG, INF, PropagationResult, PropagatorConfig
 
@@ -104,8 +104,14 @@ def propagate_sharded(
     mesh: Mesh,
     cfg: PropagatorConfig = DEFAULT_CONFIG,
     dtype=None,
+    lb0=None,
+    ub0=None,
 ) -> PropagationResult:
-    """Distributed fixed-point propagation over every axis of ``mesh``."""
+    """Distributed fixed-point propagation over every axis of ``mesh``.
+
+    ``lb0``/``ub0`` warm-start the fixed point from caller-supplied bounds
+    (default: the problem's root bounds); the replicated bound vectors are
+    the only per-call state, so one partitioned matrix serves any node."""
     axes = tuple(mesh.axis_names)
     num_shards = int(np.prod(mesh.devices.shape))
     dtype = dtype or p.csr.val.dtype
@@ -117,8 +123,10 @@ def propagate_sharded(
     val = jnp.asarray(val, dtype=dtype)
     lhs = jnp.asarray(p.lhs, dtype=dtype)
     rhs = jnp.asarray(p.rhs, dtype=dtype)
-    lb0 = jnp.asarray(p.lb, dtype=dtype)
-    ub0 = jnp.asarray(p.ub, dtype=dtype)
+    lb0, ub0 = initial_bounds(
+        (jnp.asarray(p.lb, dtype=dtype), jnp.asarray(p.ub, dtype=dtype)),
+        lb0, ub0, dtype, p.n,
+    )
     is_int = jnp.asarray(p.is_int)
     m, n = p.m, p.n
 
@@ -250,8 +258,12 @@ def propagate_sharded_rows(
     mesh: Mesh,
     cfg: PropagatorConfig = DEFAULT_CONFIG,
     dtype=None,
+    lb0=None,
+    ub0=None,
 ) -> PropagationResult:
-    """Row-partitioned distributed propagation (beyond-paper §Perf variant)."""
+    """Row-partitioned distributed propagation (beyond-paper §Perf variant).
+
+    ``lb0``/``ub0`` warm-start the fixed point from caller-supplied bounds."""
     axes = tuple(mesh.axis_names)
     num_shards = int(np.prod(mesh.devices.shape))
     dtype = dtype or p.csr.val.dtype
@@ -295,11 +307,14 @@ def propagate_sharded_rows(
         out_specs=(rep, rep, rep, rep, rep),
         check_vma=False,
     )
+    lb0, ub0 = initial_bounds(
+        (jnp.asarray(p.lb, dtype=dtype), jnp.asarray(p.ub, dtype=dtype)),
+        lb0, ub0, dtype, p.n,
+    )
     lb, ub, r, converged, infeasible = jax.jit(fn, **donate_kwargs(argnums=(6, 7)))(
         jnp.asarray(lrow), jnp.asarray(col), jnp.asarray(val, dtype=dtype),
         jnp.asarray(lhs, dtype=dtype), jnp.asarray(rhs, dtype=dtype),
-        jnp.asarray(p.is_int),
-        jnp.asarray(p.lb, dtype=dtype), jnp.asarray(p.ub, dtype=dtype),
+        jnp.asarray(p.is_int), lb0, ub0,
     )
     return PropagationResult(lb, ub, r, converged, infeasible)
 

@@ -9,6 +9,7 @@ from .instances import (
     make_assignment,
     make_cascade_chain,
     make_mixed,
+    make_pseudo_boolean,
     SIZE_SETS,
     instances_for_set,
 )

@@ -198,6 +198,70 @@ def make_cascade_chain(length: int = 64, seed: int = 0) -> Problem:
     )
 
 
+def make_pseudo_boolean(
+    n: int = 80,
+    m: int = 60,
+    seed: int = 0,
+    clause_frac: float = 0.65,
+    unit_frac: float = 0.1,
+) -> Problem:
+    """Pseudo-boolean optimization instance (paper §1's explicit target
+    workload): 0/1 variables, ±1 coefficients only.
+
+    Rows mix three shapes:
+      * clause-like rows (fraction ``clause_frac``) encoding
+        ``x_{j1} v ... v ¬x_{jk}``: positive literals contribute ``+x_j``,
+        negated ones ``-x_j``, and the side is ``sum >= 1 - #negated``
+        (the standard linearization of a clause);
+      * unit clauses (fraction ``unit_frac``) fixing a single literal --
+        the seeds that make root propagation cascade through the clauses
+        (a PB instance mid-search always carries branching units);
+      * cardinality rows ``sum_j x_j <= k/2`` over a random support.
+    """
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = [], [], []
+    lhs = np.empty(m)
+    rhs = np.empty(m)
+    for i in range(m):
+        shape = rng.random()
+        if shape < unit_frac:
+            j = int(rng.integers(0, n))
+            sign = 1.0 if rng.random() < 0.5 else -1.0
+            rows.append(i)
+            cols.append(j)
+            vals.append(sign)
+            lhs[i] = 1.0 if sign > 0 else 0.0  # x_j >= 1  /  -x_j >= 0
+            rhs[i] = INF
+            continue
+        k = int(rng.integers(2, max(3, min(9, n))))
+        js = rng.choice(n, size=k, replace=False)
+        if shape < unit_frac + clause_frac:
+            sign = rng.choice([-1.0, 1.0], size=k)
+            if not (sign > 0).any():
+                sign[rng.integers(0, k)] = 1.0  # keep at least one positive literal
+            a = sign
+            lhs[i] = 1.0 - float((sign < 0).sum())
+            rhs[i] = INF
+        else:
+            a = np.ones(k)
+            lhs[i] = -INF
+            rhs[i] = float(max(1, k // 2))
+        rows += [i] * k
+        cols += list(js)
+        vals += list(a)
+    csr = csr_from_coo(
+        np.array(rows), np.array(cols), np.array(vals, dtype=np.float64), m, n
+    )
+    return Problem(
+        csr=csr,
+        lhs=lhs,
+        rhs=rhs,
+        lb=np.zeros(n),
+        ub=np.ones(n),
+        is_int=np.ones(n, dtype=bool),
+    )
+
+
 def make_mixed(
     m: int = 200,
     n: int = 150,
@@ -255,6 +319,7 @@ FAMILIES: Dict[str, Callable[..., Problem]] = {
     "assignment": make_assignment,
     "cascade": make_cascade_chain,
     "mixed": make_mixed,
+    "pseudo_boolean": make_pseudo_boolean,
 }
 
 
@@ -272,6 +337,8 @@ def make_instance(spec: InstanceSpec) -> Problem:
         return make_cascade_chain(length=spec.m - 1, seed=spec.seed)
     if spec.family == "mixed":
         return make_mixed(m=spec.m, n=spec.n, seed=spec.seed)
+    if spec.family == "pseudo_boolean":
+        return make_pseudo_boolean(n=spec.n, m=spec.m, seed=spec.seed)
     raise ValueError(spec.family)
 
 
@@ -290,7 +357,11 @@ SIZE_SETS: List[Tuple[str, int, int]] = [
 
 
 def instances_for_set(
-    set_name: str, per_family: int = 2, families: Tuple[str, ...] = ("mixed", "knapsack", "set_cover")
+    set_name: str,
+    per_family: int = 2,
+    # pseudo_boolean appended LAST on purpose: the per-family rng draws are
+    # sequential, so earlier families keep their exact pre-existing sizes.
+    families: Tuple[str, ...] = ("mixed", "knapsack", "set_cover", "pseudo_boolean"),
 ) -> List[Tuple[InstanceSpec, Problem]]:
     lo, hi = next((a, b) for nm, a, b in SIZE_SETS if nm == set_name)
     out = []

@@ -50,7 +50,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import bounds as bnd
-from ..core.propagator import batched_fixed_point, donate_kwargs, owned_copy
+from ..core.propagator import (
+    batched_fixed_point,
+    donate_kwargs,
+    donate_supported,
+    owned_copy,
+)
 from ..core.sparse import (
     BlockEll,
     Problem,
@@ -105,6 +110,59 @@ def rows_fit_one_chunk(p: Problem, tile_width: int) -> bool:
 SCATTER_MAX_NPAD = 1 << 16
 
 
+class LRU:
+    """Bounded LRU keyed by tuples that embed ``id()`` of host objects.
+
+    Every entry pins its ``anchors`` (the objects whose ids appear in the
+    key) so an id cannot be recycled while the entry is live, and a hit is
+    honoured only if every anchor is still the identical object.  Counts
+    hits/misses for ``cache_info()``; ``on_evict`` lets dependent caches
+    (compiled runners pinning a prep's device tiles) be purged with it.
+    """
+
+    def __init__(self, maxsize: int, on_evict=None):
+        self.maxsize = maxsize
+        self._d: "OrderedDict[tuple, tuple[tuple, object]]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self._on_evict = on_evict
+
+    def get(self, key, anchors: tuple):
+        hit = self._d.get(key)
+        if hit is not None and all(a is b for a, b in zip(hit[0], anchors)):
+            self._d.move_to_end(key)
+            self.hits += 1
+            return hit[1]
+        self.misses += 1
+        return None
+
+    def put(self, key, anchors: tuple, value) -> None:
+        self._d[key] = (anchors, value)
+        while len(self._d) > self.maxsize:
+            _, (anchors_e, value_e) = self._d.popitem(last=False)
+            if self._on_evict is not None:
+                self._on_evict(anchors_e, value_e)
+
+    def drop_where(self, pred) -> None:
+        """Remove every entry whose ``(anchors, value)`` satisfies ``pred``."""
+        for key in [k for k, v in self._d.items() if pred(*v)]:
+            del self._d[key]
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def info(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "size": len(self._d),
+            "maxsize": self.maxsize,
+        }
+
+
 @dataclasses.dataclass(frozen=True)
 class PreparedBlockEll:
     """Device tiles + everything about a round that does not change across
@@ -112,42 +170,96 @@ class PreparedBlockEll:
     column-padded initial bounds, and static layout facts.
 
     Not a pytree on purpose -- drivers close over it, so its arrays become
-    jit constants and its ints/bools stay static.
+    jit constants and its ints/bools stay static.  The round closures read
+    only MATRIX STRUCTURE from it (``d``, the hoisted gathers, the layout
+    ints); ``lb0``/``ub0`` are per-problem defaults that every driver
+    accepts as runtime overrides, so one prepared engine serves any bounds
+    (the warm-start / tree-search contract).
     """
 
     d: DeviceBlockEll
     ii_g: jnp.ndarray    # (T, R, K) int32: is_int[col], hoisted
     lhs_g: jnp.ndarray   # (T, R): lhs1[chunk_row], hoisted
     rhs_g: jnp.ndarray   # (T, R): rhs1[chunk_row], hoisted
-    lb0: jnp.ndarray     # (n_pad,) initial bounds in the column-padded domain
+    lb0: jnp.ndarray     # (n_pad,) default initial bounds (column-padded)
     ub0: jnp.ndarray     # (n_pad,)
     m: int
     n: int
     n_pad: int
     fits_one_chunk: bool
 
+    def pad_bound(self, arr):
+        """One caller bound vector -> the column-padded ``(n_pad,)`` domain
+        (padded columns sit at 0, the same trivially-converged fill prepare
+        uses)."""
+        dt = self.d.val.dtype
+        a = jnp.asarray(arr, dt)
+        if a.shape != (self.n,):
+            raise ValueError(f"bounds have shape {a.shape}, expected {(self.n,)}")
+        if self.n_pad > self.n:
+            a = jnp.concatenate([a, jnp.zeros((self.n_pad - self.n,), dt)])
+        return a
 
-_prep_cache: "OrderedDict[tuple, tuple[Problem, PreparedBlockEll]]" = OrderedDict()
-_PREP_CACHE_CAPACITY = 32
+    def pad_bounds(self, lb, ub):
+        return self.pad_bound(lb), self.pad_bound(ub)
+
+
+# Structure anchors: a prepared engine depends on the matrix, the sides and
+# the integrality marks -- NOT on the bounds.  Keying prepare on these means
+# a B&B node built as ``root._replace(lb=..., ub=...)`` (same csr/lhs/rhs/
+# is_int objects) hits the cache and reuses the resident tiles.
+def _structure_anchors(p: Problem) -> tuple:
+    return (p.csr, p.lhs, p.rhs, p.is_int)
+
+
+def _drop_runners_for(anchors, value) -> None:
+    """Prep-cache eviction hook: compiled runners close over the evicted
+    prep's device tiles, so dropping them alongside keeps device memory
+    bounded by the prepare LRU, not by the (larger) runner LRUs."""
+    _, prep = value
+    tiles = prep.d.val
+    dead = lambda runner_anchors, _runner: runner_anchors[0] is tiles
+    _runner_cache.drop_where(dead)
+    _node_runner_cache.drop_where(dead)
+
+
+_prep_cache = LRU(maxsize=32, on_evict=_drop_runners_for)
 
 
 def prepare_block_ell(
     p: Problem, tile_rows: int = 8, tile_width: int = 128, dtype=None
 ) -> PreparedBlockEll:
-    """One-time setup for kernel-backed propagation, LRU-cached per instance.
+    """One-time setup for kernel-backed propagation, LRU-cached per matrix
+    STRUCTURE (``csr``/``lhs``/``rhs``/``is_int`` identity -- maxsize 32,
+    see ``cache_info()``).
 
-    Repeated propagations of the same ``Problem`` (the benchmark pattern)
-    reuse the block-ELL tiles, device buffers and hoisted gathers instead of
-    rebuilding and re-transferring them.  The cache keeps a strong reference
-    to the keyed ``Problem`` so ``id()`` keys cannot be recycled while an
-    entry is live.
+    Repeated propagations of the same ``Problem`` -- or of a bounds-only
+    variant like a tree-search node (``p._replace(lb=..., ub=...)``) --
+    reuse the block-ELL tiles, device buffers and hoisted gathers instead
+    of rebuilding and re-transferring them.  The cache pins the keyed
+    structure arrays so ``id()`` keys cannot be recycled while an entry is
+    live; a hit from a problem whose bounds differ from the cached defaults
+    returns a cheap bounds-swapped view sharing every device tile.
     """
     dt = np.dtype(dtype) if dtype is not None else np.dtype(p.csr.val.dtype)
-    key = (id(p), tile_rows, tile_width, dt.str)
-    hit = _prep_cache.get(key)
-    if hit is not None and hit[0] is p:
-        _prep_cache.move_to_end(key)
-        return hit[1]
+    anchors = _structure_anchors(p)
+    key = tuple(id(a) for a in anchors) + (tile_rows, tile_width, dt.str)
+    hit = _prep_cache.get(key, anchors)
+    if hit is not None:
+        creator, prep = hit
+        if creator.lb is p.lb and creator.ub is p.ub:
+            return prep
+        # Bounds-swapped view: every heavy array (tiles, hoisted gathers) is
+        # shared with the cached prep, and BOTH bound carriers -- the padded
+        # prep.lb0/ub0 and the unpadded d.lb0/ub0 -- reflect p's bounds, so
+        # legacy readers of d.lb0 cannot silently see the creator's domain.
+        # Runner caches key on id(d.val) (stable across _replace), so the
+        # view reuses the creator's compiled fixed points.
+        lb0, ub0 = prep.pad_bounds(p.lb, p.ub)
+        d = prep.d._replace(
+            lb0=jnp.asarray(p.lb, dt), ub0=jnp.asarray(p.ub, dt)
+        )
+        return dataclasses.replace(prep, d=d, lb0=lb0, ub0=ub0)
 
     d = device_block_ell(p, tile_rows, tile_width, dt)
     n_pad = kern.col_pad(p.n)
@@ -164,15 +276,16 @@ def prepare_block_ell(
         n_pad=n_pad,
         fits_one_chunk=rows_fit_one_chunk(p, tile_width),
     )
-    _prep_cache[key] = (p, prep)
-    while len(_prep_cache) > _PREP_CACHE_CAPACITY:
-        _prep_cache.popitem(last=False)
+    _prep_cache.put(key, anchors, (p, prep))
     return prep
 
 
 def clear_prepare_cache() -> None:
-    """Drop all cached prepared instances (frees device buffers)."""
+    """Drop all cached prepared instances and their compiled single-instance
+    / node-batch runners (frees device buffers)."""
     _prep_cache.clear()
+    _runner_cache.clear()
+    _node_runner_cache.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -408,6 +521,23 @@ def _resolve_scatter(scatter: str, prep: PreparedBlockEll) -> str:
     return scatter
 
 
+# Jitted single-instance fixed points, cached per matrix structure + config:
+# the tree-search pattern re-propagates the same prepared engine with fresh
+# bounds thousands of times, and rebuilding the jit closure per call would
+# recompile every time.  Keyed on id(prep.d.val) -- the tile array shared by
+# every bounds-swapped prepare() view of one structure -- so ONE compiled
+# engine serves any bounds (the round closures read only structure from the
+# prep they were built over, never its bound defaults).
+_runner_cache = LRU(maxsize=64)
+
+
+def _initial_padded_bounds(prep: PreparedBlockEll, lb0, ub0):
+    """Per-call bound overrides -> private, donated-safe (n_pad,) buffers."""
+    lb = owned_copy(prep.lb0 if lb0 is None else prep.pad_bound(lb0))
+    ub = owned_copy(prep.ub0 if ub0 is None else prep.pad_bound(ub0))
+    return lb, ub
+
+
 def propagate_block_ell(
     p: Problem,
     cfg: PropagatorConfig = DEFAULT_CONFIG,
@@ -420,6 +550,8 @@ def propagate_block_ell(
     interpret: bool | None = None,
     scatter: str = "auto",
     donate: bool | None = None,
+    lb0=None,
+    ub0=None,
 ) -> PropagationResult:
     """Kernel-backed propagation.
 
@@ -428,38 +560,75 @@ def propagate_block_ell(
     fused in-VMEM column reduction unless the padded column count exceeds
     the accumulator budget; ``scatter='segment'`` forces the materializing
     oracle.  ``donate=None`` donates the bound buffers wherever the backend
-    implements donation (zero-copy fixed point)."""
+    implements donation (zero-copy fixed point).
+
+    ``lb0``/``ub0`` warm-start the fixed point from caller-supplied bounds:
+    the prepared tiles, hoisted gathers AND the compiled fixed point are all
+    cached per matrix structure, so propagating a B&B node costs one
+    dispatch with two (n,) uploads -- no repacking, no recompilation."""
+    if driver not in ("host_loop", "device_loop"):
+        raise ValueError(f"unknown driver: {driver!r}")
     prep = prepare_block_ell(p, tile_rows, tile_width, dtype)
     do_fuse = (
         prep.fits_one_chunk if fused == "auto" else bool(fused == "yes" or fused is True)
     )
     scatter = _resolve_scatter(scatter, prep)
-    if donate is None:
-        donate_kw = donate_kwargs(argnums=(0, 1))
-    else:
-        donate_kw = {"donate_argnums": (0, 1)} if donate else {}
-    eps = cfg.eps_for(prep.d.val.dtype)
-    round_fn = functools.partial(
-        _prepared_round,
-        prep,
-        eps=eps,
-        int_eps=cfg.int_eps,
-        inf=cfg.inf,
-        use_pallas=use_pallas,
-        fused=do_fuse,
-        scatter=scatter,
-        interpret=interpret,
-    )
+    do_donate = donate_supported() if donate is None else bool(donate)
     n = prep.n
 
+    key = (
+        id(prep.d.val), cfg, use_pallas, do_fuse, scatter, interpret, do_donate, driver
+    )
+    anchors = (prep.d.val,)
+
+    def build():
+        donate_kw = {"donate_argnums": (0, 1)} if do_donate else {}
+        round_fn = functools.partial(
+            _prepared_round,
+            prep,
+            eps=cfg.eps_for(prep.d.val.dtype),
+            int_eps=cfg.int_eps,
+            inf=cfg.inf,
+            use_pallas=use_pallas,
+            fused=do_fuse,
+            scatter=scatter,
+            interpret=interpret,
+        )
+        if driver == "host_loop":
+            return jax.jit(round_fn, **donate_kw)
+
+        @functools.partial(jax.jit, **donate_kw)
+        def run(lb0, ub0):
+            def body(state):
+                lb, ub, _, r = state
+                lb, ub, ch = round_fn(lb, ub)
+                return lb, ub, ch, r + 1
+
+            def cond(state):
+                _, _, ch, r = state
+                return ch & (r < cfg.max_rounds)
+
+            lb, ub, ch, r = jax.lax.while_loop(
+                cond, body, (lb0, ub0, jnp.asarray(True), jnp.int32(0))
+            )
+            lb, ub = lb[:n], ub[:n]
+            return lb, ub, r, ~ch, jnp.any(lb > ub + cfg.feas_eps)
+
+        return run
+
+    runner = _runner_cache.get(key, anchors)
+    if runner is None:
+        runner = build()
+        _runner_cache.put(key, anchors, runner)
+
+    lb, ub = _initial_padded_bounds(prep, lb0, ub0)
+
     if driver == "host_loop":
-        jit_round = jax.jit(round_fn, **donate_kw)
-        lb, ub = owned_copy(prep.lb0), owned_copy(prep.ub0)
         rounds, changed = 0, True
         while changed and rounds < cfg.max_rounds:
             # Donated in, fresh buffers out: the loop owns its bounds, so XLA
             # reuses the same two (n_pad,) buffers round over round.
-            lb, ub, cdev = jit_round(lb, ub)
+            lb, ub, cdev = runner(lb, ub)
             changed = bool(cdev)
             rounds += 1
         infeas = bool(jnp.any(lb[:n] > ub[:n] + cfg.feas_eps))
@@ -467,27 +636,7 @@ def propagate_block_ell(
             lb[:n], ub[:n], jnp.int32(rounds), jnp.asarray(not changed), jnp.asarray(infeas)
         )
 
-    if driver != "device_loop":
-        raise ValueError(f"unknown driver: {driver!r}")
-
-    @functools.partial(jax.jit, **donate_kw)
-    def run(lb0, ub0):
-        def body(state):
-            lb, ub, _, r = state
-            lb, ub, ch = round_fn(lb, ub)
-            return lb, ub, ch, r + 1
-
-        def cond(state):
-            _, _, ch, r = state
-            return ch & (r < cfg.max_rounds)
-
-        lb, ub, ch, r = jax.lax.while_loop(
-            cond, body, (lb0, ub0, jnp.asarray(True), jnp.int32(0))
-        )
-        lb, ub = lb[:n], ub[:n]
-        return lb, ub, r, ~ch, jnp.any(lb > ub + cfg.feas_eps)
-
-    lb, ub, rounds, converged, infeasible = run(owned_copy(prep.lb0), owned_copy(prep.ub0))
+    lb, ub, rounds, converged, infeasible = runner(lb, ub)
     return PropagationResult(lb, ub, rounds, converged, infeasible)
 
 
@@ -529,21 +678,21 @@ class PreparedBatch:
     fits_one_chunk: bool
 
 
-_batch_prep_cache: "OrderedDict[tuple, tuple[ProblemBatch, PreparedBatch]]" = OrderedDict()
-_BATCH_PREP_CACHE_CAPACITY = 16
+_batch_prep_cache = LRU(maxsize=16)
 
 
 def prepare_problem_batch(batch: ProblemBatch, dtype=None) -> PreparedBatch:
     """Device transfer + hoisted constant gathers for one packed bucket,
-    LRU-cached per ``ProblemBatch`` (the serving pattern re-propagates the
-    same packed batch with fresh bounds)."""
+    LRU-cached per ``ProblemBatch`` (maxsize 16, see ``cache_info()``; the
+    serving pattern re-propagates the same packed batch with fresh
+    bounds -- ``propagate_batch_prepared`` takes them as per-call
+    arguments)."""
     ell = batch.ell
     dt = np.dtype(dtype) if dtype is not None else np.dtype(ell.val.dtype)
     key = (id(batch), dt.str)
-    hit = _batch_prep_cache.get(key)
-    if hit is not None and hit[0] is batch:
-        _batch_prep_cache.move_to_end(key)
-        return hit[1]
+    hit = _batch_prep_cache.get(key, (batch,))
+    if hit is not None:
+        return hit
 
     n_pad = batch.n_pad
     col_g = ell.col + ell.tile_inst[:, None, None] * np.int32(n_pad)
@@ -574,9 +723,7 @@ def prepare_problem_batch(batch: ProblemBatch, dtype=None) -> PreparedBatch:
             rows_fit_one_chunk(p, ell.tile_width) for p in batch.problems
         ),
     )
-    _batch_prep_cache[key] = (batch, prep)
-    while len(_batch_prep_cache) > _BATCH_PREP_CACHE_CAPACITY:
-        _batch_prep_cache.popitem(last=False)
+    _batch_prep_cache.put(key, (batch,), prep)
     return prep
 
 
@@ -669,22 +816,19 @@ def _unpack_batch_results(prep, lb, ub, rounds, converged, infeasible):
     return out
 
 
-# Jitted fixed-point runners, cached per prepared bucket + config: the
-# serving loop re-propagates the same packed batches, and rebuilding the jit
-# closure per request would recompile every time.
-_batch_runner_cache: "OrderedDict[tuple, tuple[PreparedBatch, object]]" = OrderedDict()
-_BATCH_RUNNER_CACHE_CAPACITY = 64
+# Jitted fixed-point runners, cached per prepared bucket + config (maxsize
+# 64, see ``cache_info()``): the serving loop re-propagates the same packed
+# batches, and rebuilding the jit closure per request would recompile every
+# time.  Bounds are runtime arguments of every runner, so one compiled
+# fixed point serves any warm-start bound plane.
+_batch_runner_cache = LRU(maxsize=64)
 
 
 def _cached_batch_runner(prep, key, build):
-    hit = _batch_runner_cache.get(key)
-    if hit is not None and hit[0] is prep:
-        _batch_runner_cache.move_to_end(key)
-        return hit[1]
-    runner = build()
-    _batch_runner_cache[key] = (prep, runner)
-    while len(_batch_runner_cache) > _BATCH_RUNNER_CACHE_CAPACITY:
-        _batch_runner_cache.popitem(last=False)
+    runner = _batch_runner_cache.get(key, (prep,))
+    if runner is None:
+        runner = build()
+        _batch_runner_cache.put(key, (prep,), runner)
     return runner
 
 
@@ -721,6 +865,23 @@ def batched_device_runner(
     return _cached_batch_runner(prep, key, build)
 
 
+def _batch_initial_bounds(prep: PreparedBatch, lb0, ub0):
+    """Per-call bound planes -> private, donated-safe (B, n_pad) buffers."""
+    d = prep.d
+    out = []
+    for override, default in ((lb0, d.lb0), (ub0, d.ub0)):
+        if override is None:
+            out.append(owned_copy(default))
+            continue
+        arr = jnp.asarray(override, d.val.dtype)
+        if arr.shape != default.shape:
+            raise ValueError(
+                f"bound plane has shape {arr.shape}, expected {default.shape}"
+            )
+        out.append(owned_copy(arr))
+    return tuple(out)
+
+
 def propagate_batch_prepared(
     prep: PreparedBatch,
     cfg: PropagatorConfig = DEFAULT_CONFIG,
@@ -728,14 +889,19 @@ def propagate_batch_prepared(
     driver: str = "device_loop",
     interpret: bool | None = None,
     donate: bool | None = None,
+    lb0=None,
+    ub0=None,
 ):
     """Run one prepared bucket to its per-instance fixed points.
 
     ``device_loop``: the entire batched fixed point is ONE dispatch
     (``batched_fixed_point`` under jit, bounds donated).  ``host_loop``:
     host syncs the per-instance changed flags each round and retires
-    converged instances from the active mask.  Returns one
-    ``PropagationResult`` per instance, bucket order."""
+    converged instances from the active mask.  ``lb0``/``ub0`` warm-start
+    the bucket from a caller-supplied ``(B, n_pad)`` bound plane (default:
+    the packed instances' root bounds) -- the prepared tiles and the cached
+    runner serve any plane.  Returns one ``PropagationResult`` per
+    instance, bucket order."""
     d = prep.d
     bsz = prep.size
 
@@ -751,7 +917,7 @@ def propagate_batch_prepared(
             return jax.jit(round_fn, **donate_kw)
 
         jit_round = _cached_batch_runner(prep, key, build)
-        lb, ub = owned_copy(d.lb0), owned_copy(d.ub0)
+        lb, ub = _batch_initial_bounds(prep, lb0, ub0)
         active = np.ones(bsz, dtype=bool)
         last_changed = np.ones(bsz, dtype=bool)
         rounds = np.zeros(bsz, dtype=np.int32)
@@ -772,30 +938,28 @@ def propagate_batch_prepared(
         raise ValueError(f"unknown driver: {driver!r}")
 
     run = batched_device_runner(prep, cfg, use_pallas, interpret, donate)
-    lb, ub, rounds, converged, infeasible = run(owned_copy(d.lb0), owned_copy(d.ub0))
+    lb_init, ub_init = _batch_initial_bounds(prep, lb0, ub0)
+    lb, ub, rounds, converged, infeasible = run(lb_init, ub_init)
     return _unpack_batch_results(prep, lb, ub, rounds, converged, infeasible)
 
 
-# Packed-batch cache: serving re-propagates the same request list, and
-# repacking would defeat both the prepare() and the runner caches (both key
-# on object identity).
-_pack_cache: "OrderedDict[tuple, tuple[tuple, list]]" = OrderedDict()
-_PACK_CACHE_CAPACITY = 8
+# Packed-batch cache (maxsize 8, see ``cache_info()``): serving
+# re-propagates the same request list, and repacking would defeat both the
+# prepare() and the runner caches (both key on object identity).
+_pack_cache = LRU(maxsize=8)
 
 
 def packed_problems(problems, tile_rows: int = 8, tile_width: int = 128):
     """LRU-cached ``pack_problems``: the same problem list (by identity)
     packs once and reuses its ``ProblemBatch`` objects across calls."""
     problems = list(problems)
+    anchors = tuple(problems)
     key = (tuple(id(p) for p in problems), tile_rows, tile_width)
-    hit = _pack_cache.get(key)
-    if hit is not None and all(a is b for a, b in zip(hit[0], problems)):
-        _pack_cache.move_to_end(key)
-        return hit[1]
+    hit = _pack_cache.get(key, anchors)
+    if hit is not None:
+        return hit
     batches = pack_problems(problems, tile_rows=tile_rows, tile_width=tile_width)
-    _pack_cache[key] = (tuple(problems), batches)
-    while len(_pack_cache) > _PACK_CACHE_CAPACITY:
-        _pack_cache.popitem(last=False)
+    _pack_cache.put(key, anchors, batches)
     return batches
 
 
@@ -804,6 +968,49 @@ def clear_batch_caches() -> None:
     _pack_cache.clear()
     _batch_prep_cache.clear()
     _batch_runner_cache.clear()
+
+
+def cache_info() -> dict:
+    """Hit/miss/size/maxsize counters of every engine-level LRU cache
+    (prepared instances, compiled single-instance runners, packed batches,
+    prepared buckets, batched runners, node-batch runners).  Complements
+    the ``clear_*`` helpers; sizes are entry counts, not bytes."""
+    return {
+        "prepare_block_ell": _prep_cache.info(),
+        "block_ell_runner": _runner_cache.info(),
+        "packed_problems": _pack_cache.info(),
+        "prepare_problem_batch": _batch_prep_cache.info(),
+        "batch_runner": _batch_runner_cache.info(),
+        "node_runner": _node_runner_cache.info(),
+    }
+
+
+def _bound_planes_for_batch(batch: ProblemBatch, bounds):
+    """Per-problem ``(lb, ub)`` overrides -> this bucket's (B, n_pad) planes.
+
+    ``bounds[i]`` (input order) is either ``None`` (use problem ``i``'s own
+    bounds) or a ``(lb, ub)`` pair of ``(n_i,)`` arrays."""
+    lb_plane = np.array(batch.lb, copy=True)
+    ub_plane = np.array(batch.ub, copy=True)
+    touched = False
+    for row, (idx, p) in enumerate(zip(batch.indices, batch.problems)):
+        pair = bounds[idx]
+        if pair is None:
+            continue
+        lb_i, ub_i = pair
+        lb_i = np.asarray(lb_i, lb_plane.dtype)
+        ub_i = np.asarray(ub_i, ub_plane.dtype)
+        if lb_i.shape != (p.n,) or ub_i.shape != (p.n,):
+            raise ValueError(
+                f"bounds for instance {idx} have shapes {lb_i.shape}/{ub_i.shape}, "
+                f"expected {(p.n,)}"
+            )
+        lb_plane[row, : p.n] = lb_i
+        ub_plane[row, : p.n] = ub_i
+        touched = True
+    if not touched:
+        return None, None
+    return lb_plane, ub_plane
 
 
 def propagate_batch_block_ell(
@@ -816,24 +1023,186 @@ def propagate_batch_block_ell(
     driver: str = "device_loop",
     interpret: bool | None = None,
     donate: bool | None = None,
+    bounds=None,
 ):
     """Batched kernel-backed propagation: pack -> per-bucket dispatch ->
     per-instance results in input order.  Packing, device transfer and the
     jitted fixed-point runners are all LRU-cached, so a serving loop that
-    re-propagates the same instances pays them once.  The public front end
-    is ``repro.core.propagate_batch``."""
+    re-propagates the same instances pays them once.  ``bounds`` (one
+    ``(lb, ub)`` pair or ``None`` per problem, input order) warm-starts
+    instances from caller bounds through the SAME packed tiles and compiled
+    runners -- nothing is repacked or recompiled.  The public front end is
+    ``repro.core.propagate_batch``."""
     problems = list(problems)
+    if bounds is not None:
+        bounds = list(bounds)
+        if len(bounds) != len(problems):
+            raise ValueError(
+                f"bounds has {len(bounds)} entries for {len(problems)} problems"
+            )
     batches = packed_problems(problems, tile_rows=tile_rows, tile_width=tile_width)
     out = [None] * len(problems)
     for batch in batches:
         prep = prepare_problem_batch(batch, dtype)
+        lb0 = ub0 = None
+        if bounds is not None:
+            lb0, ub0 = _bound_planes_for_batch(batch, bounds)
         results = propagate_batch_prepared(
             prep, cfg, use_pallas=use_pallas, driver=driver,
-            interpret=interpret, donate=donate,
+            interpret=interpret, donate=donate, lb0=lb0, ub0=ub0,
         )
         for idx, res in zip(batch.indices, results):
             out[idx] = res
     return out
+
+
+# ---------------------------------------------------------------------------
+# Node-batch engine: one shared matrix, many bound planes (tree search)
+# ---------------------------------------------------------------------------
+
+
+def _node_round(
+    prep: PreparedBlockEll, lb, ub, active,
+    *, eps: float, int_eps: float, inf: float,
+    use_pallas: bool, interpret: bool | None,
+):
+    """One round over a node batch: ``(B, n_pad)`` per-node bounds +
+    ``(B,)`` active mask -> updated bounds + per-node changed flags, with
+    the instance's matrix tiles shared by every node.
+
+    The Pallas path (chunk-complete rows, accumulator budget respected)
+    runs the node kernel -- the grid walks ``(B, T)`` with the tile axis
+    minor, converged nodes gated off in-kernel -- then the batched merge
+    kernel.  Otherwise the single-instance jnp round is vmapped over the
+    node axis (multichunk rows, ``SCATTER_MAX_NPAD`` overflow, or
+    ``use_pallas=False``), with inactive nodes' bounds frozen outside."""
+    if use_pallas and prep.fits_one_chunk and prep.n_pad <= SCATTER_MAX_NPAD:
+        d = prep.d
+        best_l, best_u = kern.node_fused_scatter_round_tiles(
+            d.val, d.col, prep.ii_g, prep.lhs_g, prep.rhs_g, lb, ub,
+            active, prep.n_pad, int_eps, inf, interpret,
+        )
+        return kern.apply_updates_batch_tiles(
+            lb, ub, best_l, best_u, active, eps, inf, interpret
+        )
+    single = functools.partial(
+        _prepared_round,
+        prep,
+        eps=eps,
+        int_eps=int_eps,
+        inf=inf,
+        use_pallas=False,
+        fused=prep.fits_one_chunk,
+        scatter=_resolve_scatter("auto", prep),
+        interpret=interpret,
+    )
+    new_lb, new_ub, changed = jax.vmap(single)(lb, ub)
+    lb = jnp.where(active[:, None], new_lb, lb)
+    ub = jnp.where(active[:, None], new_ub, ub)
+    return lb, ub, changed & active
+
+
+def node_round_fn_for(
+    prep: PreparedBlockEll,
+    cfg: PropagatorConfig = DEFAULT_CONFIG,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+):
+    """A jit-able ``(lb, ub, active) -> (lb, ub, changed)`` node-batch
+    round closure over a prepared instance (bounds ``(B, n_pad)``)."""
+    eps = cfg.eps_for(prep.d.val.dtype)
+    return functools.partial(
+        _node_round,
+        prep,
+        eps=eps,
+        int_eps=cfg.int_eps,
+        inf=cfg.inf,
+        use_pallas=use_pallas,
+        interpret=interpret,
+    )
+
+
+# Node-batch fixed-point runners, cached per matrix structure + node count +
+# config (maxsize 32, see ``cache_info()``): a tree search re-propagates the
+# same instance with fresh node bounds every dive, and the bounds are
+# runtime arguments, so each (structure, B) pair compiles exactly once.
+_node_runner_cache = LRU(maxsize=32)
+
+
+def node_batch_runner(
+    prep: PreparedBlockEll,
+    batch_size: int,
+    cfg: PropagatorConfig = DEFAULT_CONFIG,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    donate: bool | None = None,
+):
+    """The node batch's whole fixed point as ONE jitted dispatch, cached:
+    ``run(lb0, ub0) -> (lb, ub, rounds, converged, infeasible)`` with the
+    node axis leading everywhere (``lb0``/``ub0`` donated where
+    supported)."""
+    do_donate = donate_supported() if donate is None else bool(donate)
+    key = (id(prep.d.val), batch_size, cfg, use_pallas, interpret, do_donate)
+    anchors = (prep.d.val,)
+    runner = _node_runner_cache.get(key, anchors)
+    if runner is not None:
+        return runner
+
+    round_fn = node_round_fn_for(prep, cfg, use_pallas, interpret)
+    donate_kw = {"donate_argnums": (0, 1)} if do_donate else {}
+    col_valid = jnp.arange(prep.n_pad) < prep.n
+
+    @functools.partial(jax.jit, **donate_kw)
+    def run(lb0, ub0):
+        lb, ub, rounds, converged = batched_fixed_point(
+            round_fn, lb0, ub0, cfg.max_rounds
+        )
+        infeasible = jnp.any((lb > ub + cfg.feas_eps) & col_valid[None, :], axis=-1)
+        return lb, ub, rounds, converged, infeasible
+
+    _node_runner_cache.put(key, anchors, run)
+    return run
+
+
+def propagate_nodes_prepared(
+    prep: PreparedBlockEll,
+    lb_nodes,
+    ub_nodes,
+    cfg: PropagatorConfig = DEFAULT_CONFIG,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    donate: bool | None = None,
+):
+    """Run B warm-started nodes of one prepared instance to their fixed
+    points in ONE dispatch.
+
+    ``lb_nodes``/``ub_nodes`` are ``(B, n)`` per-node bound planes (the
+    only per-node state -- the matrix tiles are resident once).  Returns
+    ``(lb, ub, rounds, converged, infeasible)`` with the node axis leading;
+    ``infeasible`` marks nodes whose domain emptied (prune them).  Each
+    node's result is exactly what its own single-instance warm-started
+    ``propagate_block_ell`` run would produce, including round counts."""
+    lb_nodes = np.asarray(lb_nodes)
+    ub_nodes = np.asarray(ub_nodes)
+    if lb_nodes.ndim != 2 or lb_nodes.shape != ub_nodes.shape:
+        raise ValueError(
+            f"node bound planes must share a (B, n) shape, got "
+            f"{lb_nodes.shape} / {ub_nodes.shape}"
+        )
+    bsz, n = lb_nodes.shape
+    if n != prep.n:
+        raise ValueError(f"node bounds have n={n}, instance has n={prep.n}")
+    dt = prep.d.val.dtype
+    pad = prep.n_pad - prep.n
+    planes = []
+    for plane in (lb_nodes, ub_nodes):
+        plane = np.asarray(plane, dt)
+        if pad:
+            plane = np.concatenate([plane, np.zeros((bsz, pad), dt)], axis=1)
+        planes.append(jnp.asarray(plane))
+    run = node_batch_runner(prep, bsz, cfg, use_pallas, interpret, donate)
+    lb, ub, rounds, converged, infeasible = run(*planes)
+    return lb[:, : prep.n], ub[:, : prep.n], rounds, converged, infeasible
 
 
 # ---------------------------------------------------------------------------

@@ -822,6 +822,110 @@ def batched_fused_scatter_round_tiles(
     )
 
 
+# ---------------------------------------------------------------------------
+# Node-batch kernel: one matrix, many bound planes (tree-search shape)
+# ---------------------------------------------------------------------------
+
+
+def _node_fused_scatter_kernel(
+    act_ref,
+    val_ref, col_ref, ii_ref, lhs_ref, rhs_ref, lb_ref, ub_ref,
+    bl_ref, bu_ref, *, int_eps, inf, block,
+):
+    """Kernel D over a node batch: B bound planes of ONE instance share the
+    matrix tiles.
+
+    The grid is ``(B, T)`` with the tile axis minor, so for each node the
+    matrix tiles stream once while that node's ``(1, n_pad)`` bound block
+    and accumulator rows stay VMEM-resident across its whole tile sweep --
+    the matrix is revisited per node from on-device HBM, never re-packed or
+    re-uploaded from the host.  ``act_ref`` is the per-node convergence
+    mask: a converged (or pruned-infeasible) node's grid steps skip
+    gather/compute/scatter entirely, leaving its accumulators at the
+    reduction identity so the batched merge reports it unchanged.
+    """
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _():
+        bl_ref[...] = jnp.full_like(bl_ref[...], -inf)
+        bu_ref[...] = jnp.full_like(bu_ref[...], inf)
+
+    @pl.when(act_ref[b] != 0)
+    def _():
+        val = val_ref[...]
+        r, k = val.shape[-2:]
+        val = val.reshape(r, k)
+        col = col_ref[...].reshape(r, k)
+        lb_g, ub_g = _gather_bounds_tile(col, lb_ref, ub_ref, block=block)
+        rmf, rmc, rxf, rxc = tile_row_aggregates(val, lb_g, ub_g, inf)
+        lcand, ucand = tile_candidates(
+            val, lb_g, ub_g, ii_ref[...].reshape(r, k) != 0,
+            rmf, rmc, rxf, rxc,
+            lhs_ref[...].reshape(r), rhs_ref[...].reshape(r), int_eps, inf,
+        )
+        _scatter_tile(lcand, ucand, col, bl_ref, bu_ref, inf=inf, block=block)
+
+
+def node_fused_scatter_round_tiles(
+    val,
+    col,
+    is_int_g,
+    lhs_g,
+    rhs_g,
+    lb,
+    ub,
+    active,
+    n_pad: int,
+    int_eps: float,
+    inf: float = INF,
+    interpret: bool | None = None,
+    block: int = LANE,
+):
+    """Fully fused round over a node batch: ``(T, R, K)`` tiles of ONE
+    instance, broadcast across the node axis, + ``(B, n_pad)`` per-node
+    bound planes + ``(B,)`` active mask -> ``(B, n_pad)`` best_l / best_u.
+
+    Per node the arithmetic is exactly :func:`fused_scatter_round_tiles`
+    (requires every row to fit one chunk and ``n_pad % block == 0``);
+    inactive nodes produce identity accumulator rows."""
+    if interpret is None:
+        interpret = _on_cpu()
+    if n_pad % block:
+        raise ValueError(f"n_pad={n_pad} must be a multiple of block={block}")
+    from jax.experimental.pallas import tpu as pltpu
+
+    t, r, k = val.shape
+    bsz = lb.shape[0]
+    dtype = val.dtype
+    tile = pl.BlockSpec((1, r, k), lambda b, i, act: (i, 0, 0))
+    row_tile = pl.BlockSpec((1, r), lambda b, i, act: (i, 0))
+    vec = pl.BlockSpec((1, n_pad), lambda b, i, act: (b, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, t),
+        in_specs=[tile, tile, tile, row_tile, row_tile, vec, vec],
+        out_specs=[vec, vec],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, n_pad), dtype),
+        jax.ShapeDtypeStruct((bsz, n_pad), dtype),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(
+            _node_fused_scatter_kernel, int_eps=int_eps, inf=inf, block=block
+        ),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(
+        active.astype(jnp.int32),
+        val, col, is_int_g.astype(jnp.int32), lhs_g, rhs_g, lb, ub,
+    )
+
+
 def _apply_updates_batch_kernel(
     lb_ref, ub_ref, bl_ref, bu_ref, act_ref, nlb_ref, nub_ref, ch_ref, *, eps, inf
 ):

@@ -253,6 +253,21 @@ def batched_fused_scatter_round_ref(
     return batched_scatter_round_ref(lcand, ucand, col_g, batch, n_pad, inf)
 
 
+def node_fused_scatter_round_ref(
+    val, col, is_int_g, lhs_g, rhs_g, lb, ub, n_pad: int,
+    int_eps: float, inf: float = INF,
+):
+    """Oracle for the node-batch fused-scatter kernel: ONE instance's
+    ``(T, R, K)`` tiles broadcast over a ``(B, n_pad)`` bound plane.  Per
+    node this is exactly :func:`fused_scatter_round_tiles_ref`, vmapped
+    over the node axis -- the matrix operands are closed over, so only the
+    bound planes carry the batch dimension."""
+    fn = lambda l, u: fused_scatter_round_tiles_ref(
+        val, col, is_int_g, lhs_g, rhs_g, l, u, n_pad, int_eps, inf
+    )
+    return jax.vmap(fn)(lb, ub)
+
+
 def batched_candidates_scatter_round_ref(
     val, col_g, is_int_g, chunk_row, lhs_g, rhs_g, lb, ub,
     m_total: int, n_pad: int, int_eps: float, inf: float = INF,

@@ -1,0 +1,273 @@
+"""Warm-start bounds threading + the shared-matrix node engine.
+
+Four layers:
+  * warm-start identity: propagating from explicit ``lb0/ub0`` equal to the
+    root bounds is BITWISE identical to the default path for every driver
+    (host_loop, device_loop, unrolled, fused Pallas block-ELL, batched);
+  * structure-keyed caches: a bounds-only Problem variant reuses the
+    prepared tiles and the compiled fixed point of its root;
+  * node batches: B warm-started nodes over ONE shared matrix match B
+    independent single-instance warm-started runs node-by-node, including
+    per-node rounds/converged/infeasible, on both the vmapped jnp path and
+    the node kernel (Pallas interpret);
+  * pruning: an infeasible node is flagged without poisoning its batch.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.core import (
+    NodeBatch,
+    branch_children,
+    bounds_equal,
+    propagate,
+    propagate_batch,
+    propagate_node_batch,
+    propagate_nodes,
+)
+from repro.core.sharded import propagate_sharded
+from repro.data import make_cascade_chain, make_knapsack, make_mixed, make_pseudo_boolean
+from repro.kernels import cache_info, prepare_block_ell, propagate_block_ell
+
+
+def _assert_same_result(a, b):
+    np.testing.assert_array_equal(np.asarray(a.lb), np.asarray(b.lb))
+    np.testing.assert_array_equal(np.asarray(a.ub), np.asarray(b.ub))
+    assert int(a.rounds) == int(b.rounds)
+    assert bool(a.converged) == bool(b.converged)
+    assert bool(a.infeasible) == bool(b.infeasible)
+
+
+def _branched_nodes(p, count, fixings=3, seed=0):
+    """``count`` node bound plans, each a few random branchings off root."""
+    rng = np.random.default_rng(seed)
+    nodes = []
+    for _ in range(count):
+        lb, ub = p.lb.copy(), p.ub.copy()
+        for var in rng.choice(p.n, size=fixings, replace=False):
+            if not p.is_int[var] or lb[var] >= ub[var]:
+                continue
+            down, up = branch_children(lb, ub, int(var), lb[var])
+            lb, ub = down if rng.random() < 0.5 else up
+        nodes.append((lb, ub))
+    return nodes
+
+
+# ---------------------------------------------------------------------------
+# Warm-start identity, every driver
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("driver", ["host_loop", "device_loop", "unrolled"])
+def test_core_driver_warm_start_identity(driver):
+    p = make_mixed(m=90, n=70, seed=3)
+    base = propagate(p, driver=driver)
+    warm = propagate(p, driver=driver, lb0=p.lb, ub0=p.ub)
+    _assert_same_result(base, warm)
+
+
+@pytest.mark.parametrize(
+    "kwargs",
+    [
+        dict(use_pallas=False),
+        dict(use_pallas=True, interpret=True),
+        dict(use_pallas=False, driver="host_loop"),
+        dict(use_pallas=False, scatter="segment"),
+    ],
+)
+def test_block_ell_warm_start_identity(kwargs):
+    p = make_mixed(m=90, n=70, seed=4)
+    base = propagate_block_ell(p, **kwargs)
+    warm = propagate_block_ell(p, lb0=p.lb, ub0=p.ub, **kwargs)
+    _assert_same_result(base, warm)
+
+
+def test_batched_warm_start_identity():
+    probs = [make_mixed(m=80, n=60, seed=s) for s in range(4)]
+    base = propagate_batch(probs, use_pallas=False)
+    warm = propagate_batch(
+        probs, use_pallas=False, bounds=[(p.lb, p.ub) for p in probs]
+    )
+    for a, b in zip(base, warm):
+        _assert_same_result(a, b)
+
+
+def test_batched_partial_bounds_override():
+    """``None`` entries keep their own bounds; overridden instances match
+    a repacked problem carrying those bounds."""
+    probs = [make_knapsack(n=50, m=15, seed=s) for s in range(3)]
+    lb1 = probs[1].lb.copy()
+    lb1[:5] = 1.0
+    warm = propagate_batch(
+        probs, use_pallas=False, bounds=[None, (lb1, probs[1].ub), None]
+    )
+    base = propagate_batch(probs, use_pallas=False)
+    repacked = propagate_batch(
+        [probs[0], probs[1]._replace(lb=lb1), probs[2]], use_pallas=False
+    )
+    _assert_same_result(warm[0], base[0])
+    _assert_same_result(warm[2], base[2])
+    _assert_same_result(warm[1], repacked[1])
+
+
+def test_sharded_warm_start_identity():
+    mesh = jax.make_mesh((1,), ("x",))
+    p = make_mixed(m=60, n=50, seed=5)
+    base = propagate_sharded(p, mesh)
+    warm = propagate_sharded(p, mesh, lb0=p.lb, ub0=p.ub)
+    _assert_same_result(base, warm)
+
+
+def test_warm_start_equals_repacked_problem():
+    """Explicit per-call bounds == baking the same bounds into a fresh
+    Problem, bitwise, on the fused engine."""
+    p = make_knapsack(n=40, m=12, seed=2)
+    lb2, ub2 = p.lb.copy(), p.ub.copy()
+    lb2[3] = 1.0
+    ub2[7] = 0.0
+    warm = propagate_block_ell(p, lb0=lb2, ub0=ub2, use_pallas=False)
+    packed = propagate_block_ell(p._replace(lb=lb2, ub=ub2), use_pallas=False)
+    _assert_same_result(warm, packed)
+
+
+# ---------------------------------------------------------------------------
+# Structure-keyed caches
+# ---------------------------------------------------------------------------
+
+
+def test_prepare_cache_keys_on_structure():
+    p = make_mixed(m=50, n=40, seed=6)
+    prep = prepare_block_ell(p)
+    node_lb = np.maximum(p.lb, 0.0)
+    node = p._replace(lb=node_lb, ub=p.ub.copy())
+    prep_node = prepare_block_ell(node)
+    # Same structure object graph -> shared device tiles + hoisted gathers.
+    assert prep_node.d.val is prep.d.val
+    assert prep_node.d.col is prep.d.col
+    assert prep_node.ii_g is prep.ii_g
+    # ... but BOTH bound carriers of the view reflect the node's bounds.
+    np.testing.assert_array_equal(np.asarray(prep_node.d.lb0), node_lb)
+    np.testing.assert_array_equal(np.asarray(prep_node.lb0)[: p.n], node_lb)
+
+
+def test_cache_info_counts_hits_and_misses():
+    p = make_mixed(m=50, n=40, seed=7)
+    before = cache_info()["prepare_block_ell"]
+    prepare_block_ell(p)
+    prepare_block_ell(p)
+    after = cache_info()["prepare_block_ell"]
+    assert after["hits"] >= before["hits"] + 1
+    assert after["misses"] >= before["misses"] + 1
+    assert after["maxsize"] == 32
+    assert set(cache_info()) >= {
+        "prepare_block_ell", "block_ell_runner", "packed_problems",
+        "prepare_problem_batch", "batch_runner", "node_runner",
+    }
+
+
+# ---------------------------------------------------------------------------
+# Node batches vs independent single-instance runs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "kwargs", [dict(use_pallas=False), dict(use_pallas=True, interpret=True)]
+)
+def test_node_batch_matches_single_runs_bitwise(kwargs):
+    p = make_knapsack(n=40, m=12, seed=1)
+    nodes = _branched_nodes(p, 5)
+    res = propagate_nodes(
+        p, np.stack([a for a, _ in nodes]), np.stack([b for _, b in nodes]),
+        **kwargs,
+    )
+    assert res.size == 5
+    for i, (lb, ub) in enumerate(nodes):
+        single = propagate_block_ell(p, lb0=lb, ub0=ub, **kwargs)
+        _assert_same_result(res.result(i), single)
+
+
+def test_node_batch_mixed_round_counts():
+    """A root-bounds node and a tightened node of the §2.2 cascade converge
+    to their own fixed points with their own round counts."""
+    c = make_cascade_chain(16)
+    ub_tight = c.ub.copy()
+    ub_tight[0] = 0.25
+    res = propagate_nodes(
+        c, np.stack([c.lb, c.lb]), np.stack([c.ub, ub_tight]), use_pallas=False
+    )
+    for i, (lb, ub) in enumerate([(c.lb, c.ub), (c.lb, ub_tight)]):
+        single = propagate_block_ell(c, lb0=lb, ub0=ub, use_pallas=False)
+        _assert_same_result(res.result(i), single)
+    assert int(res.rounds[0]) != int(res.rounds[1])
+
+
+def test_node_batch_multichunk_path():
+    """tile_width below the longest row forces the vmapped multichunk
+    round; node results still match single runs."""
+    p = make_knapsack(n=40, m=10, seed=2)
+    assert any(np.diff(p.csr.row_ptr) > 8)
+    nodes = _branched_nodes(p, 3, seed=4)
+    res = propagate_nodes(
+        p, np.stack([a for a, _ in nodes]), np.stack([b for _, b in nodes]),
+        tile_rows=2, tile_width=8, use_pallas=False,
+    )
+    for i, (lb, ub) in enumerate(nodes):
+        single = propagate_block_ell(
+            p, lb0=lb, ub0=ub, tile_rows=2, tile_width=8, use_pallas=False
+        )
+        _assert_same_result(res.result(i), single)
+
+
+def test_infeasible_node_is_pruned_not_poisoning():
+    p = make_knapsack(n=30, m=10, seed=3)
+    ok_lb, ok_ub = p.lb.copy(), p.ub.copy()
+    bad_lb = p.lb.copy()
+    bad_lb[:] = 1.0  # select every item: violates the knapsack capacities
+    res = propagate_nodes(
+        p, np.stack([ok_lb, bad_lb]), np.stack([ok_ub, p.ub]), use_pallas=False
+    )
+    assert not bool(res.infeasible[0])
+    assert bool(res.infeasible[1])
+    single = propagate_block_ell(p, use_pallas=False)
+    _assert_same_result(res.result(0), single)
+
+
+def test_node_batch_api_and_branching_helpers():
+    p = make_pseudo_boolean(n=40, m=30, seed=2)
+    nb = NodeBatch.from_root(p, copies=3)
+    assert nb.size == 3 and nb.lb.shape == (3, p.n)
+    (dlb, dub), (ulb, uub) = branch_children(p.lb, p.ub, 5, 0.0)
+    assert dub[5] == 0.0 and ulb[5] == 1.0
+    nb2 = NodeBatch.from_nodes(p, [(dlb, dub), (ulb, uub)])
+    res = propagate_node_batch(nb2, use_pallas=False)
+    survivors = nb2.select(~np.asarray(res.infeasible))
+    assert survivors.size == int((~np.asarray(res.infeasible)).sum())
+    for r, full in zip(res.results(), [res.result(0), res.result(1)]):
+        np.testing.assert_array_equal(np.asarray(r.lb), np.asarray(full.lb))
+
+
+def test_repeated_node_propagation_is_stable():
+    """Structure/runner caches + donation must not corrupt state across
+    repeated node propagations of the same instance."""
+    p = make_mixed(m=60, n=45, seed=8)
+    nodes = _branched_nodes(p, 4, seed=5)
+    lb = np.stack([a for a, _ in nodes])
+    ub = np.stack([b for _, b in nodes])
+    r1 = propagate_nodes(p, lb, ub, use_pallas=False)
+    r2 = propagate_nodes(p, lb, ub, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(r1.lb), np.asarray(r2.lb))
+    np.testing.assert_array_equal(np.asarray(r1.ub), np.asarray(r2.ub))
+    np.testing.assert_array_equal(np.asarray(r1.rounds), np.asarray(r2.rounds))
+
+
+def test_warm_start_agrees_with_sequential_limit():
+    """A warm-started node's limit point agrees with propagating the node
+    as its own problem through the sequential reference."""
+    from repro.core import propagate_sequential
+
+    p = make_pseudo_boolean(n=50, m=40, seed=3)
+    (lb, ub), = _branched_nodes(p, 1, fixings=2, seed=6)
+    warm = propagate_block_ell(p, lb0=lb, ub0=ub, use_pallas=False)
+    seq = propagate_sequential(p._replace(lb=lb, ub=ub))
+    if not bool(warm.infeasible):
+        assert bounds_equal(warm.lb, warm.ub, seq.lb, seq.ub)

@@ -1,0 +1,140 @@
+"""Property tests for the sparse-layout conversions that back the engines:
+
+  * ``csr_to_csc`` represents the SAME dense matrix (round-trip through
+    both layouts), across seeded random sparsity patterns, empty rows/cols,
+    and duplicate-free COO inputs;
+  * ``permute_problem`` commutes with propagation: propagating a
+    row/col-permuted problem yields the permuted bounds of the original's
+    fixed point (paper App. B's semantic counterpart, here as an
+    always-running seeded sweep -- the hypothesis variant in
+    test_properties.py is skipped when hypothesis is absent).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    INF,
+    Problem,
+    bounds_equal,
+    csr_from_coo,
+    csr_from_dense,
+    csr_to_csc,
+    permute_problem,
+    propagate,
+)
+from repro.data.instances import make_mixed, make_pseudo_boolean
+
+
+def _random_problem(seed):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(3, 25))
+    n = int(rng.integers(3, 20))
+    density = float(rng.uniform(0.15, 0.6))
+    mask = rng.random((m, n)) < density
+    for i in range(m):  # at least one nonzero per row
+        if not mask[i].any():
+            mask[i, rng.integers(0, n)] = True
+    a = np.where(mask, rng.choice([-3.0, -2.0, -1.0, 1.0, 2.0], size=(m, n)), 0.0)
+    csr = csr_from_dense(a)
+    ub = rng.integers(1, 6, size=n).astype(np.float64)
+    lb = -rng.integers(0, 3, size=n).astype(np.float64)
+    lb[rng.random(n) < 0.15] = -INF
+    ub[rng.random(n) < 0.15] = INF
+    row_abs = np.abs(a).sum(axis=1)
+    lhs = np.where(rng.random(m) < 0.4, -INF, -row_abs * rng.uniform(0.1, 0.5, m))
+    rhs = np.where(rng.random(m) < 0.2, INF, row_abs * rng.uniform(0.1, 0.5, m))
+    swap = lhs > rhs
+    lhs[swap], rhs[swap] = rhs[swap], lhs[swap]
+    return Problem(
+        csr=csr, lhs=lhs, rhs=rhs, lb=lb, ub=ub, is_int=rng.random(n) < 0.5
+    )
+
+
+def _csc_to_dense(csc) -> np.ndarray:
+    m, n = int(csc.n_rows), int(csc.col_ptr.shape[0]) - 1
+    a = np.zeros((m, n), dtype=csc.val.dtype)
+    for j in range(n):
+        s, e = int(csc.col_ptr[j]), int(csc.col_ptr[j + 1])
+        a[csc.row[s:e], j] = csc.val[s:e]
+    return a
+
+
+# ---------------------------------------------------------------------------
+# CSC round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_csr_to_csc_same_dense_matrix(seed):
+    p = _random_problem(seed)
+    dense = p.csr.to_dense()
+    np.testing.assert_array_equal(_csc_to_dense(csr_to_csc(p.csr)), dense)
+
+
+def test_csr_to_csc_handles_empty_rows_and_cols():
+    # Row 1 and column 2 carry no nonzeros at all.
+    a = np.array([[1.0, 0.0, 0.0, -2.0],
+                  [0.0, 0.0, 0.0, 0.0],
+                  [0.0, 3.0, 0.0, 0.5]])
+    csr = csr_from_dense(a)
+    csc = csr_to_csc(csr)
+    np.testing.assert_array_equal(_csc_to_dense(csc), a)
+    assert int(csc.col_ptr[2]) == int(csc.col_ptr[3])  # empty column window
+
+
+def test_csr_to_csc_column_major_invariants():
+    p = make_mixed(m=60, n=45, seed=9)
+    csc = csr_to_csc(p.csr)
+    assert csc.val.shape == p.csr.val.shape
+    cols_of = np.repeat(np.arange(p.n), np.diff(csc.col_ptr))
+    assert (np.diff(cols_of) >= 0).all()  # columns nondecreasing
+    for j in range(p.n):  # rows sorted within each column
+        s, e = int(csc.col_ptr[j]), int(csc.col_ptr[j + 1])
+        assert (np.diff(csc.row[s:e]) > 0).all()
+
+
+def test_coo_csr_csc_round_trip():
+    rng = np.random.default_rng(42)
+    m, n, nnz = 15, 12, 40
+    cells = rng.choice(m * n, size=nnz, replace=False)
+    rows, cols = (cells // n).astype(np.int32), (cells % n).astype(np.int32)
+    vals = rng.uniform(-4, 4, size=nnz)
+    csr = csr_from_coo(rows, cols, vals, m, n)
+    dense = np.zeros((m, n))
+    dense[rows, cols] = vals
+    np.testing.assert_array_equal(csr.to_dense(), dense)
+    np.testing.assert_array_equal(_csc_to_dense(csr_to_csc(csr)), dense)
+
+
+# ---------------------------------------------------------------------------
+# Permutation commutes with propagation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_permuted_problem_propagates_to_permuted_bounds(seed):
+    p = _random_problem(100 + seed)
+    rng = np.random.default_rng(seed)
+    row_perm = rng.permutation(p.m)
+    col_perm = rng.permutation(p.n)
+    q = permute_problem(p, row_perm, col_perm)
+    # Structural check: the permuted dense matrix is the original reindexed.
+    np.testing.assert_array_equal(
+        q.csr.to_dense(), p.csr.to_dense()[np.ix_(row_perm, col_perm)]
+    )
+    rp = propagate(p)
+    rq = propagate(q)
+    assert bool(rq.infeasible) == bool(rp.infeasible)
+    if not bool(rp.infeasible):
+        assert bounds_equal(
+            np.asarray(rq.lb), np.asarray(rq.ub),
+            np.asarray(rp.lb)[col_perm], np.asarray(rp.ub)[col_perm],
+        )
+
+
+def test_permutation_identity_is_noop():
+    p = make_pseudo_boolean(n=40, m=30, seed=5)
+    q = permute_problem(p, np.arange(p.m), np.arange(p.n))
+    np.testing.assert_array_equal(q.csr.to_dense(), p.csr.to_dense())
+    np.testing.assert_array_equal(q.lb, p.lb)
+    np.testing.assert_array_equal(q.lhs, p.lhs)
