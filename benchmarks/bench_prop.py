@@ -10,9 +10,14 @@ one instance over a shared resident matrix, ``propagate_nodes``) against
 repacking each node as a fresh instance, reporting instances/sec and
 nodes/sec throughput.
 
+A ``partitioned`` engine row records the column-slab engine on
+VMEM-exceeding banded large-n instances (``n_pad > SCATTER_MAX_NPAD``),
+with the segment engine measured on the same instances for comparison.
+
 Results are MERGED into ``BENCH_prop.json`` (engine rows are updated or
 added, unknown keys from earlier PRs are preserved) so the perf trajectory
-stays comparable across PRs.
+stays comparable across PRs.  See docs/BENCHMARKS.md for the JSON schema,
+the paired-trials methodology, and the recipe for adding an engine row.
 """
 from __future__ import annotations
 
@@ -25,8 +30,9 @@ import numpy as np
 
 from repro.core.nodes import branch_children, propagate_nodes
 from repro.core.propagator import fresh_instance_runner, owned_copy, propagate
-from repro.data.instances import instances_for_set, make_pseudo_boolean
+from repro.data.instances import instances_for_set, make_banded, make_pseudo_boolean
 from repro.kernels import (
+    SCATTER_MAX_NPAD,
     batched_device_runner,
     legacy_round_fn_for,
     packed_problems,
@@ -42,6 +48,18 @@ SET = "Set-2"
 PER_FAMILY = 2
 ENGINES = ("fused", "segment", "legacy")
 OUT_PATH = "BENCH_prop.json"
+
+# Large-n population for the partitioned engine row: banded instances whose
+# n_pad exceeds the VMEM accumulator budget (the regime the fused engine
+# used to abandon to the segment fallback).  Banded columns keep the slab
+# copy duplication near 1; nnz >> n so the nnz-proportional byte model, not
+# the O(n_pad) resident vectors, dominates the comparison.
+LARGE_N = SCATTER_MAX_NPAD + 4000
+LARGE_SPECS = (
+    dict(m=12_000, row_nnz=32, band=1024, seed=0),
+    dict(m=15_000, row_nnz=32, band=1024, seed=1),
+)
+LARGE_TILE = dict(tile_rows=8, tile_width=32)
 
 # Batched-throughput population: >= 8 Set-2 instances of the quick-verdict
 # serving shape (set-cover presolves converge in one round, so the batch has
@@ -205,6 +223,43 @@ def node_throughput():
     }
 
 
+def partitioned_large_row():
+    """The ``partitioned`` engine row: round time + measured bytes/round of
+    the column-slab engine on VMEM-exceeding banded instances, with the
+    segment engine measured on the SAME instances for the comparison the
+    partitioned engine exists to win (jnp-oracle arithmetic timings, like
+    the other engine rows; bytes from ``round_cost_analysis``)."""
+    acc = {
+        "partitioned": {"round_us": [], "bytes": []},
+        "segment": {"round_us": [], "bytes": []},
+    }
+    for spec in LARGE_SPECS:
+        p = make_banded(n=LARGE_N, **spec)
+        prep = prepare_block_ell(p, **LARGE_TILE)
+        assert prep.n_pad > SCATTER_MAX_NPAD
+        for engine in ("partitioned", "segment"):
+            fn = jax.jit(round_fn_for(prep, use_pallas=False, scatter=engine))
+            lb, ub = prep.lb0, prep.ub0
+            fn(lb, ub)[0].block_until_ready()  # compile outside the timer
+            t = time_fn(lambda: fn(lb, ub)[0].block_until_ready())
+            acc[engine]["round_us"].append(t * 1e6)
+            acc[engine]["bytes"].append(
+                round_cost_analysis(p, engine, **LARGE_TILE)["bytes_accessed"]
+            )
+    return {
+        "set": f"banded n={LARGE_N}",
+        "instances": len(LARGE_SPECS),
+        "n_pad_over_budget": True,
+        "geomean_round_us": geomean(acc["partitioned"]["round_us"]),
+        "geomean_bytes_per_round": geomean(acc["partitioned"]["bytes"]),
+        "segment_geomean_round_us": geomean(acc["segment"]["round_us"]),
+        "segment_geomean_bytes_per_round": geomean(acc["segment"]["bytes"]),
+        "bytes_vs_segment": geomean(
+            [pb / sb for pb, sb in zip(acc["partitioned"]["bytes"], acc["segment"]["bytes"])]
+        ),
+    }
+
+
 def _merge_report(report: dict, out_path: str) -> dict:
     """Merge new engine rows into an existing BENCH_prop.json: engine rows
     are updated/added, any other keys from earlier PRs are preserved."""
@@ -243,6 +298,7 @@ def run(out_path: str = OUT_PATH):
 
     thru = batched_throughput()
     nodes = node_throughput()
+    large = partitioned_large_row()
     report = {
         "set": SET,
         "instances": len(insts),
@@ -267,6 +323,7 @@ def run(out_path: str = OUT_PATH):
         "nodes_per_sec": nodes["shared_nodes_per_sec"],
         "speedup_vs_repack_dispatch": nodes["shared_matrix_speedup"],
     }
+    report["engines"]["partitioned"] = large
     report["bytes_reduction_fused_vs_legacy"] = geomean(
         [l / f for l, f in zip(acc["legacy"]["bytes"], acc["fused"]["bytes"])]
     )
@@ -297,6 +354,14 @@ def run(out_path: str = OUT_PATH):
          f"nodes_per_sec={nodes['shared_nodes_per_sec']:.1f} "
          f"speedup_vs_repack={nodes['shared_matrix_speedup']:.2f}x "
          f"nodes={nodes['nodes']}")
+    )
+    rows.append(
+        ("bench_prop_partitioned",
+         large["geomean_round_us"],
+         f"large_set={large['set']} "
+         f"bytes_per_round={large['geomean_bytes_per_round']:.0f} "
+         f"segment_bytes={large['segment_geomean_bytes_per_round']:.0f} "
+         f"bytes_vs_segment={large['bytes_vs_segment']:.2f}x")
     )
     rows.append(
         ("bench_prop_json", 0.0,

@@ -45,3 +45,28 @@ for j, (l, u) in enumerate(zip(np.asarray(result.lb), np.asarray(result.ub))):
 seq = propagate_sequential(problem)
 print(f"\nsequential reference: {seq.rounds} rounds -- bounds match: "
       f"{np.allclose(seq.lb, np.asarray(result.lb)) and np.allclose(seq.ub, np.asarray(result.ub))}")
+
+# --- Warm start: the tree-search pattern -------------------------------------
+# A branch-and-bound node differs from its parent by ONE branching bound.
+# Bounds are RUNTIME arguments of every driver, so a node propagates through
+# the SAME resident engine -- nothing is repacked or recompiled.  Here: the
+# kernel-backed engine, first the root, then a child with y fixed to 0.
+from repro.kernels import cache_info, propagate_block_ell
+
+root = propagate_block_ell(problem)          # prepares + compiles once
+child_lb = np.asarray(root.lb).copy()
+child_ub = np.asarray(root.ub).copy()
+child_ub[1] = 1.0                            # branch down: y <= 1
+child = propagate_block_ell(problem, lb0=child_lb, ub0=child_ub)
+print(f"\nwarm-started child (y <= 1): infeasible={bool(child.infeasible)}, "
+      f"rounds={int(child.rounds)}")
+for j, (l, u) in enumerate(zip(np.asarray(child.lb), np.asarray(child.ub))):
+    print(f"  x{j} in [{l:g}, {u:g}]")
+
+# The engine caches did the heavy lifting exactly once: the second call hits
+# both the prepared-instance LRU and the compiled-runner LRU.
+info = cache_info()
+print("\ncache_info():")
+for name in ("prepare_block_ell", "block_ell_runner"):
+    c = info[name]
+    print(f"  {name}: hits={c['hits']} misses={c['misses']} size={c['size']}")

@@ -118,12 +118,14 @@ def propagate_nodes(
 
     ``lb_nodes``/``ub_nodes`` are ``(B, n)`` per-node bound planes (or a
     :class:`NodeBatch`'s fields).  The instance's block-ELL tiles, hoisted
-    gathers and the compiled fixed point are cached per matrix structure,
-    so successive frontiers of the same search pay only the two ``(B, n)``
-    uploads and one dispatch.  Per-node ``rounds``/``converged`` match what
-    each node would see in its own single-instance run; ``infeasible``
-    nodes are reported for pruning, and their bucket mates are unaffected.
-    """
+    gathers and the compiled fixed point are cached per matrix structure
+    (``kernels.cache_info()`` reports hits), so successive frontiers of
+    the same search pay only the two ``(B, n)`` uploads and one dispatch.
+    VMEM-exceeding instances (``n_pad > SCATTER_MAX_NPAD``) ride the
+    column-slab partitioned node kernels automatically.  Per-node
+    ``rounds``/``converged`` match what each node would see in its own
+    single-instance run; ``infeasible`` nodes are reported for pruning,
+    and their bucket mates are unaffected."""
     from ..kernels.ops import (  # lazy: kernels imports core at module scope
         prepare_block_ell,
         propagate_nodes_prepared,

@@ -15,6 +15,10 @@ from .types import INF
 
 
 class PresolveVerdict(NamedTuple):
+    """Per-constraint presolve verdicts from one activity computation
+    (paper §1.1 Steps 1-2): rows provably redundant, rows provably
+    unsatisfiable, and their any-reduction."""
+
     redundant: jnp.ndarray    # (m,) bool: Step 1 -- constraint can be removed
     infeasible: jnp.ndarray   # (m,) bool: Step 2 -- constraint cannot be satisfied
     any_infeasible: jnp.ndarray  # () bool
@@ -23,6 +27,9 @@ class PresolveVerdict(NamedTuple):
 def analyze_constraints(
     row_id, val, col, lhs, rhs, lb, ub, m: int, feas_eps: float = 1e-8, inf: float = INF
 ) -> PresolveVerdict:
+    """Classify every constraint as redundant / infeasible / neither from
+    its activity bounds (jit-able; ``(nnz,)`` COO-style inputs plus ``(m,)``
+    sides and ``(n,)`` bounds)."""
     acts = compute_activities(row_id, val, col, lb, ub, m, inf)
     amin, amax = activity_values(acts, inf)
     # Step 1: lhs <= amin and amax <= rhs  -> redundant.

@@ -288,13 +288,18 @@ def propagate_batch(
     """Propagate a batch of instances, thousands per device dispatch.
 
     Front end over the batched block-ELL engine: instances are bucketed by
-    padded shape (``core.sparse.pack_problems``), each bucket runs its
-    fixed point in ONE dispatch with a per-instance convergence mask, and
-    results come back as one ``PropagationResult`` per instance, input
-    order.  ``bounds`` (one ``(lb, ub)`` pair or ``None`` per problem)
-    warm-starts instances from caller bounds without repacking.  See
-    ``kernels.ops.propagate_batch_block_ell`` for the engine knobs.
-    """
+    padded column width (``core.sparse.pack_problems``), each bucket runs
+    its fixed point in ONE dispatch with a per-instance convergence mask,
+    and results come back as one ``PropagationResult`` per instance, input
+    order (``(n_i,)`` bounds each).  Buckets whose ``n_pad`` exceeds the
+    VMEM accumulator budget ride the column-slab partitioned kernels
+    automatically.  ``bounds`` (one ``(lb_i, ub_i)`` pair of ``(n_i,)``
+    arrays or ``None`` per problem) warm-starts instances from caller
+    bounds without repacking.  Packing, device transfer and the compiled
+    runners are LRU-cached on the identity of the problem list / packed
+    batch (see ``kernels.cache_info()``), so a serving loop pays them
+    once.  See ``kernels.ops.propagate_batch_block_ell`` for the engine
+    knobs."""
     from ..kernels.ops import propagate_batch_block_ell  # lazy: kernels imports core
 
     return propagate_batch_block_ell(
@@ -357,11 +362,17 @@ def propagate(
     lb0=None,
     ub0=None,
 ) -> PropagationResult:
-    """Convenience front end: Problem -> PropagationResult.
+    """Convenience front end: Problem -> PropagationResult (pure-jnp round,
+    no Pallas -- the kernel-backed sibling is ``kernels.propagate_block_ell``).
 
-    ``lb0``/``ub0`` override the problem's bounds for this call only (the
-    warm-start path: propagate a B&B node's domain through the root
-    problem's prepared arrays without rebuilding anything)."""
+    ``driver`` picks the loop (``host_loop`` syncs one flag per round,
+    ``device_loop`` runs the whole fixed point as one dispatch,
+    ``unrolled`` checks convergence every k rounds); ``dtype`` overrides
+    the value dtype (default: the CSR's, f64 under x64).  ``lb0``/``ub0``
+    are ``(n,)`` warm-start overrides for this call only (the tree-search
+    path: propagate a B&B node's domain through the root problem's device
+    arrays without rebuilding anything); the returned bounds are ``(n,)``
+    device arrays in that dtype."""
     dp = DeviceProblem(p, dtype=dtype)
     if driver == "host_loop":
         return propagate_host_loop(dp, cfg, lb0=lb0, ub0=ub0)

@@ -27,6 +27,11 @@ from .types import DEFAULT_CONFIG, PropagatorConfig
 
 @dataclasses.dataclass
 class SeqResult:
+    """Outcome of the sequential reference propagation (host numpy):
+    tightened ``(n,)`` bounds, rounds to the fixed point, convergence /
+    infeasibility verdicts, and the total number of bound changes applied
+    (the marking mechanism's work measure)."""
+
     lb: np.ndarray
     ub: np.ndarray
     rounds: int
@@ -53,6 +58,10 @@ def propagate_sequential(
     use_marking: bool = True,
     dtype=np.float64,
 ) -> SeqResult:
+    """The paper's sequential Algorithm 1 on the host: constraint-at-a-time
+    propagation with the CSC-based marking mechanism (``use_marking=False``
+    sweeps every row each round instead).  The limit-point reference every
+    parallel engine is validated against (paper §4.3 tolerance)."""
     csr = p.csr.astype(dtype)
     m, n = csr.m, csr.n
     inf = cfg.inf

@@ -75,6 +75,13 @@ class Problem(NamedTuple):
 
 
 class CSR(NamedTuple):
+    """Compressed sparse rows, the canonical input format (paper §3).
+
+    ``row_ptr`` is the usual ``(m+1,)`` offset array; ``col``/``val`` hold
+    the ``nnz`` column ids and coefficients row-major with columns sorted
+    within each row.  ``n_cols`` rides along as a 0-d array so the tuple
+    stays a valid pytree."""
+
     row_ptr: np.ndarray   # (m+1,) int32
     col: np.ndarray       # (nnz,) int32
     val: np.ndarray       # (nnz,) float
@@ -110,6 +117,10 @@ class CSR(NamedTuple):
 
 
 class CSC(NamedTuple):
+    """Compressed sparse columns: the column-major view the *sequential*
+    algorithm's marking mechanism walks (Alg. 1 line 20), built once
+    up-front by :func:`csr_to_csc` (paper §4.3 init phase)."""
+
     col_ptr: np.ndarray   # (n+1,) int32
     row: np.ndarray       # (nnz,) int32
     val: np.ndarray       # (nnz,) float
@@ -145,6 +156,8 @@ class BlockEll(NamedTuple):
 
 
 def csr_from_dense(a: np.ndarray, dtype=np.float64) -> CSR:
+    """Dense ``(m, n)`` matrix -> :class:`CSR` (zeros become structural
+    zeros; columns come out sorted within each row)."""
     a = np.asarray(a, dtype=dtype)
     m, n = a.shape
     mask = a != 0
@@ -159,6 +172,8 @@ def csr_from_dense(a: np.ndarray, dtype=np.float64) -> CSR:
 def csr_from_coo(
     rows: np.ndarray, cols: np.ndarray, vals: np.ndarray, m: int, n: int
 ) -> CSR:
+    """Coordinate triplets (any order, no duplicate handling) -> sorted
+    :class:`CSR` with ``m`` rows and ``n`` columns."""
     order = np.lexsort((cols, rows))
     rows, cols, vals = rows[order], cols[order], vals[order]
     counts = np.bincount(rows, minlength=m).astype(np.int32)
@@ -173,6 +188,8 @@ def csr_from_coo(
 
 
 def csr_to_csc(csr: CSR) -> CSC:
+    """Transpose the storage order: :class:`CSR` -> :class:`CSC` with rows
+    sorted within each column (the sequential propagator's init step)."""
     rid = csr.row_ids()
     order = np.lexsort((rid, csr.col))
     col_sorted = csr.col[order]
@@ -444,6 +461,8 @@ def batch_stats(batches: Sequence[ProblemBatch]) -> dict:
 
 
 def block_ell_stats(b: BlockEll) -> dict:
+    """Layout diagnostics of one block-ELL conversion: tile counts, tile
+    shape, nnz, padded slots and the padding fraction."""
     nnz = int((b.val != 0).sum())
     return {
         "tiles": b.num_tiles,

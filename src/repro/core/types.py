@@ -63,6 +63,14 @@ class Activities(NamedTuple):
 
 
 class PropagationResult(NamedTuple):
+    """Outcome of one propagation fixed point (any engine, any driver).
+
+    ``lb``/``ub`` are the tightened ``(n,)`` bound vectors (device arrays,
+    sentinel-infinite); the scalars are device arrays too so batched
+    drivers can return them without host syncs.  ``infeasible`` means some
+    variable's domain emptied (``lb > ub + feas_eps``) -- in tree search,
+    prune the node."""
+
     lb: jnp.ndarray            # (n,) tightened lower bounds
     ub: jnp.ndarray            # (n,) tightened upper bounds
     rounds: jnp.ndarray        # () int32: propagation rounds executed

@@ -7,6 +7,7 @@ from .instances import (
     make_set_cover,
     make_bin_packing,
     make_assignment,
+    make_banded,
     make_cascade_chain,
     make_mixed,
     make_pseudo_boolean,

@@ -17,10 +17,19 @@ Engine anatomy (see README "fused-scatter dataflow"):
     grid steps; a small merge kernel then folds them into (lb, ub) in place
     (``input_output_aliases``).  NO nnz-shaped tensor -- neither gathered
     bounds nor candidates -- is produced in HBM during a round.
+  * ``scatter="partitioned"`` -- the column-slab engine for instances whose
+    ``n_pad`` exceeds the VMEM accumulator budget: the padded column space
+    is split into balanced slabs (``default_slab_width``, capped at
+    ``SLAB_NPAD``), the tile stream into per-slab
+    masked copies (``build_slab_partition``, cached on the prep), and the
+    round runs two-phase -- per-copy activity partials with in-window
+    gather, a tiny ``(T', R)`` XLA segment combine, candidates + per-slab
+    scatter -- so only ``(1, S)`` bound/accumulator windows are ever
+    VMEM-resident and the fused byte model holds at any instance size.
+    ``scatter="auto"`` selects it beyond ``SCATTER_MAX_NPAD``.
   * ``scatter="segment"`` -- the materializing oracle: XLA bound gathers,
     candidates written to HBM, column reduction via XLA segment ops (the
-    seed dataflow, kept for cross-validation and as the fallback when
-    ``n_pad`` exceeds the VMEM accumulator budget).
+    seed dataflow, kept for cross-validation).
   * Zero-copy fixed point: every jitted driver donates the (lb, ub) buffers
     (``donate_argnums``) so XLA updates bounds in place round over round.
     Donation is requested only on backends that implement it (TPU/GPU); the
@@ -82,6 +91,11 @@ class DeviceBlockEll(NamedTuple):
 
 
 def device_block_ell(p: Problem, tile_rows: int = 8, tile_width: int = 128, dtype=None) -> DeviceBlockEll:
+    """Convert + upload one instance: block-ELL tiles of shape
+    ``(tile_rows, tile_width)``, sides padded with a dummy slot for the
+    padding row, bounds and integrality marks as ``(n,)`` device arrays.
+    Prefer :func:`prepare_block_ell`, which caches this and hoists the
+    round-constant gathers."""
     dtype = dtype or p.csr.val.dtype
     b = csr_to_block_ell(p.csr, tile_rows=tile_rows, tile_width=tile_width)
     pad1 = lambda x: np.concatenate([x, np.zeros(1, dtype=x.dtype)])
@@ -98,7 +112,160 @@ def device_block_ell(p: Problem, tile_rows: int = 8, tile_width: int = 128, dtyp
 
 
 def rows_fit_one_chunk(p: Problem, tile_width: int) -> bool:
+    """True iff every row's nonzeros fit one ``tile_width``-wide chunk --
+    the condition for the single-kernel fused round (no cross-chunk
+    activity combine needed)."""
     return int(np.diff(p.csr.row_ptr).max(initial=0)) <= tile_width
+
+
+# ---------------------------------------------------------------------------
+# Column-slab partitioning: the tile stream re-bucketed per VMEM-sized slab
+# ---------------------------------------------------------------------------
+
+
+class SlabPartition(NamedTuple):
+    """A block-ELL tile stream re-bucketed by column slabs (device-ready).
+
+    The padded column space is split into ``n_slabs`` windows of ``slab``
+    columns; each source tile becomes one COPY per slab it touches, keeping
+    only the nonzeros whose columns fall in that slab (``val == 0``
+    elsewhere, exactly the block-ELL padding convention).  Copies are
+    sorted by ``(instance, slab, source tile)`` so each ``(instance,
+    slab)`` window's bound/accumulator blocks stay VMEM-resident across
+    its contiguous copies in the partitioned kernels; every window is
+    covered (synthetic all-padding copies fill empty ones) so accumulators
+    are always initialized.  Built once per prepared instance/bucket by
+    :func:`build_slab_partition` and cached (see
+    ``PreparedBlockEll.slab_partition``)."""
+
+    val: jnp.ndarray        # (T', R, K) slab-masked copies; 0 == padding
+    col_s: jnp.ndarray      # (T', R, K) int32 slab-LOCAL columns
+    chunk_row: jnp.ndarray  # (T', R) int32 rows (global ids in batched use)
+    tile_inst: jnp.ndarray  # (T',) int32 instance of each copy (0 if single)
+    tile_slab: jnp.ndarray  # (T',) int32 slab of each copy
+    ii_g: jnp.ndarray       # (T', R, K) int32 is_int at each kept nonzero
+    lhs_g: jnp.ndarray      # (T', R) sides gathered per chunk
+    rhs_g: jnp.ndarray      # (T', R)
+    slab: int               # S: columns per slab (multiple of LANE)
+    n_slabs: int            # windows per instance
+    n_pad_part: int         # n_slabs * slab >= n_pad
+    source_tiles: int       # T of the unpartitioned stream
+
+    @property
+    def num_copies(self) -> int:
+        return int(self.val.shape[0])
+
+    @property
+    def duplication(self) -> float:
+        """Copy blowup vs the source stream (1.0 == no tile straddles)."""
+        return self.num_copies / max(1, self.source_tiles)
+
+
+def build_slab_partition(
+    val: np.ndarray,
+    col: np.ndarray,
+    chunk_row: np.ndarray,
+    tile_inst: np.ndarray,
+    lhs1: np.ndarray,
+    rhs1: np.ndarray,
+    is_int_rows: np.ndarray,
+    n_pad: int,
+    slab: int,
+    dummy_rows: np.ndarray,
+) -> SlabPartition:
+    """Host-side slab bucketing of a (possibly batched) block-ELL stream.
+
+    ``val``/``col`` are ``(T, R, K)`` tiles with instance-local columns;
+    ``chunk_row`` carries the row ids the activity combine segments over
+    (global across instances in batched use); ``lhs1``/``rhs1`` are the
+    side vectors those ids index; ``is_int_rows`` is the ``(B, n_pad)``
+    integrality plane and ``dummy_rows`` each instance's padding row.
+
+    Tiles whose nonzero columns span several slabs are duplicated once per
+    touched slab with the out-of-slab nonzeros masked to padding -- rare
+    when columns are locally clustered, and bounded by ``n_slabs`` copies
+    in the worst case (``SlabPartition.duplication`` reports the measured
+    blowup).  Synthetic all-padding copies cover ``(instance, slab)``
+    windows that no tile touches, so every accumulator window is visited
+    and initialized."""
+    val = np.asarray(val)
+    col = np.asarray(col)
+    chunk_row = np.asarray(chunk_row)
+    tile_inst = np.asarray(tile_inst, dtype=np.int64)
+    is_int_rows = np.asarray(is_int_rows)
+    dummy_rows = np.asarray(dummy_rows, dtype=np.int32)
+    t, r, k = val.shape
+    dt = val.dtype
+    if slab % kern.LANE:
+        raise ValueError(f"slab={slab} must be a multiple of LANE={kern.LANE}")
+    n_slabs = -(-n_pad // slab)
+    n_pad_part = n_slabs * slab
+    bsz = int(dummy_rows.shape[0])
+
+    nz = val != 0
+    slab_of = np.where(nz, col // slab, 0)
+    touched = np.zeros((t, n_slabs), dtype=bool)
+    t_idx = np.broadcast_to(np.arange(t)[:, None, None], val.shape)
+    touched[t_idx[nz], slab_of[nz]] = True
+    # All-padding source tiles ride slab 0 so T' >= T and no tile vanishes.
+    touched[~touched.any(axis=1), 0] = True
+
+    t_ids, s_ids = np.nonzero(touched)  # tile-major copy list
+    inst_ids = tile_inst[t_ids]
+
+    pv = val[t_ids]
+    pc = col[t_ids]
+    keep = (pv != 0) & ((pc // slab) == s_ids[:, None, None])
+    pval = np.where(keep, pv, 0).astype(dt)
+    pcol = np.where(keep, pc - s_ids[:, None, None] * slab, 0).astype(np.int32)
+    pii = np.where(keep, is_int_rows[inst_ids[:, None, None], pc], False)
+    pchunk = chunk_row[t_ids].astype(np.int32)
+
+    # Synthetic all-padding copies for uncovered (instance, slab) windows:
+    # their chunks target the instance's dummy row, their candidates are
+    # sentinels, so they only initialize the window's accumulators.
+    cover = np.zeros((bsz, n_slabs), dtype=bool)
+    cover[inst_ids, s_ids] = True
+    miss_i, miss_s = np.nonzero(~cover)
+    if miss_i.size:
+        c = miss_i.size
+        pval = np.concatenate([pval, np.zeros((c, r, k), dt)])
+        pcol = np.concatenate([pcol, np.zeros((c, r, k), np.int32)])
+        pii = np.concatenate([pii, np.zeros((c, r, k), bool)])
+        pchunk = np.concatenate(
+            [pchunk, np.broadcast_to(dummy_rows[miss_i][:, None], (c, r)).astype(np.int32)]
+        )
+        inst_ids = np.concatenate([inst_ids, miss_i])
+        s_ids = np.concatenate([s_ids, miss_s])
+        t_ids = np.concatenate([t_ids, np.full(c, t, dtype=t_ids.dtype)])
+
+    # (instance, slab, source-tile) order: each (instance, slab) window is
+    # one contiguous run, tiles in stream order within it.
+    order = np.lexsort((t_ids, s_ids, inst_ids))
+    pval, pcol, pii = pval[order], pcol[order], pii[order]
+    pchunk = pchunk[order]
+    inst_ids, s_ids = inst_ids[order], s_ids[order]
+
+    lhs1 = np.asarray(lhs1, dtype=dt)
+    rhs1 = np.asarray(rhs1, dtype=dt)
+    # The partition may be built lazily inside a jit trace (the first round
+    # closure that needs it); materialize concrete device constants there
+    # instead of leaking trace-scoped tracers into the prep cache.
+    with jax.ensure_compile_time_eval():
+        return SlabPartition(
+            val=jnp.asarray(pval),
+            col_s=jnp.asarray(pcol),
+            chunk_row=jnp.asarray(pchunk),
+            tile_inst=jnp.asarray(inst_ids.astype(np.int32)),
+            tile_slab=jnp.asarray(s_ids.astype(np.int32)),
+            ii_g=jnp.asarray(pii.astype(np.int32)),
+            lhs_g=jnp.asarray(lhs1[pchunk]),
+            rhs_g=jnp.asarray(rhs1[pchunk]),
+            slab=int(slab),
+            n_slabs=int(n_slabs),
+            n_pad_part=int(n_pad_part),
+            source_tiles=t,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -108,6 +275,24 @@ def rows_fit_one_chunk(p: Problem, tile_width: int) -> bool:
 # Largest column-padded width the fused scatter keeps resident in VMEM
 # (2 accumulators x n_pad x 8 B = 1 MiB at the cap; ~6% of a v5e core's VMEM).
 SCATTER_MAX_NPAD = 1 << 16
+
+# Cap on the partitioned engine's column-slab width: one slab's resident
+# state is at most what the fused engine keeps at its cap, so any instance
+# the fused engine could hold is one slab of the partitioned one.  The
+# default width is BALANCED below the cap (``default_slab_width``) so the
+# slab grid overhangs the padded domain by less than one lane row per slab
+# instead of up to a whole slab.
+SLAB_NPAD = SCATTER_MAX_NPAD
+
+
+def default_slab_width(n_pad: int, cap: int | None = None) -> int:
+    """Balanced column-slab width for a padded domain: the fewest slabs
+    whose width stays within the VMEM cap (:data:`SLAB_NPAD`), each width a
+    LANE multiple, so ``n_pad_part - n_pad < LANE * n_slabs`` -- the
+    per-round pad/slice of the partitioned dataflow stays negligible."""
+    cap = SLAB_NPAD if cap is None else int(cap)
+    n_slabs = max(1, -(-n_pad // cap))
+    return -(-n_pad // (n_slabs * kern.LANE)) * kern.LANE
 
 
 class LRU:
@@ -187,6 +372,40 @@ class PreparedBlockEll:
     n: int
     n_pad: int
     fits_one_chunk: bool
+    # Slab partitions derived from the (immutable) tiles, built lazily and
+    # keyed by slab width; shared by bounds-swapped views of this prep.
+    _slabs: dict = dataclasses.field(
+        default_factory=dict, compare=False, repr=False
+    )
+
+    def slab_partition(self, slab: int | None = None) -> SlabPartition:
+        """This instance's tile stream re-bucketed into ``slab``-wide column
+        windows (default: :func:`default_slab_width`, balanced below the
+        :data:`SLAB_NPAD` cap), for the ``partitioned`` engine.
+
+        Built once per slab width from the resident tiles (a host-side
+        pass over the block-ELL arrays) and cached on the prep, so rounds
+        and recompilations never pay it again."""
+        s = default_slab_width(self.n_pad) if slab is None else int(slab)
+        part = self._slabs.get(s)
+        if part is None:
+            d = self.d
+            is_int_rows = np.zeros((1, self.n_pad), dtype=bool)
+            is_int_rows[0, : self.n] = np.asarray(d.is_int)
+            part = build_slab_partition(
+                np.asarray(d.val),
+                np.asarray(d.col),
+                np.asarray(d.chunk_row),
+                np.zeros(d.val.shape[0], dtype=np.int32),
+                np.asarray(d.lhs1),
+                np.asarray(d.rhs1),
+                is_int_rows,
+                self.n_pad,
+                s,
+                np.array([self.m], dtype=np.int32),
+            )
+            self._slabs[s] = part
+        return part
 
     def pad_bound(self, arr):
         """One caller bound vector -> the column-padded ``(n_pad,)`` domain
@@ -365,6 +584,73 @@ def _combine_chunk_partials(prep: PreparedBlockEll, mf, mc, xf, xc):
     return g(mf), g(mc), g(xf), g(xc)
 
 
+def _combine_copy_partials(part: SlabPartition, num_rows: int, mf, mc, xf, xc):
+    """Per-copy activity partials -> completed aggregates gathered back per
+    copy.  Rows whose nonzeros are split across slab copies (or chunks)
+    complete here; the combine is a tiny ``(T', R)``-sized XLA segment sum,
+    the only inter-slab dataflow of a partitioned round."""
+    crow = part.chunk_row.reshape(-1)
+    seg = lambda x: jax.ops.segment_sum(x.reshape(-1), crow, num_segments=num_rows)
+    g = lambda x: seg(x)[part.chunk_row]
+    return g(mf), g(mc), g(xf), g(xc)
+
+
+def _partitioned_pallas_round(
+    part: SlabPartition, lb, ub, active, num_rows: int,
+    *, node: bool, eps: float, int_eps: float, inf: float,
+    interpret: bool | None,
+):
+    """The one slab-round dataflow every partitioned engine shares, over
+    ``(B, n_pad)`` bound planes: pad to the slab grid -> per-copy activity
+    partials -> ``(T', R)`` segment combine -> candidates + per-slab
+    scatter -> slab-gridded merge -> slice back.
+
+    ``node=True`` sweeps ONE instance's copies per node on the ``(B, T')``
+    grid (per-node bound windows, per-node partials combined under vmap);
+    otherwise copies route by their own instance id on the flat ``(T',)``
+    grid (single-instance callers pass ``B == 1``).  Returns the updated
+    ``(B, n_pad)`` planes and the ``(B,)`` changed flags."""
+    bsz, n_pad = lb.shape
+    extra = part.n_pad_part - n_pad
+    if extra:
+        z = jnp.zeros((bsz, extra), lb.dtype)
+        lbp = jnp.concatenate([lb, z], axis=1)
+        ubp = jnp.concatenate([ub, z], axis=1)
+    else:
+        lbp, ubp = lb, ub
+    if node:
+        mf, mc, xf, xc = kern.node_activities_slab_tiles(
+            part.val, part.col_s, part.tile_slab, active, lbp, ubp,
+            part.slab, inf, interpret,
+        )
+        crow = part.chunk_row.reshape(-1)
+        seg1 = lambda x: jax.ops.segment_sum(x, crow, num_segments=num_rows)
+        g = lambda x: jax.vmap(seg1)(x.reshape(bsz, -1))[:, part.chunk_row]
+        rmf, rmc, rxf, rxc = g(mf), g(mc), g(xf), g(xc)
+        best_l, best_u = kern.node_candidates_scatter_slab_tiles(
+            part.val, part.col_s, part.ii_g, rmf, rmc, rxf, rxc,
+            part.lhs_g, part.rhs_g, part.tile_slab, active, lbp, ubp,
+            part.slab, int_eps, inf, interpret,
+        )
+    else:
+        mf, mc, xf, xc = kern.batched_activities_slab_tiles(
+            part.val, part.col_s, part.tile_inst, part.tile_slab, active,
+            lbp, ubp, part.slab, inf, interpret,
+        )
+        rmf, rmc, rxf, rxc = _combine_copy_partials(part, num_rows, mf, mc, xf, xc)
+        best_l, best_u = kern.batched_candidates_scatter_slab_tiles(
+            part.val, part.col_s, part.ii_g, rmf, rmc, rxf, rxc,
+            part.lhs_g, part.rhs_g, part.tile_inst, part.tile_slab, active,
+            lbp, ubp, part.slab, int_eps, inf, interpret,
+        )
+    new_lb, new_ub, ch = kern.apply_updates_slab_tiles(
+        lbp, ubp, best_l, best_u, active, part.slab, eps, inf, interpret
+    )
+    if extra:
+        new_lb, new_ub = new_lb[:, :n_pad], new_ub[:, :n_pad]
+    return new_lb, new_ub, ch
+
+
 def _prepared_round(
     prep: PreparedBlockEll,
     lb,
@@ -377,10 +663,37 @@ def _prepared_round(
     fused: bool,
     scatter: str,
     interpret: bool | None,
+    slab: int | None = None,
 ):
     """One round over hoisted constants.  (lb, ub) live in the column-padded
     ``(n_pad,)`` domain end to end; only the bound gathers run in XLA."""
     d = prep.d
+
+    if scatter == "partitioned":
+        # Column-slab partitioned round (VMEM-exceeding n_pad): per-slab
+        # masked tile copies, two-phase (partials -> tiny XLA combine ->
+        # candidates + per-slab scatter), slab-gridded merge.  Only (1, S)
+        # windows are ever VMEM-resident; no nnz-shaped tensor touches HBM.
+        part = prep.slab_partition(slab)
+        if use_pallas:
+            new_lb, new_ub, ch = _partitioned_pallas_round(
+                part, lb[None, :], ub[None, :], jnp.ones((1,), jnp.int32),
+                prep.m + 1, node=False, eps=eps, int_eps=int_eps, inf=inf,
+                interpret=interpret,
+            )
+            return new_lb[0], new_ub[0], ch[0]
+        dt = d.val.dtype
+        extra = part.n_pad_part - prep.n_pad
+        lbp = jnp.concatenate([lb, jnp.zeros((extra,), dt)]) if extra else lb
+        ubp = jnp.concatenate([ub, jnp.zeros((extra,), dt)]) if extra else ub
+        best_l, best_u = kref.partitioned_round_ref(
+            part.val, part.col_s, part.tile_slab, part.chunk_row,
+            part.ii_g != 0, part.lhs_g, part.rhs_g, lbp, ubp,
+            prep.m + 1, part.slab, part.n_pad_part, int_eps, inf,
+        )
+        return bnd.apply_updates(
+            lb, ub, best_l[: prep.n_pad], best_u[: prep.n_pad], eps, inf
+        )
 
     if scatter == "fused":
         if fused:
@@ -489,9 +802,12 @@ def round_fn_for(
     scatter: str = "fused",
     fused: bool | None = None,
     interpret: bool | None = None,
+    slab: int | None = None,
 ):
     """A jit-able ``(lb, ub) -> (lb, ub, changed)`` round closure over a
-    prepared instance (bounds in the ``(n_pad,)`` domain)."""
+    prepared instance (bounds in the ``(n_pad,)`` domain).  ``slab``
+    overrides the partitioned engine's column-slab width (default
+    :data:`SLAB_NPAD`; ignored by the other scatter modes)."""
     scatter = _resolve_scatter(scatter, prep)
     do_fuse = prep.fits_one_chunk if fused is None else bool(fused)
     eps = cfg.eps_for(prep.d.val.dtype)
@@ -505,6 +821,7 @@ def round_fn_for(
         fused=do_fuse,
         scatter=scatter,
         interpret=interpret,
+        slab=slab,
     )
 
 
@@ -514,9 +831,14 @@ def round_fn_for(
 
 
 def _resolve_scatter(scatter: str, prep: PreparedBlockEll) -> str:
+    """The engine decision (see docs/ARCHITECTURE.md): ``auto`` keeps the
+    fully fused round while the ``(2, n_pad)`` accumulators fit the VMEM
+    budget and moves to the column-slab partitioned round beyond it, so
+    the fused ~16 B/nnz dataflow holds at every instance size; ``segment``
+    (the materializing oracle) is only ever explicit."""
     if scatter == "auto":
-        return "fused" if prep.n_pad <= SCATTER_MAX_NPAD else "segment"
-    if scatter not in ("fused", "segment"):
+        return "fused" if prep.n_pad <= SCATTER_MAX_NPAD else "partitioned"
+    if scatter not in ("fused", "segment", "partitioned"):
         raise ValueError(f"unknown scatter mode: {scatter!r}")
     return scatter
 
@@ -552,15 +874,17 @@ def propagate_block_ell(
     donate: bool | None = None,
     lb0=None,
     ub0=None,
+    slab: int | None = None,
 ) -> PropagationResult:
     """Kernel-backed propagation.
 
     ``fused='auto'`` picks the Alg.-3 fusion whenever every row fits in one
     chunk (the paper's common case).  ``scatter='auto'`` picks the fully
-    fused in-VMEM column reduction unless the padded column count exceeds
-    the accumulator budget; ``scatter='segment'`` forces the materializing
-    oracle.  ``donate=None`` donates the bound buffers wherever the backend
-    implements donation (zero-copy fixed point).
+    fused in-VMEM column reduction while the padded column count fits the
+    accumulator budget and the column-slab ``partitioned`` engine beyond it
+    (``slab`` overrides its window width); ``scatter='segment'`` forces the
+    materializing oracle.  ``donate=None`` donates the bound buffers
+    wherever the backend implements donation (zero-copy fixed point).
 
     ``lb0``/``ub0`` warm-start the fixed point from caller-supplied bounds:
     the prepared tiles, hoisted gathers AND the compiled fixed point are all
@@ -577,7 +901,8 @@ def propagate_block_ell(
     n = prep.n
 
     key = (
-        id(prep.d.val), cfg, use_pallas, do_fuse, scatter, interpret, do_donate, driver
+        id(prep.d.val), cfg, use_pallas, do_fuse, scatter, interpret, do_donate,
+        driver, slab,
     )
     anchors = (prep.d.val,)
 
@@ -593,6 +918,7 @@ def propagate_block_ell(
             fused=do_fuse,
             scatter=scatter,
             interpret=interpret,
+            slab=slab,
         )
         if driver == "host_loop":
             return jax.jit(round_fn, **donate_kw)
@@ -676,6 +1002,38 @@ class PreparedBatch:
     m_total: int
     n_pad: int
     fits_one_chunk: bool
+    # Lazy slab partitions of the packed stream, keyed by slab width.
+    _slabs: dict = dataclasses.field(
+        default_factory=dict, compare=False, repr=False
+    )
+
+    def slab_partition(self, slab: int | None = None) -> SlabPartition:
+        """The bucket's flat super-tile stream re-bucketed into per-instance
+        ``slab``-wide column windows (default :func:`default_slab_width`), copies
+        sorted ``(instance, slab, tile)``; built once per slab width from
+        the host-side packed arrays and cached on the prep."""
+        s = default_slab_width(self.n_pad) if slab is None else int(slab)
+        part = self._slabs.get(s)
+        if part is None:
+            ell = self.batch.ell
+            dt = np.dtype(self.d.val.dtype)
+            # Instance i's padding chunks target its dummy row, the last of
+            # its row range.
+            dummy_rows = (ell.row_offset[1:] - 1).astype(np.int32)
+            part = build_slab_partition(
+                np.asarray(ell.val, dtype=dt),
+                ell.col,
+                ell.chunk_row,
+                ell.tile_inst,
+                self.batch.lhs1,
+                self.batch.rhs1,
+                self.batch.is_int,
+                self.n_pad,
+                s,
+                dummy_rows,
+            )
+            self._slabs[s] = part
+        return part
 
 
 _batch_prep_cache = LRU(maxsize=16)
@@ -765,9 +1123,10 @@ def _batched_prepared_round(
     batched kernel D -- the grid walks the flat tile stream, the
     scalar-prefetched instance map routes each tile to its bound-plane and
     accumulator rows, converged instances are gated off in-kernel -- then
-    the batched merge kernel.  Buckets with rows spanning chunks use the
-    batched jnp dataflow (the multichunk kernels stay single-instance, as
-    does the ``SCATTER_MAX_NPAD`` fallback)."""
+    the batched merge kernel.  Buckets whose ``n_pad`` exceeds the VMEM
+    accumulator budget run the slab-partitioned kernels instead (copies
+    routed by ``(instance, slab)``, same gating); only buckets with rows
+    spanning chunks at small ``n_pad`` use the batched jnp dataflow."""
     d = prep.d
     if use_pallas and prep.fits_one_chunk and prep.n_pad <= SCATTER_MAX_NPAD:
         best_l, best_u = kern.batched_fused_scatter_round_tiles(
@@ -776,6 +1135,11 @@ def _batched_prepared_round(
         )
         return kern.apply_updates_batch_tiles(
             lb, ub, best_l, best_u, active, eps, inf, interpret
+        )
+    if use_pallas and prep.n_pad > SCATTER_MAX_NPAD:
+        return _partitioned_pallas_round(
+            prep.slab_partition(), lb, ub, active, prep.m_total + 1,
+            node=False, eps=eps, int_eps=int_eps, inf=inf, interpret=interpret,
         )
     return batched_reference_round(
         d.val, d.col_g, d.ii_g, d.chunk_row, d.lhs_g, d.rhs_g, lb, ub, active,
@@ -1073,9 +1437,12 @@ def _node_round(
     The Pallas path (chunk-complete rows, accumulator budget respected)
     runs the node kernel -- the grid walks ``(B, T)`` with the tile axis
     minor, converged nodes gated off in-kernel -- then the batched merge
-    kernel.  Otherwise the single-instance jnp round is vmapped over the
-    node axis (multichunk rows, ``SCATTER_MAX_NPAD`` overflow, or
-    ``use_pallas=False``), with inactive nodes' bounds frozen outside."""
+    kernel.  Nodes of a VMEM-exceeding instance (``n_pad`` beyond the
+    accumulator budget) run the slab-partitioned node kernels on a
+    ``(B, T')`` grid over the per-slab copies, same gating.  Otherwise the
+    single-instance jnp round is vmapped over the node axis (multichunk
+    rows at small ``n_pad``, or ``use_pallas=False``), with inactive
+    nodes' bounds frozen outside."""
     if use_pallas and prep.fits_one_chunk and prep.n_pad <= SCATTER_MAX_NPAD:
         d = prep.d
         best_l, best_u = kern.node_fused_scatter_round_tiles(
@@ -1084,6 +1451,11 @@ def _node_round(
         )
         return kern.apply_updates_batch_tiles(
             lb, ub, best_l, best_u, active, eps, inf, interpret
+        )
+    if use_pallas and prep.n_pad > SCATTER_MAX_NPAD:
+        return _partitioned_pallas_round(
+            prep.slab_partition(), lb, ub, active, prep.m + 1,
+            node=True, eps=eps, int_eps=int_eps, inf=inf, interpret=interpret,
         )
     single = functools.partial(
         _prepared_round,
@@ -1282,10 +1654,13 @@ def round_cost_analysis(
     """Measure ONE propagation round's memory traffic.
 
     ``scatter`` selects the dataflow being measured:
-      * ``"fused"``   -- the fully fused in-VMEM gather+round+reduction;
-      * ``"segment"`` -- candidates materialized + XLA segment reduction,
-        with hoisted constant gathers;
-      * ``"legacy"``  -- the seed round verbatim (``block_ell_round``):
+      * ``"fused"``       -- the fully fused in-VMEM gather+round+reduction;
+      * ``"partitioned"`` -- the column-slab engine (per-slab tile copies,
+        two-phase, slab-windowed scatter) that replaces ``fused`` beyond
+        the VMEM accumulator budget;
+      * ``"segment"``     -- candidates materialized + XLA segment
+        reduction, with hoisted constant gathers;
+      * ``"legacy"``      -- the seed round verbatim (``block_ell_round``):
         per-round constant gathers + materialized candidates.
 
     Returns a dict with

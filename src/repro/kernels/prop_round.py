@@ -926,6 +926,486 @@ def node_fused_scatter_round_tiles(
     )
 
 
+# ---------------------------------------------------------------------------
+# Column-slab partitioned kernels: VMEM-exceeding column spaces
+# ---------------------------------------------------------------------------
+#
+# When ``n_pad`` outgrows the VMEM accumulator budget (``SCATTER_MAX_NPAD``)
+# the resident ``(1, n_pad)`` bound/accumulator blocks of the fused kernels
+# no longer fit on chip.  The partitioned engine keeps the fused dataflow by
+# splitting the padded column space into ``slab``-wide windows and the tile
+# stream into per-slab COPIES (``ops.build_slab_partition``): a copy keeps
+# only the nonzeros whose columns fall in its slab, so its in-kernel gather
+# and scatter touch exactly one ``(1, S)`` bound window and one ``(1, S)``
+# accumulator window -- both VMEM-resident across the slab's contiguous
+# tile sweep (the same prefetch-routed residency trick as the batched
+# kernel, with (instance, slab) taking the role of the instance id).
+#
+# Because a row's nonzeros may be split across slab copies, the partitioned
+# round is ALWAYS the two-phase variant: per-copy activity partials (kernel
+# A'''), a tiny (T', R) segment combine in XLA, then candidates + per-slab
+# scatter (kernel E''').  The jnp oracle is ``ref.partitioned_round_ref``
+# over the SAME partition arrays, which the kernels match bitwise.
+
+
+def _batched_activities_slab_kernel(
+    inst_ref, slab_ref, act_ref,
+    val_ref, col_ref, lb_ref, ub_ref,
+    mf_ref, mc_ref, xf_ref, xc_ref, *, inf, block,
+):
+    """Kernel A''': per-copy activity partials over a slab-partitioned
+    (optionally batched) tile stream.
+
+    The grid walks the ``(inst, slab, tile)``-sorted copy stream; the
+    scalar-prefetched ``inst``/``slab`` maps route each copy's ``(1, S)``
+    bound window out of the ``(B, n_pad_part)`` plane.  Columns are
+    slab-LOCAL, so the in-kernel gather walks only the resident window.
+    Copies of converged instances write zero partials and skip the gather.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(act_ref[inst_ref[i]] != 0)
+    def _():
+        val = val_ref[...]
+        r, k = val.shape[-2:]
+        val = val.reshape(r, k)
+        col = col_ref[...].reshape(r, k)
+        lb_g, ub_g = _gather_bounds_tile(col, lb_ref, ub_ref, block=block)
+        rmf, rmc, rxf, rxc = tile_row_aggregates(val, lb_g, ub_g, inf)
+        mf_ref[...] = rmf.reshape(1, r)
+        mc_ref[...] = rmc.reshape(1, r)
+        xf_ref[...] = rxf.reshape(1, r)
+        xc_ref[...] = rxc.reshape(1, r)
+
+    @pl.when(act_ref[inst_ref[i]] == 0)
+    def _():
+        mf_ref[...] = jnp.zeros_like(mf_ref[...])
+        mc_ref[...] = jnp.zeros_like(mc_ref[...])
+        xf_ref[...] = jnp.zeros_like(xf_ref[...])
+        xc_ref[...] = jnp.zeros_like(xc_ref[...])
+
+
+def batched_activities_slab_tiles(
+    val,
+    col_s,
+    tile_inst,
+    tile_slab,
+    active,
+    lb,
+    ub,
+    slab: int,
+    inf: float = INF,
+    interpret: bool | None = None,
+    block: int = LANE,
+):
+    """Per-copy activity partials of a slab-partitioned stream.
+
+    ``(T', R, K)`` slab-masked tile copies (slab-local columns) + ``(B,
+    n_pad_part)`` bound planes + ``(T',)`` copy->instance / copy->slab maps
+    + ``(B,)`` active mask -> 4 x ``(T', R)`` partials.  Single-instance
+    callers pass ``B == 1`` planes with ``tile_inst == 0``.  The gathered
+    bounds never exist in HBM; each copy reads only its slab's resident
+    ``(1, S)`` window."""
+    if interpret is None:
+        interpret = _on_cpu()
+    if slab % block:
+        raise ValueError(f"slab={slab} must be a multiple of block={block}")
+    from jax.experimental.pallas import tpu as pltpu
+
+    t, r, k = val.shape
+    dtype = val.dtype
+    tile = pl.BlockSpec((1, r, k), lambda i, inst, sl, act: (i, 0, 0))
+    vec = pl.BlockSpec((1, slab), lambda i, inst, sl, act: (inst[i], sl[i]))
+    out_tile = pl.BlockSpec((1, r), lambda i, inst, sl, act: (i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(t,),
+        in_specs=[tile, tile, vec, vec],
+        out_specs=[out_tile, out_tile, out_tile, out_tile],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((t, r), dtype),
+        jax.ShapeDtypeStruct((t, r), jnp.int32),
+        jax.ShapeDtypeStruct((t, r), dtype),
+        jax.ShapeDtypeStruct((t, r), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_batched_activities_slab_kernel, inf=inf, block=block),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(
+        tile_inst.astype(jnp.int32), tile_slab.astype(jnp.int32),
+        active.astype(jnp.int32), val, col_s, lb, ub,
+    )
+
+
+def _batched_candidates_scatter_slab_kernel(
+    inst_ref, slab_ref, act_ref,
+    val_ref, col_ref, ii_ref,
+    rmf_ref, rmc_ref, rxf_ref, rxc_ref, lhs_ref, rhs_ref,
+    lb_ref, ub_ref, bl_ref, bu_ref, *, int_eps, inf, block,
+):
+    """Kernel E''': candidates from completed row aggregates + per-slab
+    column scatter over a slab-partitioned (optionally batched) stream.
+
+    Each copy's ``(1, S)`` accumulator window is routed by the prefetched
+    ``(inst, slab)`` maps and stays VMEM-resident across the window's
+    contiguous copies; it is initialized at the window's first copy and
+    flushed exactly once at the boundary.  Copies of converged instances
+    skip gather/compute/scatter, leaving identity accumulators."""
+    i = pl.program_id(0)
+    inst = inst_ref[i]
+    prev = jnp.maximum(i - 1, 0)
+    first = jnp.where(
+        i == 0,
+        True,
+        (inst_ref[prev] != inst) | (slab_ref[prev] != slab_ref[i]),
+    )
+
+    @pl.when(first)
+    def _():
+        bl_ref[...] = jnp.full_like(bl_ref[...], -inf)
+        bu_ref[...] = jnp.full_like(bu_ref[...], inf)
+
+    @pl.when(act_ref[inst] != 0)
+    def _():
+        val = val_ref[...]
+        r, k = val.shape[-2:]
+        val = val.reshape(r, k)
+        col = col_ref[...].reshape(r, k)
+        lb_g, ub_g = _gather_bounds_tile(col, lb_ref, ub_ref, block=block)
+        lcand, ucand = tile_candidates(
+            val, lb_g, ub_g, ii_ref[...].reshape(r, k) != 0,
+            rmf_ref[...].reshape(r), rmc_ref[...].reshape(r),
+            rxf_ref[...].reshape(r), rxc_ref[...].reshape(r),
+            lhs_ref[...].reshape(r), rhs_ref[...].reshape(r), int_eps, inf,
+        )
+        _scatter_tile(lcand, ucand, col, bl_ref, bu_ref, inf=inf, block=block)
+
+
+def batched_candidates_scatter_slab_tiles(
+    val,
+    col_s,
+    is_int_g,
+    row_min_fin,
+    row_min_cnt,
+    row_max_fin,
+    row_max_cnt,
+    lhs_g,
+    rhs_g,
+    tile_inst,
+    tile_slab,
+    active,
+    lb,
+    ub,
+    slab: int,
+    int_eps: float,
+    inf: float = INF,
+    interpret: bool | None = None,
+    block: int = LANE,
+):
+    """Candidates + slab-windowed column reduction over a partitioned
+    stream: ``(T', R, K)`` slab-masked copies + ``(T', R)`` completed row
+    aggregates + ``(B, n_pad_part)`` bound planes -> ``(B, n_pad_part)``
+    best_l / best_u.
+
+    Neither the gathered bounds nor the candidates ever materialize in
+    HBM; each ``(instance, slab)`` window's ``(1, S)`` accumulators flush
+    once.  Single-instance callers pass ``B == 1`` with ``tile_inst == 0``;
+    inactive instances produce identity accumulator rows."""
+    if interpret is None:
+        interpret = _on_cpu()
+    if slab % block:
+        raise ValueError(f"slab={slab} must be a multiple of block={block}")
+    from jax.experimental.pallas import tpu as pltpu
+
+    t, r, k = val.shape
+    bsz = lb.shape[0]
+    dtype = val.dtype
+    tile = pl.BlockSpec((1, r, k), lambda i, inst, sl, act: (i, 0, 0))
+    row_tile = pl.BlockSpec((1, r), lambda i, inst, sl, act: (i, 0))
+    vec = pl.BlockSpec((1, slab), lambda i, inst, sl, act: (inst[i], sl[i]))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(t,),
+        in_specs=[tile, tile, tile,
+                  row_tile, row_tile, row_tile, row_tile, row_tile, row_tile,
+                  vec, vec],
+        out_specs=[vec, vec],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, lb.shape[1]), dtype),
+        jax.ShapeDtypeStruct((bsz, lb.shape[1]), dtype),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(
+            _batched_candidates_scatter_slab_kernel,
+            int_eps=int_eps, inf=inf, block=block,
+        ),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(
+        tile_inst.astype(jnp.int32), tile_slab.astype(jnp.int32),
+        active.astype(jnp.int32),
+        val, col_s, is_int_g.astype(jnp.int32),
+        row_min_fin, row_min_cnt, row_max_fin, row_max_cnt, lhs_g, rhs_g,
+        lb, ub,
+    )
+
+
+def _node_activities_slab_kernel(
+    slab_ref, act_ref,
+    val_ref, col_ref, lb_ref, ub_ref,
+    mf_ref, mc_ref, xf_ref, xc_ref, *, inf, block,
+):
+    """Kernel A''' over a node batch: ONE instance's slab-partitioned
+    copies, swept per node on a ``(B, T')`` grid; per-node ``(1, S)`` bound
+    windows routed by the prefetched slab map.  Inactive nodes write zero
+    partials."""
+    b = pl.program_id(0)
+
+    @pl.when(act_ref[b] != 0)
+    def _():
+        val = val_ref[...]
+        r, k = val.shape[-2:]
+        val = val.reshape(r, k)
+        col = col_ref[...].reshape(r, k)
+        lb_g, ub_g = _gather_bounds_tile(col, lb_ref, ub_ref, block=block)
+        rmf, rmc, rxf, rxc = tile_row_aggregates(val, lb_g, ub_g, inf)
+        mf_ref[...] = rmf.reshape(1, 1, r)
+        mc_ref[...] = rmc.reshape(1, 1, r)
+        xf_ref[...] = rxf.reshape(1, 1, r)
+        xc_ref[...] = rxc.reshape(1, 1, r)
+
+    @pl.when(act_ref[b] == 0)
+    def _():
+        mf_ref[...] = jnp.zeros_like(mf_ref[...])
+        mc_ref[...] = jnp.zeros_like(mc_ref[...])
+        xf_ref[...] = jnp.zeros_like(xf_ref[...])
+        xc_ref[...] = jnp.zeros_like(xc_ref[...])
+
+
+def node_activities_slab_tiles(
+    val,
+    col_s,
+    tile_slab,
+    active,
+    lb,
+    ub,
+    slab: int,
+    inf: float = INF,
+    interpret: bool | None = None,
+    block: int = LANE,
+):
+    """Per-copy, per-node activity partials of ONE instance's partitioned
+    stream: ``(T', R, K)`` slab-masked copies broadcast across the node
+    axis + ``(B, n_pad_part)`` per-node bound planes -> 4 x ``(B, T', R)``
+    partials (combined outside by a per-node segment sum)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    if slab % block:
+        raise ValueError(f"slab={slab} must be a multiple of block={block}")
+    from jax.experimental.pallas import tpu as pltpu
+
+    t, r, k = val.shape
+    bsz = lb.shape[0]
+    dtype = val.dtype
+    tile = pl.BlockSpec((1, r, k), lambda b, i, sl, act: (i, 0, 0))
+    vec = pl.BlockSpec((1, slab), lambda b, i, sl, act: (b, sl[i]))
+    out_tile = pl.BlockSpec((1, 1, r), lambda b, i, sl, act: (b, i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, t),
+        in_specs=[tile, tile, vec, vec],
+        out_specs=[out_tile, out_tile, out_tile, out_tile],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, t, r), dtype),
+        jax.ShapeDtypeStruct((bsz, t, r), jnp.int32),
+        jax.ShapeDtypeStruct((bsz, t, r), dtype),
+        jax.ShapeDtypeStruct((bsz, t, r), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_node_activities_slab_kernel, inf=inf, block=block),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(
+        tile_slab.astype(jnp.int32), active.astype(jnp.int32),
+        val, col_s, lb, ub,
+    )
+
+
+def _node_candidates_scatter_slab_kernel(
+    slab_ref, act_ref,
+    val_ref, col_ref, ii_ref,
+    rmf_ref, rmc_ref, rxf_ref, rxc_ref, lhs_ref, rhs_ref,
+    lb_ref, ub_ref, bl_ref, bu_ref, *, int_eps, inf, block,
+):
+    """Kernel E''' over a node batch: per-node candidates from completed
+    aggregates + per-slab scatter on a ``(B, T')`` grid; each node's
+    ``(1, S)`` accumulator window is initialized at its slab's first copy
+    and flushed once.  Converged nodes skip compute, leaving identity."""
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    prev = jnp.maximum(i - 1, 0)
+    first = jnp.where(i == 0, True, slab_ref[prev] != slab_ref[i])
+
+    @pl.when(first)
+    def _():
+        bl_ref[...] = jnp.full_like(bl_ref[...], -inf)
+        bu_ref[...] = jnp.full_like(bu_ref[...], inf)
+
+    @pl.when(act_ref[b] != 0)
+    def _():
+        val = val_ref[...]
+        r, k = val.shape[-2:]
+        val = val.reshape(r, k)
+        col = col_ref[...].reshape(r, k)
+        lb_g, ub_g = _gather_bounds_tile(col, lb_ref, ub_ref, block=block)
+        lcand, ucand = tile_candidates(
+            val, lb_g, ub_g, ii_ref[...].reshape(r, k) != 0,
+            rmf_ref[...].reshape(r), rmc_ref[...].reshape(r),
+            rxf_ref[...].reshape(r), rxc_ref[...].reshape(r),
+            lhs_ref[...].reshape(r), rhs_ref[...].reshape(r), int_eps, inf,
+        )
+        _scatter_tile(lcand, ucand, col, bl_ref, bu_ref, inf=inf, block=block)
+
+
+def node_candidates_scatter_slab_tiles(
+    val,
+    col_s,
+    is_int_g,
+    row_min_fin,
+    row_min_cnt,
+    row_max_fin,
+    row_max_cnt,
+    lhs_g,
+    rhs_g,
+    tile_slab,
+    active,
+    lb,
+    ub,
+    slab: int,
+    int_eps: float,
+    inf: float = INF,
+    interpret: bool | None = None,
+    block: int = LANE,
+):
+    """Per-node candidates + slab-windowed column reduction: ``(T', R, K)``
+    slab-masked copies of ONE instance + ``(B, T', R)`` per-node completed
+    row aggregates + ``(B, n_pad_part)`` bound planes -> ``(B,
+    n_pad_part)`` best_l / best_u; inactive nodes produce identity rows."""
+    if interpret is None:
+        interpret = _on_cpu()
+    if slab % block:
+        raise ValueError(f"slab={slab} must be a multiple of block={block}")
+    from jax.experimental.pallas import tpu as pltpu
+
+    t, r, k = val.shape
+    bsz = lb.shape[0]
+    dtype = val.dtype
+    tile = pl.BlockSpec((1, r, k), lambda b, i, sl, act: (i, 0, 0))
+    row_tile = pl.BlockSpec((1, 1, r), lambda b, i, sl, act: (b, i, 0))
+    side_tile = pl.BlockSpec((1, r), lambda b, i, sl, act: (i, 0))
+    vec = pl.BlockSpec((1, slab), lambda b, i, sl, act: (b, sl[i]))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, t),
+        in_specs=[tile, tile, tile,
+                  row_tile, row_tile, row_tile, row_tile, side_tile, side_tile,
+                  vec, vec],
+        out_specs=[vec, vec],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, lb.shape[1]), dtype),
+        jax.ShapeDtypeStruct((bsz, lb.shape[1]), dtype),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(
+            _node_candidates_scatter_slab_kernel,
+            int_eps=int_eps, inf=inf, block=block,
+        ),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(
+        tile_slab.astype(jnp.int32), active.astype(jnp.int32),
+        val, col_s, is_int_g.astype(jnp.int32),
+        row_min_fin, row_min_cnt, row_max_fin, row_max_cnt, lhs_g, rhs_g,
+        lb, ub,
+    )
+
+
+def _apply_updates_slab_kernel(
+    lb_ref, ub_ref, bl_ref, bu_ref, act_ref, nlb_ref, nub_ref, ch_ref, *, eps, inf
+):
+    lb, ub = lb_ref[...], ub_ref[...]
+    new_lb, new_ub, changed = bnd.apply_updates(
+        lb, ub, bl_ref[...], bu_ref[...], eps, inf
+    )
+    act = act_ref[0, 0] != 0
+    nlb_ref[...] = jnp.where(act, new_lb, lb)
+    nub_ref[...] = jnp.where(act, new_ub, ub)
+    ch_ref[...] = (changed & act).astype(jnp.int32).reshape(1, 1)
+
+
+def apply_updates_slab_tiles(
+    lb,
+    ub,
+    best_l,
+    best_u,
+    active,
+    slab: int,
+    eps: float,
+    inf: float = INF,
+    interpret: bool | None = None,
+):
+    """Slab-gridded merge kernel for VMEM-exceeding column spaces:
+    ``(B, n_pad_part)`` bounds x best candidates -> updated bounds +
+    ``(B,)`` per-instance changed flags.
+
+    The grid walks ``(instance, slab)`` so only ``(1, S)`` windows are ever
+    VMEM-resident; per-window changed flags are OR-combined outside (the
+    cheap cross-slab combine).  The bound buffers are donated
+    (``input_output_aliases``); inactive instances pass through untouched.
+    Shares ``bounds.apply_updates`` semantics with every other engine."""
+    if interpret is None:
+        interpret = _on_cpu()
+    bsz, n_pad_part = lb.shape
+    if n_pad_part % slab:
+        raise ValueError(f"n_pad_part={n_pad_part} must be a multiple of slab={slab}")
+    n_slabs = n_pad_part // slab
+    dtype = lb.dtype
+    vec = pl.BlockSpec((1, slab), lambda b, s: (b, s))
+    flag_in = pl.BlockSpec((1, 1), lambda b, s: (b, 0))
+    flag_out = pl.BlockSpec((1, 1), lambda b, s: (b, s))
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, n_pad_part), dtype),
+        jax.ShapeDtypeStruct((bsz, n_pad_part), dtype),
+        jax.ShapeDtypeStruct((bsz, n_slabs), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_apply_updates_slab_kernel, eps=eps, inf=inf),
+        grid=(bsz, n_slabs),
+        in_specs=[vec, vec, vec, vec, flag_in],
+        out_specs=[vec, vec, flag_out],
+        out_shape=out_shape,
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )
+    new_lb, new_ub, changed = fn(
+        lb, ub, best_l, best_u, active.astype(jnp.int32).reshape(bsz, 1)
+    )
+    return new_lb, new_ub, jnp.any(changed != 0, axis=1)
+
+
 def _apply_updates_batch_kernel(
     lb_ref, ub_ref, bl_ref, bu_ref, act_ref, nlb_ref, nub_ref, ch_ref, *, eps, inf
 ):

@@ -268,6 +268,37 @@ def node_fused_scatter_round_ref(
     return jax.vmap(fn)(lb, ub)
 
 
+def partitioned_round_ref(
+    val, col_s, tile_slab, chunk_row, is_int_g, lhs_g, rhs_g, lb_p, ub_p,
+    num_rows: int, slab: int, n_pad_part: int, int_eps: float, inf: float = INF,
+):
+    """Slab oracle: one round over a column-slab partitioned tile stream.
+
+    Defines the exact semantics of the partitioned kernels (A'''/E''' in
+    ``prop_round.py``) at the data level: the ``(T', R, K)`` slab-masked
+    copies carry slab-LOCAL columns (``col_s``; global id ``col_s +
+    tile_slab * slab``), per-copy activity partials are segment-combined
+    over ``chunk_row`` (rows split across slabs complete here -- the
+    summation grouping the partitioned engine commits to), candidates come
+    from the completed aggregates, and the column reduction runs over
+    global padded ids.  ``lb_p``/``ub_p`` are ``(n_pad_part,)`` bounds
+    padded to the slab grid; ``num_rows`` is the combine's segment count
+    (``m + 1`` single-instance, ``m_total + 1`` batched).  Returns
+    ``(n_pad_part,)`` best_l / best_u with sentinel identities."""
+    col_g = col_s + tile_slab[:, None, None] * jnp.int32(slab)
+    lb_g = lb_p[col_g]
+    ub_g = ub_p[col_g]
+    mf, mc, xf, xc = activities_tiles_ref(val, lb_g, ub_g, inf)
+    flat = chunk_row.reshape(-1)
+    seg = lambda x: jax.ops.segment_sum(x.reshape(-1), flat, num_segments=num_rows)
+    g = lambda x: seg(x)[chunk_row]
+    lcand, ucand = candidates_tiles_ref(
+        val, lb_g, ub_g, is_int_g, g(mf), g(mc), g(xf), g(xc),
+        lhs_g, rhs_g, int_eps, inf,
+    )
+    return scatter_round_ref(lcand, ucand, col_g, n_pad_part, inf)
+
+
 def batched_candidates_scatter_round_ref(
     val, col_g, is_int_g, chunk_row, lhs_g, rhs_g, lb, ub,
     m_total: int, n_pad: int, int_eps: float, inf: float = INF,

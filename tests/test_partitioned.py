@@ -1,0 +1,325 @@
+"""Column-slab partitioned engine validation (the VMEM size cliff).
+
+Four layers:
+  * partition builder: slab masking/duplication/coverage invariants of
+    ``build_slab_partition``;
+  * kernel vs slab oracle: the partitioned Pallas round (A''' -> combine ->
+    E''' -> slab merge) is bitwise-equal to ``ref.partitioned_round_ref``
+    over the same partition arrays (interpret mode, eager);
+  * engine vs engine: partitioned fixed points agree with the segment
+    oracle engine on random instances -- single-instance, batched, and
+    node paths, including rows spanning chunks;
+  * the size cliff itself: ``scatter="auto"`` picks ``fused`` below
+    ``SCATTER_MAX_NPAD`` and ``partitioned`` above it (a real
+    ``n_pad > 2^16`` instance rides the partitioned path end to end), and
+    the partitioned round measures fewer HBM bytes than the segment round
+    on banded large-n instances.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bounds_equal, propagate_batch
+from repro.core.nodes import propagate_nodes
+from repro.data import make_banded, make_knapsack, make_mixed, make_set_cover
+from repro.kernels import (
+    SCATTER_MAX_NPAD,
+    prepare_block_ell,
+    propagate_block_ell,
+    round_cost_analysis,
+    round_fn_for,
+)
+from repro.kernels import ops as kops
+from repro.kernels import prop_round as kern
+from repro.kernels import ref as kref
+
+
+def _assert_engines_equal(a, b, exact=True):
+    assert bounds_equal(a.lb, a.ub, b.lb, b.ub)
+    assert int(a.rounds) == int(b.rounds)
+    assert bool(a.infeasible) == bool(b.infeasible)
+    if exact:
+        np.testing.assert_allclose(
+            np.asarray(a.lb), np.asarray(b.lb), rtol=1e-12, atol=1e-12
+        )
+        np.testing.assert_allclose(
+            np.asarray(a.ub), np.asarray(b.ub), rtol=1e-12, atol=1e-12
+        )
+
+
+# ---------------------------------------------------------------------------
+# Partition builder invariants
+# ---------------------------------------------------------------------------
+
+
+def test_partition_masks_and_covers():
+    p = make_mixed(m=40, n=300, seed=11)
+    prep = prepare_block_ell(p, 4, 32)
+    part = prep.slab_partition(128)
+    assert part.slab == 128
+    assert part.n_slabs == -(-prep.n_pad // 128)
+    assert part.n_pad_part == part.n_slabs * 128
+
+    val = np.asarray(part.val)
+    col = np.asarray(part.col_s)
+    # Masking preserves every nonzero exactly once across copies.
+    assert int((val != 0).sum()) == p.nnz
+    # Slab-local columns stay inside their window.
+    assert col.min() >= 0 and col[val != 0].max() < part.slab
+    # Copies are (instance, slab, tile)-sorted; every slab window covered.
+    slabs = np.asarray(part.tile_slab)
+    assert (np.diff(slabs) >= 0).all()
+    assert set(np.unique(slabs)) == set(range(part.n_slabs))
+    # Straddling tiles were duplicated (mixed instances have wide rows).
+    assert part.duplication >= 1.0
+    assert part.num_copies >= part.source_tiles
+
+
+def test_partition_is_cached_per_slab_width():
+    p = make_mixed(m=20, n=200, seed=3)
+    prep = prepare_block_ell(p, 4, 32)
+    a = prep.slab_partition(128)
+    assert prep.slab_partition(128) is a
+    b = prep.slab_partition(256)
+    assert b is not a and b.n_slabs != a.n_slabs
+    # Bounds-swapped prepare() views share the structure-derived partition.
+    view = prepare_block_ell(
+        p._replace(lb=p.lb - 1.0, ub=p.ub + 1.0), 4, 32
+    )
+    assert view.slab_partition(128) is a
+
+
+# ---------------------------------------------------------------------------
+# Kernels vs the slab oracle (bitwise, eager interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,tile", [(0, (4, 16)), (7, (2, 8)), (11, (8, 32))])
+def test_partitioned_round_matches_slab_oracle(seed, tile):
+    p = make_mixed(m=30, n=280, seed=seed)
+    prep = prepare_block_ell(p, *tile)
+    part = prep.slab_partition(128)
+    dt = prep.d.val.dtype
+    extra = part.n_pad_part - prep.n_pad
+    lbp = jnp.concatenate([prep.lb0, jnp.zeros((extra,), dt)])
+    ubp = jnp.concatenate([prep.ub0, jnp.zeros((extra,), dt)])
+
+    one = jnp.ones((1,), jnp.int32)
+    lb2, ub2 = lbp.reshape(1, -1), ubp.reshape(1, -1)
+    mf, mc, xf, xc = kern.batched_activities_slab_tiles(
+        part.val, part.col_s, part.tile_inst, part.tile_slab, one,
+        lb2, ub2, part.slab, interpret=True,
+    )
+    rmf, rmc, rxf, rxc = kops._combine_copy_partials(
+        part, prep.m + 1, mf, mc, xf, xc
+    )
+    best_l, best_u = kern.batched_candidates_scatter_slab_tiles(
+        part.val, part.col_s, part.ii_g, rmf, rmc, rxf, rxc,
+        part.lhs_g, part.rhs_g, part.tile_inst, part.tile_slab, one,
+        lb2, ub2, part.slab, int_eps=1e-6, interpret=True,
+    )
+    want_l, want_u = kref.partitioned_round_ref(
+        part.val, part.col_s, part.tile_slab, part.chunk_row,
+        part.ii_g != 0, part.lhs_g, part.rhs_g, lbp, ubp,
+        prep.m + 1, part.slab, part.n_pad_part, int_eps=1e-6,
+    )
+    np.testing.assert_array_equal(np.asarray(best_l.reshape(-1)), np.asarray(want_l))
+    np.testing.assert_array_equal(np.asarray(best_u.reshape(-1)), np.asarray(want_u))
+
+
+def test_apply_updates_slab_matches_shared_semantics(rng):
+    from repro.core import bounds as bnd
+
+    n_pad_part = 512
+    lb = jnp.asarray(rng.uniform(-5, 0, (2, n_pad_part)))
+    ub = jnp.asarray(rng.uniform(0, 5, (2, n_pad_part)))
+    best_l = jnp.asarray(rng.uniform(-6, 2, (2, n_pad_part)))
+    best_u = jnp.asarray(rng.uniform(-2, 6, (2, n_pad_part)))
+    active = jnp.asarray([True, False])
+    got = kern.apply_updates_slab_tiles(
+        lb, ub, best_l, best_u, active, slab=128, eps=1e-9, interpret=True
+    )
+    want_lb, want_ub, _ = bnd.apply_updates(lb[0], ub[0], best_l[0], best_u[0], 1e-9)
+    np.testing.assert_array_equal(np.asarray(got[0][0]), np.asarray(want_lb))
+    np.testing.assert_array_equal(np.asarray(got[0][1]), np.asarray(lb[1]))  # frozen
+    np.testing.assert_array_equal(np.asarray(got[1][1]), np.asarray(ub[1]))
+    assert bool(got[2][0]) and not bool(got[2][1])
+
+
+# ---------------------------------------------------------------------------
+# Engine vs engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_partitioned_engine_matches_segment(seed):
+    p = make_mixed(m=35, n=300, seed=seed)
+    a = propagate_block_ell(
+        p, tile_rows=4, tile_width=32, scatter="partitioned", slab=128,
+        driver="host_loop",
+    )
+    b = propagate_block_ell(
+        p, tile_rows=4, tile_width=32, scatter="segment", driver="host_loop"
+    )
+    _assert_engines_equal(a, b)
+
+
+def test_partitioned_rows_span_chunks():
+    """tile_width far below the longest row: slab copies AND chunk splits
+    both complete through the same (T', R) combine."""
+    p = make_knapsack(n=280, m=8, seed=5)
+    assert int(np.diff(p.csr.row_ptr).max()) > 8
+    a = propagate_block_ell(
+        p, tile_rows=2, tile_width=8, scatter="partitioned", slab=128,
+        driver="host_loop",
+    )
+    b = propagate_block_ell(
+        p, tile_rows=2, tile_width=8, scatter="segment", driver="host_loop"
+    )
+    _assert_engines_equal(a, b)
+
+
+def test_partitioned_device_loop_and_jnp_paths_agree():
+    p = make_set_cover(n=270, m=25, seed=6)
+    kw = dict(tile_rows=4, tile_width=32, scatter="partitioned", slab=128)
+    a = propagate_block_ell(p, driver="device_loop", **kw)
+    b = propagate_block_ell(p, driver="host_loop", use_pallas=False, **kw)
+    _assert_engines_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# The size cliff: scatter="auto" selection on both sides
+# ---------------------------------------------------------------------------
+
+
+def test_auto_selects_engine_on_both_sides_of_the_cliff():
+    small = prepare_block_ell(make_mixed(m=10, n=50, seed=0), 4, 16)
+    assert small.n_pad <= SCATTER_MAX_NPAD
+    assert kops._resolve_scatter("auto", small) == "fused"
+
+    big = make_banded(n=SCATTER_MAX_NPAD + 200, m=48, row_nnz=6, band=512, seed=0)
+    prep = prepare_block_ell(big, 8, 8)
+    assert prep.n_pad > SCATTER_MAX_NPAD
+    assert kops._resolve_scatter("auto", prep) == "partitioned"
+    with pytest.raises(ValueError):
+        kops._resolve_scatter("bogus", prep)
+
+
+def test_default_slab_width_is_balanced():
+    from repro.kernels.ops import default_slab_width
+
+    # One slab while the domain fits the cap; balanced lane-multiple slabs
+    # beyond it, overhanging n_pad by less than one lane row per slab.
+    assert default_slab_width(SCATTER_MAX_NPAD) == SCATTER_MAX_NPAD
+    n_pad = SCATTER_MAX_NPAD + 4096
+    w = default_slab_width(n_pad)
+    assert w % 128 == 0 and w <= SCATTER_MAX_NPAD
+    n_slabs = -(-n_pad // w)
+    assert n_slabs == 2
+    assert n_slabs * w - n_pad < 128 * n_slabs
+
+
+def test_fits_one_chunk_on_both_sides():
+    p = make_set_cover(n=60, m=12, seed=1)
+    wide = prepare_block_ell(p, 4, 128)
+    narrow = prepare_block_ell(p, 4, 4)
+    assert wide.fits_one_chunk and not narrow.fits_one_chunk
+    a = propagate_block_ell(p, tile_rows=4, tile_width=128, driver="host_loop")
+    b = propagate_block_ell(p, tile_rows=4, tile_width=4, driver="host_loop")
+    assert bounds_equal(a.lb, a.ub, b.lb, b.ub)
+
+
+def test_vmem_exceeding_instance_rides_partitioned_auto():
+    """The acceptance path: a real n_pad > SCATTER_MAX_NPAD instance
+    propagates under scatter='auto' (resolved to the partitioned kernels)
+    and matches the segment oracle engine exactly (integer-valued data)."""
+    p = make_banded(n=SCATTER_MAX_NPAD + 4000, m=56, row_nnz=6, band=512, seed=2)
+    prep = prepare_block_ell(p, 8, 8)
+    assert prep.n_pad > SCATTER_MAX_NPAD
+    part = prep.slab_partition()
+    assert part.n_slabs >= 2
+    auto = propagate_block_ell(
+        p, tile_rows=8, tile_width=8, scatter="auto", driver="host_loop"
+    )
+    seg = propagate_block_ell(
+        p, tile_rows=8, tile_width=8, scatter="segment", driver="host_loop"
+    )
+    _assert_engines_equal(auto, seg)
+    np.testing.assert_array_equal(np.asarray(auto.lb), np.asarray(seg.lb))
+    np.testing.assert_array_equal(np.asarray(auto.ub), np.asarray(seg.ub))
+
+
+# ---------------------------------------------------------------------------
+# Batched and node paths across the cliff (shrunken budget keeps tests fast)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def tiny_budget(monkeypatch):
+    """Shrink the VMEM budget so ordinary test instances cross the cliff
+    and ride the REAL partitioned kernels in every engine."""
+    kops.clear_prepare_cache()
+    kops.clear_batch_caches()
+    monkeypatch.setattr(kops, "SCATTER_MAX_NPAD", 128)
+    monkeypatch.setattr(kops, "SLAB_NPAD", 128)
+    yield
+    kops.clear_prepare_cache()
+    kops.clear_batch_caches()
+
+
+def test_batched_partitioned_matches_single_instance(tiny_budget):
+    problems = [make_mixed(m=25, n=260, seed=s) for s in range(3)]
+    assert all(prepare_block_ell(p).n_pad > kops.SCATTER_MAX_NPAD for p in problems)
+    batched = propagate_batch(problems)
+    for p, got in zip(problems, batched):
+        want = propagate_block_ell(p, scatter="partitioned", driver="device_loop")
+        _assert_engines_equal(got, want)
+
+
+def test_node_partitioned_matches_warm_started_singles(tiny_budget):
+    root = make_mixed(m=25, n=260, seed=4)
+    prep = prepare_block_ell(root)
+    assert prep.n_pad > kops.SCATTER_MAX_NPAD
+    lb0, ub0 = np.asarray(root.lb), np.asarray(root.ub)
+    nodes_lb = np.stack([lb0, lb0.copy(), lb0.copy()])
+    nodes_ub = np.stack([ub0, ub0.copy(), ub0.copy()])
+    free = np.flatnonzero(root.is_int & (lb0 < ub0))
+    nodes_lb[1][free[0]] = max(lb0[free[0]], 1.0)
+    nodes_ub[2][free[1]] = min(ub0[free[1]], 0.0)
+    res = propagate_nodes(root, nodes_lb, nodes_ub)
+    for i in range(3):
+        want = propagate_block_ell(
+            root, scatter="partitioned", driver="device_loop",
+            lb0=nodes_lb[i], ub0=nodes_ub[i],
+        )
+        got = res.result(i)
+        assert bounds_equal(got.lb, got.ub, want.lb, want.ub)
+        assert int(got.rounds) == int(want.rounds)
+        assert bool(got.infeasible) == bool(want.infeasible)
+
+
+# ---------------------------------------------------------------------------
+# Bytes: the partitioned round keeps the fused byte model at scale
+# ---------------------------------------------------------------------------
+
+
+def test_partitioned_bytes_well_under_segment_on_large_instances():
+    """On a VMEM-exceeding banded instance with nnz >> n the partitioned
+    round measures well under the segment round at the HBM boundary (the
+    O(n_pad) resident-vector terms amortize away as nnz grows; the bench
+    records the trajectory in BENCH_prop.json)."""
+    p = make_banded(n=SCATTER_MAX_NPAD + 4000, m=15_000, row_nnz=32, band=1024, seed=3)
+    kw = dict(tile_rows=8, tile_width=32)
+    part_b = round_cost_analysis(p, "partitioned", **kw)["bytes_accessed"]
+    seg_b = round_cost_analysis(p, "segment", **kw)["bytes_accessed"]
+    assert part_b < 0.5 * seg_b, (part_b, seg_b)
+
+
+def test_round_fn_for_accepts_partitioned():
+    p = make_mixed(m=20, n=200, seed=9)
+    prep = prepare_block_ell(p, 4, 32)
+    fn = round_fn_for(prep, scatter="partitioned", slab=128)
+    lb, ub, changed = jax.jit(fn)(prep.lb0, prep.ub0)
+    assert lb.shape == (prep.n_pad,) and ub.shape == (prep.n_pad,)
+    assert bool(changed) in (True, False)

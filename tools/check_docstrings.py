@@ -1,0 +1,59 @@
+"""Docs gate: every public symbol of ``repro.core`` / ``repro.kernels``
+must carry a real docstring.
+
+A "real" docstring excludes the auto-generated ``Name(field, ...)`` text
+NamedTuples get for free.  Module-level constants (ints, floats, tuples)
+are exempt -- they are documented where they are defined.  Run from the
+repo root:
+
+    PYTHONPATH=src python tools/check_docstrings.py
+"""
+from __future__ import annotations
+
+import inspect
+import sys
+
+
+def missing_docstrings(mod) -> "list[str]":
+    names = getattr(mod, "__all__", None) or [
+        n for n in vars(mod) if not n.startswith("_")
+    ]
+    bad = []
+    for name in names:
+        obj = getattr(mod, name, None)
+        if obj is None and name not in vars(mod):
+            bad.append(f"{mod.__name__}.{name}: exported but missing")
+            continue
+        if not (inspect.isclass(obj) or callable(obj)):
+            continue  # constants document themselves at the definition site
+        if inspect.ismodule(obj):
+            continue
+        doc = inspect.getdoc(obj)
+        if not doc or not doc.strip():
+            bad.append(f"{mod.__name__}.{name}: no docstring")
+            continue
+        # NamedTuple auto-docstring: "Name(field1, field2, ...)".
+        if inspect.isclass(obj) and doc.startswith(f"{obj.__name__}("):
+            bad.append(f"{mod.__name__}.{name}: auto-generated docstring only")
+    return bad
+
+
+def main() -> int:
+    import repro.core
+    import repro.kernels
+
+    bad = missing_docstrings(repro.core) + missing_docstrings(repro.kernels)
+    if bad:
+        print("Missing docstrings on exported symbols:")
+        for line in bad:
+            print(f"  {line}")
+        return 1
+    n = len(getattr(repro.core, "__all__", [])) + len(
+        [x for x in vars(repro.kernels) if not x.startswith("_")]
+    )
+    print(f"docstring check OK ({n} exported symbols inspected)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+"""Docs gate: every relative link / file reference in the markdown docs
+must resolve inside the repo (no network access in CI, so external http(s)
+links are not fetched -- only flagged if malformed).
+
+    python tools/check_links.py README.md docs/*.md
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_file(path: str) -> "list[str]":
+    bad = []
+    root = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for target in LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        rel, _, frag = target.partition("#")
+        if not rel:  # pure in-page anchor
+            continue
+        dest = os.path.normpath(os.path.join(root, rel))
+        if not os.path.exists(dest):
+            bad.append(f"{path}: broken link -> {target}")
+            continue
+        if frag and dest.endswith(".md"):
+            with open(dest, encoding="utf-8") as g:
+                heads = [
+                    re.sub(r"[^\w\- ]", "", h.strip("# ").strip().lower()).replace(" ", "-")
+                    for h in g.readlines()
+                    if h.startswith("#")
+                ]
+            if frag.lower() not in heads:
+                bad.append(f"{path}: broken anchor -> {target}")
+    return bad
+
+
+def main(argv: "list[str]") -> int:
+    paths = argv or ["README.md"]
+    bad = []
+    for p in paths:
+        bad += check_file(p)
+    if bad:
+        print("Broken markdown links:")
+        for line in bad:
+            print(f"  {line}")
+        return 1
+    print(f"link check OK ({len(paths)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
