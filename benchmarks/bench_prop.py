@@ -13,6 +13,12 @@ nodes/sec throughput.
 A ``partitioned`` engine row records the column-slab engine on
 VMEM-exceeding banded large-n instances (``n_pad > SCATTER_MAX_NPAD``),
 with the segment engine measured on the same instances for comparison.
+The row sweeps candidate SLAB_NPAD widths (``sweep_slab_widths``), reports
+the tuned width's round time plus a fenced per-phase breakdown
+(copy/reduce/combine/merge), and nests its population facts under
+``population`` so the row's top level holds measurements only.  ``--smoke``
+runs a scaled-down row through the same builder and asserts its schema
+merges cleanly (the CI bench-smoke job).
 
 Results are MERGED into ``BENCH_prop.json`` (engine rows are updated or
 added, unknown keys from earlier PRs are preserved) so the perf trajectory
@@ -21,18 +27,23 @@ the paired-trials methodology, and the recipe for adding an engine row.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bounds as bnd
 from repro.core.nodes import branch_children, propagate_nodes
 from repro.core.propagator import fresh_instance_runner, owned_copy, propagate
+from repro.core.types import DEFAULT_CONFIG
 from repro.data.instances import instances_for_set, make_banded, make_pseudo_boolean
 from repro.kernels import (
     SCATTER_MAX_NPAD,
+    SLAB_NPAD,
     batched_device_runner,
     legacy_round_fn_for,
     packed_problems,
@@ -41,6 +52,8 @@ from repro.kernels import (
     round_cost_analysis,
     round_fn_for,
 )
+from repro.kernels import ref as kref
+from repro.kernels.ops import default_slab_width
 
 from .common import geomean, time_fn
 
@@ -223,41 +236,276 @@ def node_throughput():
     }
 
 
-def partitioned_large_row():
-    """The ``partitioned`` engine row: round time + measured bytes/round of
-    the column-slab engine on VMEM-exceeding banded instances, with the
-    segment engine measured on the SAME instances for the comparison the
-    partitioned engine exists to win (jnp-oracle arithmetic timings, like
-    the other engine rows; bytes from ``round_cost_analysis``)."""
-    acc = {
-        "partitioned": {"round_us": [], "bytes": []},
-        "segment": {"round_us": [], "bytes": []},
+# Every key the ``partitioned`` engine row must carry (the smoke job and
+# docs/BENCHMARKS.md read this set; population facts are NESTED so the row's
+# top level holds only measurements, like every other engine row).
+PARTITIONED_ROW_KEYS = frozenset({
+    "population",
+    "geomean_round_us",
+    "geomean_bytes_per_round",
+    "segment_geomean_round_us",
+    "segment_geomean_bytes_per_round",
+    "round_us_vs_segment",
+    "bytes_vs_segment",
+    "tuned_slab_npad",
+    "slab_sweep_us",
+    "phases_us",
+})
+
+PHASE_NAMES = ("copy", "reduce", "combine", "merge")
+
+
+def _partitioned_phase_fns(prep, part):
+    """The partitioned round's four phases as separately jitted closures
+    (jnp-oracle arithmetic, matching the engine-row timings):
+
+      * ``copy``    -- pad the bound plane to the slab grid and gather every
+        main-stream and straddle-stream copy's slab-local bound windows;
+      * ``reduce``  -- per-copy activity partials over both streams;
+      * ``combine`` -- straddle-table segment sum, per-row aggregate
+        selection, and the candidate arithmetic;
+      * ``merge``   -- the column reduction (rectangle gather when
+        scheduled) and the bound merge.
+
+    Each returns concrete arrays so ``jax.block_until_ready`` fences the
+    phase boundary; feeding phase N the MATERIALIZED outputs of phase N-1
+    is exactly what the fused kernel avoids, so the per-phase sum runs
+    above the fused round time -- the breakdown is for attribution, not a
+    faster total."""
+    cfg = DEFAULT_CONFIG
+    dt = prep.d.val.dtype
+    eps = cfg.eps_for(dt)
+    int_eps, inf = cfg.int_eps, cfg.inf
+    n_pad = prep.n_pad
+    extra = part.n_pad_part - n_pad
+    has_straddle = part.has_straddle
+
+    @jax.jit
+    def copy_phase(lb, ub):
+        z = jnp.zeros((extra,), lb.dtype)
+        lbf = jnp.concatenate([lb, z])
+        ubf = jnp.concatenate([ub, z])
+        lb_g, ub_g, col_g = kref._partitioned_gathered_bounds(
+            part, lbf, ubf, part.val, part.col_s, part.tile_inst, part.tile_slab
+        )
+        if has_straddle:
+            a_lb, a_ub, _ = kref._partitioned_gathered_bounds(
+                part, lbf, ubf, part.a_val, part.a_col_s,
+                part.a_tile_inst, part.a_tile_slab,
+            )
+        else:
+            a_lb = a_ub = jnp.zeros((0,) + part.val.shape[1:], dt)
+        return lb_g, ub_g, a_lb, a_ub, col_g
+
+    @jax.jit
+    def reduce_phase(lb_g, ub_g, a_lb, a_ub):
+        main = kref.activities_tiles_ref(part.val, lb_g, ub_g, inf)
+        if has_straddle:
+            sub = kref.activities_tiles_ref(part.a_val, a_lb, a_ub, inf)
+        else:
+            sub = main
+        return main, sub
+
+    @jax.jit
+    def combine_phase(main, sub, lb_g, ub_g):
+        mf, mc, xf, xc = main
+        if has_straddle:
+            slot = part.a_slot.reshape(-1)
+            nseg = part.n_straddle + 1
+            tab = lambda x: jax.ops.segment_sum(
+                x.reshape(-1), slot, num_segments=nseg
+            )
+            done = part.row_done != 0
+            sel = lambda local, t: jnp.where(done, local, tab(t)[part.agg_slot])
+            amf, amc, axf, axc = sub
+            rmf, rmc, rxf, rxc = sel(mf, amf), sel(mc, amc), sel(xf, axf), sel(xc, axc)
+        else:
+            rmf, rmc, rxf, rxc = mf, mc, xf, xc
+        return kref.candidates_tiles_ref(
+            part.val, lb_g, ub_g, part.ii_g != 0, rmf, rmc, rxf, rxc,
+            part.lhs_g, part.rhs_g, int_eps, inf,
+        )
+
+    @jax.jit
+    def merge_phase(lcand, ucand, col_g, lb, ub):
+        if part.col_slots is not None:
+            fl = jnp.concatenate([lcand.reshape(-1), jnp.full((1,), -inf, dt)])
+            fu = jnp.concatenate([ucand.reshape(-1), jnp.full((1,), inf, dt)])
+            best_l = jnp.maximum(fl[part.col_slots].max(axis=1), -inf)
+            best_u = jnp.minimum(fu[part.col_slots].min(axis=1), inf)
+        else:
+            best_l, best_u = kref.batched_scatter_round_ref(
+                lcand, ucand, col_g, 1, part.n_pad_part, inf
+            )
+            best_l, best_u = best_l.reshape(-1), best_u.reshape(-1)
+        return bnd.apply_updates(lb, ub, best_l[:n_pad], best_u[:n_pad], eps, inf)
+
+    return copy_phase, reduce_phase, combine_phase, merge_phase
+
+
+def _partitioned_phase_times(prep, part, repeats: int = 3) -> dict:
+    """Per-phase wall times (us) of one partitioned round, each phase fed
+    the previous phase's ready outputs and fenced with
+    ``jax.block_until_ready``."""
+    copy_f, reduce_f, combine_f, merge_f = _partitioned_phase_fns(prep, part)
+    g = jax.block_until_ready
+    lb, ub = prep.lb0, prep.ub0
+    gathered = g(copy_f(lb, ub))
+    partials = g(reduce_f(*gathered[:4]))
+    cands = g(combine_f(*partials, gathered[0], gathered[1]))
+    g(merge_f(*cands, gathered[4], lb, ub))
+    return {
+        "copy": time_fn(lambda: g(copy_f(lb, ub)), repeats=repeats) * 1e6,
+        "reduce": time_fn(
+            lambda: g(reduce_f(*gathered[:4])), repeats=repeats
+        ) * 1e6,
+        "combine": time_fn(
+            lambda: g(combine_f(*partials, gathered[0], gathered[1])),
+            repeats=repeats,
+        ) * 1e6,
+        "merge": time_fn(
+            lambda: g(merge_f(*cands, gathered[4], lb, ub)), repeats=repeats
+        ) * 1e6,
     }
-    for spec in LARGE_SPECS:
-        p = make_banded(n=LARGE_N, **spec)
-        prep = prepare_block_ell(p, **LARGE_TILE)
-        assert prep.n_pad > SCATTER_MAX_NPAD
-        for engine in ("partitioned", "segment"):
-            fn = jax.jit(round_fn_for(prep, use_pallas=False, scatter=engine))
+
+
+def sweep_slab_widths(n_pad: int) -> "list[int]":
+    """The SLAB_NPAD autotune candidates for a padded domain: the balanced
+    width at the VMEM cap (the fewest slabs) plus the balanced widths at
+    one and two extra slabs -- narrower windows trade accumulator residency
+    for more straddling copies, and which side wins is an empirical
+    property of the instance family, hence the sweep."""
+    base = max(1, -(-n_pad // SLAB_NPAD))
+    widths = []
+    for ns in (base, base + 1, base + 2):
+        w = default_slab_width(n_pad, cap=-(-n_pad // ns))
+        if w not in widths:
+            widths.append(w)
+    return widths
+
+
+def partitioned_large_row(
+    specs=LARGE_SPECS,
+    n: int = LARGE_N,
+    tile: dict = LARGE_TILE,
+    widths=None,
+    repeats: int = 3,
+):
+    """The ``partitioned`` engine row: SLAB_NPAD-swept round time, per-phase
+    breakdown and measured bytes/round of the column-slab engine on banded
+    instances, with the segment engine measured on the SAME instances for
+    the comparison the partitioned engine exists to win (jnp-oracle
+    arithmetic timings, like the other engine rows; bytes from
+    ``round_cost_analysis``).  Population facts live under the nested
+    ``population`` key so the row's top level is measurements only
+    (see ``PARTITIONED_ROW_KEYS`` and docs/BENCHMARKS.md)."""
+    pairs = []
+    for spec in specs:
+        p = make_banded(n=n, **spec)
+        pairs.append((p, prepare_block_ell(p, **tile)))
+    n_pad = pairs[0][1].n_pad
+    if widths is None:
+        widths = sweep_slab_widths(n_pad)
+
+    sweep_raw = {}
+    for w in widths:
+        us = []
+        for _, prep in pairs:
+            fn = jax.jit(
+                round_fn_for(prep, use_pallas=False, scatter="partitioned", slab=w)
+            )
             lb, ub = prep.lb0, prep.ub0
             fn(lb, ub)[0].block_until_ready()  # compile outside the timer
-            t = time_fn(lambda: fn(lb, ub)[0].block_until_ready())
-            acc[engine]["round_us"].append(t * 1e6)
-            acc[engine]["bytes"].append(
-                round_cost_analysis(p, engine, **LARGE_TILE)["bytes_accessed"]
+            t = time_fn(
+                lambda: fn(lb, ub)[0].block_until_ready(), repeats=repeats
             )
+            us.append(t * 1e6)
+        sweep_raw[w] = us
+    tuned = min(sweep_raw, key=lambda w: geomean(sweep_raw[w]))
+
+    seg_us, seg_b, part_b = [], [], []
+    phase_acc = {k: [] for k in PHASE_NAMES}
+    for p, prep in pairs:
+        fn = jax.jit(round_fn_for(prep, use_pallas=False, scatter="segment"))
+        lb, ub = prep.lb0, prep.ub0
+        fn(lb, ub)[0].block_until_ready()
+        t = time_fn(lambda: fn(lb, ub)[0].block_until_ready(), repeats=repeats)
+        seg_us.append(t * 1e6)
+        seg_b.append(round_cost_analysis(p, "segment", **tile)["bytes_accessed"])
+        part_b.append(
+            round_cost_analysis(p, "partitioned", **tile)["bytes_accessed"]
+        )
+        times = _partitioned_phase_times(
+            prep, prep.slab_partition(tuned), repeats=repeats
+        )
+        for k in PHASE_NAMES:
+            phase_acc[k].append(times[k])
+
     return {
-        "set": f"banded n={LARGE_N}",
-        "instances": len(LARGE_SPECS),
-        "n_pad_over_budget": True,
-        "geomean_round_us": geomean(acc["partitioned"]["round_us"]),
-        "geomean_bytes_per_round": geomean(acc["partitioned"]["bytes"]),
-        "segment_geomean_round_us": geomean(acc["segment"]["round_us"]),
-        "segment_geomean_bytes_per_round": geomean(acc["segment"]["bytes"]),
-        "bytes_vs_segment": geomean(
-            [pb / sb for pb, sb in zip(acc["partitioned"]["bytes"], acc["segment"]["bytes"])]
+        "population": {
+            "set": f"banded n={n}",
+            "instances": len(pairs),
+            "n_pad_over_budget": bool(n_pad > SCATTER_MAX_NPAD),
+        },
+        "geomean_round_us": geomean(sweep_raw[tuned]),
+        "geomean_bytes_per_round": geomean(part_b),
+        "segment_geomean_round_us": geomean(seg_us),
+        "segment_geomean_bytes_per_round": geomean(seg_b),
+        "round_us_vs_segment": geomean(
+            [t / s for t, s in zip(sweep_raw[tuned], seg_us)]
         ),
+        "bytes_vs_segment": geomean(
+            [pb / sb for pb, sb in zip(part_b, seg_b)]
+        ),
+        "tuned_slab_npad": int(tuned),
+        "slab_sweep_us": {str(w): geomean(us) for w, us in sweep_raw.items()},
+        "phases_us": {k: geomean(v) for k, v in phase_acc.items()},
     }
+
+
+def smoke(out_path: str = OUT_PATH):
+    """CI schema smoke (``--smoke``): a scaled-down partitioned row from the
+    SAME row builder as the full run (small banded instance, explicit slab
+    widths, single repeat), schema-asserted against
+    ``PARTITIONED_ROW_KEYS`` and merged into a THROWAWAY copy of
+    ``BENCH_prop.json`` -- proving the row the next full run writes merges
+    cleanly without touching the committed trajectory."""
+    row = partitioned_large_row(
+        specs=(dict(m=400, row_nnz=8, band=256, seed=0),),
+        n=1500,
+        tile=dict(tile_rows=8, tile_width=8),
+        widths=[128, 256],
+        repeats=1,
+    )
+    missing = PARTITIONED_ROW_KEYS - set(row)
+    extra = set(row) - PARTITIONED_ROW_KEYS
+    assert not missing and not extra, (sorted(missing), sorted(extra))
+    assert set(row["phases_us"]) == set(PHASE_NAMES)
+    assert set(row["population"]) == {"set", "instances", "n_pad_over_budget"}
+    assert str(row["tuned_slab_npad"]) in row["slab_sweep_us"]
+
+    merged = _merge_report({"engines": {"partitioned": row}}, out_path)
+    assert merged["engines"]["partitioned"] == row
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            old = json.load(f)
+        lost_engines = set(old.get("engines", {})) - set(merged["engines"])
+        lost_keys = set(old) - set(merged)
+        assert not lost_engines and not lost_keys, (lost_engines, lost_keys)
+    with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as f:
+        json.dump(merged, f, indent=2)
+        tmp = f.name
+    try:
+        with open(tmp) as f:
+            back = json.load(f)
+        assert back["engines"]["partitioned"] == row
+    finally:
+        os.unlink(tmp)
+    return [
+        ("bench_prop_smoke", row["geomean_round_us"],
+         f"schema_ok tuned_slab_npad={row['tuned_slab_npad']} "
+         f"phases={','.join(PHASE_NAMES)}")
+    ]
 
 
 def _merge_report(report: dict, out_path: str) -> dict:
@@ -355,13 +603,19 @@ def run(out_path: str = OUT_PATH):
          f"speedup_vs_repack={nodes['shared_matrix_speedup']:.2f}x "
          f"nodes={nodes['nodes']}")
     )
+    phases = " ".join(
+        f"{k}={large['phases_us'][k]:.0f}us" for k in PHASE_NAMES
+    )
     rows.append(
         ("bench_prop_partitioned",
          large["geomean_round_us"],
-         f"large_set={large['set']} "
+         f"large_set={large['population']['set']} "
+         f"tuned_slab_npad={large['tuned_slab_npad']} "
+         f"round_us_vs_segment={large['round_us_vs_segment']:.2f}x "
          f"bytes_per_round={large['geomean_bytes_per_round']:.0f} "
          f"segment_bytes={large['segment_geomean_bytes_per_round']:.0f} "
-         f"bytes_vs_segment={large['bytes_vs_segment']:.2f}x")
+         f"bytes_vs_segment={large['bytes_vs_segment']:.2f}x "
+         f"phases[{phases}]")
     )
     rows.append(
         ("bench_prop_json", 0.0,
@@ -372,6 +626,14 @@ def run(out_path: str = OUT_PATH):
 
 
 if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument(
+        "--smoke",
+        action="store_true",
+        help="quick CI schema check: scaled-down partitioned row, merged "
+        "into a throwaway copy of BENCH_prop.json (nothing written)",
+    )
+    ns = parser.parse_args()
     jax.config.update("jax_enable_x64", True)  # match benchmarks.run
-    for r in run():
+    for r in (smoke() if ns.smoke else run()):
         print(",".join(map(str, r)))

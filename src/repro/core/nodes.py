@@ -113,6 +113,7 @@ def propagate_nodes(
     use_pallas: bool = True,
     interpret: bool | None = None,
     donate: bool | None = None,
+    slab: int | None = None,
 ) -> NodeBatchResult:
     """Propagate B warm-started nodes of ONE instance in one dispatch.
 
@@ -134,7 +135,7 @@ def propagate_nodes(
     prep = prepare_block_ell(p, tile_rows, tile_width, dtype)
     lb, ub, rounds, converged, infeasible = propagate_nodes_prepared(
         prep, lb_nodes, ub_nodes, cfg,
-        use_pallas=use_pallas, interpret=interpret, donate=donate,
+        use_pallas=use_pallas, interpret=interpret, donate=donate, slab=slab,
     )
     return NodeBatchResult(lb, ub, rounds, converged, infeasible)
 

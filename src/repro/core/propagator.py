@@ -284,6 +284,7 @@ def propagate_batch(
     interpret: bool | None = None,
     donate: bool | None = None,
     bounds=None,
+    slab: int | None = None,
 ):
     """Propagate a batch of instances, thousands per device dispatch.
 
@@ -313,6 +314,7 @@ def propagate_batch(
         interpret=interpret,
         donate=donate,
         bounds=bounds,
+        slab=slab,
     )
 
 

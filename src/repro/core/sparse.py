@@ -272,6 +272,32 @@ def csr_to_block_ell(csr: CSR, tile_rows: int = 8, tile_width: int = 128) -> Blo
     )
 
 
+def chunk_stream(val, col, chunk_row, tile_inst=None):
+    """Flatten a ``(T, R, K)`` block-ELL tile stream into its chunk stream.
+
+    A chunk is one sublane row of a tile: a ``K``-wide slice of exactly one
+    matrix row's nonzeros (``csr_to_block_ell`` packs each row into
+    ``ceil(len / K)`` chunks).  Returns ``(cval, ccol, crow, cinst, src)``
+    where the first four are ``(T*R, K)`` / ``(T*R,)`` views of the stream
+    (``cinst`` zeros when ``tile_inst`` is ``None``) and ``src`` flags the
+    chunks carrying at least one nonzero -- all-padding chunks, the dummy
+    fill of partially used tiles, are droppable without losing any matrix
+    entry.  The column-slab partition builder works at this granularity:
+    re-bucketing row slices instead of whole tiles keeps slab copies from
+    inheriting the unrelated rows that happen to share their tile."""
+    val = np.asarray(val)
+    t, r, k = val.shape
+    cval = val.reshape(t * r, k)
+    ccol = np.asarray(col).reshape(t * r, k)
+    crow = np.asarray(chunk_row).reshape(t * r)
+    if tile_inst is None:
+        cinst = np.zeros(t * r, dtype=np.int64)
+    else:
+        cinst = np.repeat(np.asarray(tile_inst, dtype=np.int64), r)
+    src = (cval != 0).any(axis=1)
+    return cval, ccol, crow, cinst, src
+
+
 # ---------------------------------------------------------------------------
 # Batched multi-instance packing (the serving shape)
 # ---------------------------------------------------------------------------

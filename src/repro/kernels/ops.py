@@ -20,13 +20,18 @@ Engine anatomy (see README "fused-scatter dataflow"):
   * ``scatter="partitioned"`` -- the column-slab engine for instances whose
     ``n_pad`` exceeds the VMEM accumulator budget: the padded column space
     is split into balanced slabs (``default_slab_width``, capped at
-    ``SLAB_NPAD``), the tile stream into per-slab
-    masked copies (``build_slab_partition``, cached on the prep), and the
-    round runs two-phase -- per-copy activity partials with in-window
-    gather, a tiny ``(T', R)`` XLA segment combine, candidates + per-slab
-    scatter -- so only ``(1, S)`` bound/accumulator windows are ever
-    VMEM-resident and the fused byte model holds at any instance size.
-    ``scatter="auto"`` selects it beyond ``SCATTER_MAX_NPAD``.
+    ``SLAB_NPAD``, overridable per call via ``slab=``), the CHUNK stream
+    into per-slab masked copies grouped by ``(instance, slab)`` window
+    (``build_slab_partition``, cached on the prep per width), and the round
+    is ONE fused slab-parallel kernel on a 2D ``(run, tile)`` grid --
+    gather, activities, candidates, per-slab scatter into VMEM scratch
+    accumulators AND the bound merge, with the window (slab) axis parallel.
+    Only rows whose nonzeros straddle copies detour through a tiny
+    out-of-band partials kernel + XLA segment combine first.  Only
+    ``(1, S)`` bound/accumulator windows are ever VMEM-resident, no partial
+    bound plane round-trips through HBM, and the fused byte model holds at
+    any instance size.  ``scatter="auto"`` selects it beyond
+    ``SCATTER_MAX_NPAD`` (override: ``REPRO_AUTO_LARGE_SCATTER=segment``).
   * ``scatter="segment"`` -- the materializing oracle: XLA bound gathers,
     candidates written to HBM, column reduction via XLA segment ops (the
     seed dataflow, kept for cross-validation).
@@ -51,6 +56,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from collections import OrderedDict
 from typing import NamedTuple
 
@@ -69,6 +75,7 @@ from ..core.sparse import (
     BlockEll,
     Problem,
     ProblemBatch,
+    chunk_stream,
     csr_to_block_ell,
     pack_problems,
 )
@@ -124,41 +131,211 @@ def rows_fit_one_chunk(p: Problem, tile_width: int) -> bool:
 
 
 class SlabPartition(NamedTuple):
-    """A block-ELL tile stream re-bucketed by column slabs (device-ready).
+    """A block-ELL stream re-bucketed by column slabs at CHUNK granularity,
+    carrying everything the slab-parallel fused round consumes.
 
     The padded column space is split into ``n_slabs`` windows of ``slab``
-    columns; each source tile becomes one COPY per slab it touches, keeping
-    only the nonzeros whose columns fall in that slab (``val == 0``
-    elsewhere, exactly the block-ELL padding convention).  Copies are
-    sorted by ``(instance, slab, source tile)`` so each ``(instance,
-    slab)`` window's bound/accumulator blocks stay VMEM-resident across
-    its contiguous copies in the partitioned kernels; every window is
-    covered (synthetic all-padding copies fill empty ones) so accumulators
-    are always initialized.  Built once per prepared instance/bucket by
+    columns.  The source tiles are flattened to chunks (one matrix-row
+    slice each, see ``core.sparse.chunk_stream``); each chunk becomes one
+    COPY per slab its nonzeros touch, keeping only the in-slab nonzeros
+    (``val == 0`` elsewhere, the block-ELL padding convention) with
+    slab-LOCAL columns.  Chunk granularity is what keeps the duplication
+    near 1: a whole-tile copy would inherit the unrelated rows sharing the
+    tile, duplicating nearly every tile once per slab on column-scattered
+    instances.
+
+    The MAIN stream packs every copy into ``(T'', R, K)`` tiles grouped by
+    ``(instance, slab)`` window, each group padded to whole tiles with
+    dummy-row chunks.  ``run_*`` describe the groups: run ``r`` covers
+    copies ``run_start[r] : run_start[r] + run_len[r]`` of window
+    ``(run_inst[r], run_slab[r])`` -- the scalar-prefetch map that routes
+    the 2D ``(run, tile)`` grid of the slab-parallel round kernel.  Every
+    window has exactly one run (empty windows get one all-padding tile),
+    so per-window outputs are always written.
+
+    A row whose nonzeros are split across copies (several slabs and/or
+    several chunks) is a STRADDLE row; its activity aggregate cannot
+    complete inside any one copy.  The sub-stream ``a_*`` repacks exactly
+    those rows' copies; the engine computes per-copy partials over it,
+    segment-sums them into a table of ``n_straddle`` completed aggregates
+    (slot 0 is a dummy), and the round kernel selects per main-stream row
+    between its local aggregate (``row_done == 1``) and the table value
+    gathered at ``agg_slot``.  Complete rows -- the vast majority --
+    never leave the kernel.
+
+    ``col_slots`` is the build-time rectangle-gather schedule of the jnp
+    oracle's column reduction: row ``c`` lists the flat main-stream
+    candidate slots of column ``c`` (sentinel ``T''*R*K`` elsewhere), so
+    the best-bound reduction is one gather + row-wise max/min instead of a
+    segment op over the copy stream.  ``None`` when the rectangle would be
+    too large (see ``RECT_SLOTS_MAX_RATIO``).
+
+    Built once per prepared instance/bucket and slab width by
     :func:`build_slab_partition` and cached (see
     ``PreparedBlockEll.slab_partition``)."""
 
-    val: jnp.ndarray        # (T', R, K) slab-masked copies; 0 == padding
-    col_s: jnp.ndarray      # (T', R, K) int32 slab-LOCAL columns
-    chunk_row: jnp.ndarray  # (T', R) int32 rows (global ids in batched use)
-    tile_inst: jnp.ndarray  # (T',) int32 instance of each copy (0 if single)
-    tile_slab: jnp.ndarray  # (T',) int32 slab of each copy
-    ii_g: jnp.ndarray       # (T', R, K) int32 is_int at each kept nonzero
-    lhs_g: jnp.ndarray      # (T', R) sides gathered per chunk
-    rhs_g: jnp.ndarray      # (T', R)
+    # Main stream: every chunk copy, (instance, slab)-grouped and padded.
+    val: jnp.ndarray        # (T'', R, K) slab-masked copies; 0 == padding
+    col_s: jnp.ndarray      # (T'', R, K) int32 slab-LOCAL columns
+    chunk_row: jnp.ndarray  # (T'', R) int32 rows (global ids in batched use)
+    tile_inst: jnp.ndarray  # (T'',) int32 instance of each copy tile
+    tile_slab: jnp.ndarray  # (T'',) int32 slab of each copy tile
+    ii_g: jnp.ndarray       # (T'', R, K) int32 is_int at each kept nonzero
+    lhs_g: jnp.ndarray      # (T'', R) sides gathered per chunk row
+    rhs_g: jnp.ndarray      # (T'', R)
+    row_done: jnp.ndarray   # (T'', R) int32: 1 iff copy holds its whole row
+    agg_slot: jnp.ndarray   # (T'', R) int32 straddle-table slot (0 = dummy)
+    run_start: jnp.ndarray  # (B*n_slabs,) int32 first copy tile of each run
+    run_len: jnp.ndarray    # (B*n_slabs,) int32 copy tiles per run (>= 1)
+    run_inst: jnp.ndarray   # (B*n_slabs,) int32 window instance per run
+    run_slab: jnp.ndarray   # (B*n_slabs,) int32 window slab per run
+    # Straddle sub-stream: the copies of split rows, packed the same way
+    # (phase-A partials only; empty when nothing straddles).
+    a_val: jnp.ndarray        # (Ta, R, K)
+    a_col_s: jnp.ndarray      # (Ta, R, K) int32 slab-local
+    a_slot: jnp.ndarray       # (Ta, R) int32 straddle-table slot (0 = dummy)
+    a_tile_inst: jnp.ndarray  # (Ta,) int32
+    a_tile_slab: jnp.ndarray  # (Ta,) int32
+    a_run_start: jnp.ndarray  # (n_aruns,) int32
+    a_run_len: jnp.ndarray    # (n_aruns,) int32
+    a_run_inst: jnp.ndarray   # (n_aruns,) int32
+    a_run_slab: jnp.ndarray   # (n_aruns,) int32
+    # Rectangle-gather schedule of the oracle reduction (or None).
+    col_slots: jnp.ndarray | None  # (B*n_pad_part, C) int32
+    # Static layout facts.
     slab: int               # S: columns per slab (multiple of LANE)
     n_slabs: int            # windows per instance
     n_pad_part: int         # n_slabs * slab >= n_pad
+    batch: int              # B: instances sharing the stream (1 if single)
+    n_straddle: int         # straddle rows (table has n_straddle + 1 slots)
+    max_run_len: int        # max(run_len) -- the round grid's minor extent
+    a_max_run_len: int      # max(a_run_len), 0 when no straddle copies
     source_tiles: int       # T of the unpartitioned stream
+    source_chunks: int      # nonzero-carrying chunks of the source stream
+    num_chunk_copies: int   # chunk copies before window padding
 
     @property
     def num_copies(self) -> int:
+        """Main-stream copy tiles (T'')."""
         return int(self.val.shape[0])
 
     @property
+    def has_straddle(self) -> bool:
+        """True iff any row's nonzeros are split across copies."""
+        return int(self.a_val.shape[0]) > 0
+
+    @property
     def duplication(self) -> float:
-        """Copy blowup vs the source stream (1.0 == no tile straddles)."""
-        return self.num_copies / max(1, self.source_tiles)
+        """Chunk-copy blowup vs the source chunks (1.0 == no straddling)."""
+        return self.num_chunk_copies / max(1, self.source_chunks)
+
+
+# Size guard for the oracle's rectangle-gather reduction schedule: the
+# (B*n_pad_part, C) slot matrix may use at most this many int32 entries per
+# candidate-stream element before the builder falls back to segment ops.
+RECT_SLOTS_MAX_RATIO = 8
+
+
+def _pack_copy_windows(
+    sel, cp_inst, cp_slab, cp_val, cp_col, cp_ii, cp_row, cp_done, cp_slot,
+    bsz, n_slabs, r, k, dummy_rows, cover,
+):
+    """Pack the selected chunk copies into per-``(instance, slab)`` window
+    groups of whole ``(R, K)`` tiles, plus the run maps describing each
+    group.  ``cover=True`` materializes one all-padding tile for windows
+    with no copies (the main stream: every window's outputs must be
+    written); ``cover=False`` keeps only populated windows (the straddle
+    sub-stream).  Window-padding rows are dummy-row chunks: ``val == 0``
+    everywhere, ``done = 1``, ``slot = 0``."""
+    idx = np.flatnonzero(sel)
+    inst_g = cp_inst[idx]
+    slab_g = cp_slab[idx]
+    order = np.lexsort((idx, slab_g, inst_g))  # stable: stream order in-window
+    idx, inst_g, slab_g = idx[order], inst_g[order], slab_g[order]
+    win = inst_g * n_slabs + slab_g
+
+    if cover:
+        win_ids = np.arange(bsz * n_slabs, dtype=np.int64)
+        counts = np.bincount(win, minlength=bsz * n_slabs)
+        rows_per_win = np.maximum(-(-counts // r), 1) * r
+    else:
+        win_ids, counts = np.unique(win, return_counts=True)
+        rows_per_win = -(-counts // r) * r
+    n_runs = int(win_ids.size)
+    offs = np.zeros(n_runs + 1, dtype=np.int64)
+    np.cumsum(rows_per_win, out=offs[1:])
+    total_rows = int(offs[-1])
+    n_tiles = total_rows // r
+
+    if idx.size:
+        uw, uc = np.unique(win, return_counts=True)
+        starts = np.concatenate([[0], np.cumsum(uc)[:-1]])
+        rank = np.arange(win.size) - np.repeat(starts, uc)
+        pos = win if cover else np.searchsorted(win_ids, win)
+        dst = offs[pos] + rank
+    else:
+        dst = np.zeros(0, dtype=np.int64)
+
+    row_win = np.repeat(win_ids, rows_per_win)
+    w_inst = (row_win // n_slabs).astype(np.int64)
+    p_val = np.zeros((total_rows, k), cp_val.dtype)
+    p_col = np.zeros((total_rows, k), np.int32)
+    p_ii = np.zeros((total_rows, k), bool)
+    p_row = dummy_rows[w_inst].astype(np.int32)
+    p_done = np.ones(total_rows, dtype=np.int32)
+    p_slot = np.zeros(total_rows, dtype=np.int64)
+    p_val[dst] = cp_val[idx]
+    p_col[dst] = cp_col[idx]
+    p_ii[dst] = cp_ii[idx]
+    p_row[dst] = cp_row[idx]
+    p_done[dst] = cp_done[idx]
+    p_slot[dst] = cp_slot[idx]
+
+    run_len = (rows_per_win // r).astype(np.int32)
+    run_start = (offs[:-1] // r).astype(np.int32)
+    run_inst = (win_ids // n_slabs).astype(np.int32)
+    run_slab = (win_ids % n_slabs).astype(np.int32)
+    tiles = {
+        "val": p_val.reshape(n_tiles, r, k),
+        "col": p_col.reshape(n_tiles, r, k),
+        "ii": p_ii.reshape(n_tiles, r, k),
+        "row": p_row.reshape(n_tiles, r),
+        "done": p_done.reshape(n_tiles, r),
+        "slot": p_slot.reshape(n_tiles, r).astype(np.int32),
+        "tile_inst": np.repeat(run_inst, run_len),
+        "tile_slab": np.repeat(run_slab, run_len),
+    }
+    return tiles, run_start, run_len, run_inst, run_slab
+
+
+def _rect_gather_schedule(m_val, m_col, tile_inst, tile_slab, slab, bsz, n_pad_part):
+    """Build-time per-column slot matrix for the oracle's best-bound
+    reduction: row ``c`` holds the flat candidate-stream indices of column
+    ``c``'s nonzeros, padded with the sentinel index ``stream_len`` (the
+    oracle appends one sentinel candidate there).  Returns ``None`` when
+    the rectangle would exceed ``RECT_SLOTS_MAX_RATIO`` int32 entries per
+    stream element -- pathological column skew -- and the oracle falls
+    back to segment ops."""
+    n_tiles, r, k = m_val.shape
+    stream_len = n_tiles * r * k
+    gbase = tile_inst.astype(np.int64) * n_pad_part + tile_slab.astype(np.int64) * slab
+    gcol = gbase[:, None, None] + m_col
+    flat_nz = (m_val != 0).reshape(-1)
+    cols_nz = gcol.reshape(-1)[flat_nz]
+    slots_nz = np.flatnonzero(flat_nz)
+    counts = np.bincount(cols_nz, minlength=bsz * n_pad_part)
+    width = max(1, int(counts.max(initial=0)))
+    if bsz * n_pad_part * width > RECT_SLOTS_MAX_RATIO * max(1, stream_len):
+        return None
+    rect = np.full((bsz * n_pad_part, width), stream_len, dtype=np.int64)
+    if cols_nz.size:
+        order = np.argsort(cols_nz, kind="stable")
+        cs, ss = cols_nz[order], slots_nz[order]
+        uc, cnt = np.unique(cs, return_counts=True)
+        starts = np.concatenate([[0], np.cumsum(cnt)[:-1]])
+        rank = np.arange(cs.size) - np.repeat(starts, cnt)
+        rect[cs, rank] = ss
+    return rect.astype(np.int32)
 
 
 def build_slab_partition(
@@ -173,27 +350,27 @@ def build_slab_partition(
     slab: int,
     dummy_rows: np.ndarray,
 ) -> SlabPartition:
-    """Host-side slab bucketing of a (possibly batched) block-ELL stream.
+    """Host-side slab bucketing of a (possibly batched) block-ELL stream
+    at chunk granularity (see :class:`SlabPartition` for the layout).
 
     ``val``/``col`` are ``(T, R, K)`` tiles with instance-local columns;
-    ``chunk_row`` carries the row ids the activity combine segments over
-    (global across instances in batched use); ``lhs1``/``rhs1`` are the
-    side vectors those ids index; ``is_int_rows`` is the ``(B, n_pad)``
-    integrality plane and ``dummy_rows`` each instance's padding row.
+    ``chunk_row`` carries the row ids (global across instances in batched
+    use); ``lhs1``/``rhs1`` are the side vectors those ids index;
+    ``is_int_rows`` is the ``(B, n_pad)`` integrality plane and
+    ``dummy_rows`` each instance's padding row.
 
-    Tiles whose nonzero columns span several slabs are duplicated once per
-    touched slab with the out-of-slab nonzeros masked to padding -- rare
-    when columns are locally clustered, and bounded by ``n_slabs`` copies
-    in the worst case (``SlabPartition.duplication`` reports the measured
-    blowup).  Synthetic all-padding copies cover ``(instance, slab)``
-    windows that no tile touches, so every accumulator window is visited
-    and initialized."""
+    Each nonzero-carrying chunk becomes one copy per slab its columns
+    touch, so every matrix nonzero lands in exactly one copy.  Rows whose
+    nonzeros split across copies are diverted to the straddle sub-stream
+    for the out-of-kernel aggregate combine; everything else completes
+    in-kernel.  ``SlabPartition.duplication`` reports the chunk-copy
+    blowup (near 1 unless single rows genuinely span many slabs)."""
     val = np.asarray(val)
     col = np.asarray(col)
     chunk_row = np.asarray(chunk_row)
     tile_inst = np.asarray(tile_inst, dtype=np.int64)
     is_int_rows = np.asarray(is_int_rows)
-    dummy_rows = np.asarray(dummy_rows, dtype=np.int32)
+    dummy_rows = np.asarray(dummy_rows, dtype=np.int64)
     t, r, k = val.shape
     dt = val.dtype
     if slab % kern.LANE:
@@ -202,49 +379,53 @@ def build_slab_partition(
     n_pad_part = n_slabs * slab
     bsz = int(dummy_rows.shape[0])
 
-    nz = val != 0
-    slab_of = np.where(nz, col // slab, 0)
-    touched = np.zeros((t, n_slabs), dtype=bool)
-    t_idx = np.broadcast_to(np.arange(t)[:, None, None], val.shape)
-    touched[t_idx[nz], slab_of[nz]] = True
-    # All-padding source tiles ride slab 0 so T' >= T and no tile vanishes.
-    touched[~touched.any(axis=1), 0] = True
+    cval, ccol, crow, cinst, src = chunk_stream(val, col, chunk_row, tile_inst)
+    nc = t * r
+    nz = cval != 0
 
-    t_ids, s_ids = np.nonzero(touched)  # tile-major copy list
-    inst_ids = tile_inst[t_ids]
+    # Copy list: one (chunk, slab) pair per touched slab, chunk-major.
+    slab_of = np.where(nz, ccol // slab, 0)
+    touched = np.zeros((nc, n_slabs), dtype=bool)
+    c_idx = np.broadcast_to(np.arange(nc)[:, None], (nc, k))
+    touched[c_idx[nz], slab_of[nz]] = True
+    ch_ids, s_ids = np.nonzero(touched)
+    cp_inst = cinst[ch_ids]
 
-    pv = val[t_ids]
-    pc = col[t_ids]
-    keep = (pv != 0) & ((pc // slab) == s_ids[:, None, None])
-    pval = np.where(keep, pv, 0).astype(dt)
-    pcol = np.where(keep, pc - s_ids[:, None, None] * slab, 0).astype(np.int32)
-    pii = np.where(keep, is_int_rows[inst_ids[:, None, None], pc], False)
-    pchunk = chunk_row[t_ids].astype(np.int32)
+    keep = nz[ch_ids] & (slab_of[ch_ids] == s_ids[:, None])
+    cp_nnz = keep.sum(axis=1)
 
-    # Synthetic all-padding copies for uncovered (instance, slab) windows:
-    # their chunks target the instance's dummy row, their candidates are
-    # sentinels, so they only initialize the window's accumulators.
-    cover = np.zeros((bsz, n_slabs), dtype=bool)
-    cover[inst_ids, s_ids] = True
-    miss_i, miss_s = np.nonzero(~cover)
-    if miss_i.size:
-        c = miss_i.size
-        pval = np.concatenate([pval, np.zeros((c, r, k), dt)])
-        pcol = np.concatenate([pcol, np.zeros((c, r, k), np.int32)])
-        pii = np.concatenate([pii, np.zeros((c, r, k), bool)])
-        pchunk = np.concatenate(
-            [pchunk, np.broadcast_to(dummy_rows[miss_i][:, None], (c, r)).astype(np.int32)]
-        )
-        inst_ids = np.concatenate([inst_ids, miss_i])
-        s_ids = np.concatenate([s_ids, miss_s])
-        t_ids = np.concatenate([t_ids, np.full(c, t, dtype=t_ids.dtype)])
+    # Straddle detection: a copy is complete iff it holds ALL of its row's
+    # nonzeros; rows with any incomplete copy get a table slot (>= 1).
+    n_rows_all = int(np.asarray(lhs1).shape[0])
+    row_nnz = np.zeros(n_rows_all, dtype=np.int64)
+    np.add.at(row_nnz, crow, nz.sum(axis=1))
+    cp_row = crow[ch_ids].astype(np.int64)
+    complete = cp_nnz == row_nnz[cp_row]
+    srows = np.unique(cp_row[~complete])
+    n_straddle = int(srows.size)
+    slot_of_row = np.zeros(n_rows_all, dtype=np.int64)
+    slot_of_row[srows] = 1 + np.arange(n_straddle)
 
-    # (instance, slab, source-tile) order: each (instance, slab) window is
-    # one contiguous run, tiles in stream order within it.
-    order = np.lexsort((t_ids, s_ids, inst_ids))
-    pval, pcol, pii = pval[order], pcol[order], pii[order]
-    pchunk = pchunk[order]
-    inst_ids, s_ids = inst_ids[order], s_ids[order]
+    cp_val = np.where(keep, cval[ch_ids], 0).astype(dt)
+    cp_col = np.where(keep, ccol[ch_ids] - s_ids[:, None] * slab, 0).astype(np.int32)
+    cp_ii = np.where(keep, is_int_rows[cp_inst[:, None], ccol[ch_ids]], False)
+    cp_slot = slot_of_row[cp_row]
+
+    main, run_start, run_len, run_inst, run_slab = _pack_copy_windows(
+        np.ones(ch_ids.size, dtype=bool), cp_inst, s_ids,
+        cp_val, cp_col, cp_ii, cp_row, complete, cp_slot,
+        bsz, n_slabs, r, k, dummy_rows, cover=True,
+    )
+    sub, a_run_start, a_run_len, a_run_inst, a_run_slab = _pack_copy_windows(
+        ~complete, cp_inst, s_ids,
+        cp_val, cp_col, cp_ii, cp_row, complete, cp_slot,
+        bsz, n_slabs, r, k, dummy_rows, cover=False,
+    )
+
+    col_slots = _rect_gather_schedule(
+        main["val"], main["col"], main["tile_inst"], main["tile_slab"],
+        slab, bsz, n_pad_part,
+    )
 
     lhs1 = np.asarray(lhs1, dtype=dt)
     rhs1 = np.asarray(rhs1, dtype=dt)
@@ -253,18 +434,40 @@ def build_slab_partition(
     # instead of leaking trace-scoped tracers into the prep cache.
     with jax.ensure_compile_time_eval():
         return SlabPartition(
-            val=jnp.asarray(pval),
-            col_s=jnp.asarray(pcol),
-            chunk_row=jnp.asarray(pchunk),
-            tile_inst=jnp.asarray(inst_ids.astype(np.int32)),
-            tile_slab=jnp.asarray(s_ids.astype(np.int32)),
-            ii_g=jnp.asarray(pii.astype(np.int32)),
-            lhs_g=jnp.asarray(lhs1[pchunk]),
-            rhs_g=jnp.asarray(rhs1[pchunk]),
+            val=jnp.asarray(main["val"]),
+            col_s=jnp.asarray(main["col"]),
+            chunk_row=jnp.asarray(main["row"]),
+            tile_inst=jnp.asarray(main["tile_inst"].astype(np.int32)),
+            tile_slab=jnp.asarray(main["tile_slab"].astype(np.int32)),
+            ii_g=jnp.asarray(main["ii"].astype(np.int32)),
+            lhs_g=jnp.asarray(lhs1[main["row"]]),
+            rhs_g=jnp.asarray(rhs1[main["row"]]),
+            row_done=jnp.asarray(main["done"]),
+            agg_slot=jnp.asarray(main["slot"]),
+            run_start=jnp.asarray(run_start),
+            run_len=jnp.asarray(run_len),
+            run_inst=jnp.asarray(run_inst),
+            run_slab=jnp.asarray(run_slab),
+            a_val=jnp.asarray(sub["val"]),
+            a_col_s=jnp.asarray(sub["col"]),
+            a_slot=jnp.asarray(sub["slot"]),
+            a_tile_inst=jnp.asarray(sub["tile_inst"].astype(np.int32)),
+            a_tile_slab=jnp.asarray(sub["tile_slab"].astype(np.int32)),
+            a_run_start=jnp.asarray(a_run_start),
+            a_run_len=jnp.asarray(a_run_len),
+            a_run_inst=jnp.asarray(a_run_inst),
+            a_run_slab=jnp.asarray(a_run_slab),
+            col_slots=None if col_slots is None else jnp.asarray(col_slots),
             slab=int(slab),
             n_slabs=int(n_slabs),
             n_pad_part=int(n_pad_part),
+            batch=bsz,
+            n_straddle=n_straddle,
+            max_run_len=int(run_len.max(initial=1)),
+            a_max_run_len=int(a_run_len.max(initial=0)),
             source_tiles=t,
+            source_chunks=int(src.sum()),
+            num_chunk_copies=int(ch_ids.size),
         )
 
 
@@ -584,31 +787,54 @@ def _combine_chunk_partials(prep: PreparedBlockEll, mf, mc, xf, xc):
     return g(mf), g(mc), g(xf), g(xc)
 
 
-def _combine_copy_partials(part: SlabPartition, num_rows: int, mf, mc, xf, xc):
-    """Per-copy activity partials -> completed aggregates gathered back per
-    copy.  Rows whose nonzeros are split across slab copies (or chunks)
-    complete here; the combine is a tiny ``(T', R)``-sized XLA segment sum,
-    the only inter-slab dataflow of a partitioned round."""
-    crow = part.chunk_row.reshape(-1)
-    seg = lambda x: jax.ops.segment_sum(x.reshape(-1), crow, num_segments=num_rows)
-    g = lambda x: seg(x)[part.chunk_row]
+def _straddle_aggregates(part: SlabPartition, lb, ub, active, *, node, inf, interpret):
+    """Completed activity aggregates of the straddle rows, as a
+    ``(n_straddle + 1,)`` table per aggregate kind (slot 0 is the dummy the
+    main stream's complete rows point at) -- ``(B, n_straddle + 1)`` under
+    ``node=True``.
+
+    Phase A of a partitioned round: the straddle sub-stream's copies
+    produce per-copy partials in a slab-parallel kernel, and a tiny XLA
+    segment sum over ``a_slot`` completes them.  Everything row-sized here
+    is ``O(straddle copies)``, not ``O(nnz)``; with no straddle rows the
+    engine skips this entirely."""
+    nseg = part.n_straddle + 1
+    if node:
+        mf, mc, xf, xc = kern.node_slab_partials_tiles(
+            part.a_val, part.a_col_s, part.a_run_start, part.a_run_len,
+            part.a_run_slab, active, lb, ub, part.slab, part.a_max_run_len,
+            inf, interpret,
+        )
+        slot = part.a_slot.reshape(-1)
+        seg1 = lambda x: jax.ops.segment_sum(x, slot, num_segments=nseg)
+        g = lambda x: jax.vmap(seg1)(x.reshape(x.shape[0], -1))
+    else:
+        mf, mc, xf, xc = kern.batched_slab_partials_tiles(
+            part.a_val, part.a_col_s, part.a_run_start, part.a_run_len,
+            part.a_run_inst, part.a_run_slab, active, lb, ub, part.slab,
+            part.a_max_run_len, inf, interpret,
+        )
+        slot = part.a_slot.reshape(-1)
+        g = lambda x: jax.ops.segment_sum(x.reshape(-1), slot, num_segments=nseg)
     return g(mf), g(mc), g(xf), g(xc)
 
 
 def _partitioned_pallas_round(
-    part: SlabPartition, lb, ub, active, num_rows: int,
+    part: SlabPartition, lb, ub, active,
     *, node: bool, eps: float, int_eps: float, inf: float,
     interpret: bool | None,
 ):
     """The one slab-round dataflow every partitioned engine shares, over
-    ``(B, n_pad)`` bound planes: pad to the slab grid -> per-copy activity
-    partials -> ``(T', R)`` segment combine -> candidates + per-slab
-    scatter -> slab-gridded merge -> slice back.
+    ``(B, n_pad)`` bound planes: pad to the slab grid -> straddle-row
+    aggregate tables (phase A, skipped when nothing straddles) -> ONE fused
+    slab-parallel kernel per plane set (activities, candidates, per-slab
+    scatter into VMEM accumulators, AND the bound merge, on the 2D
+    ``(run, tile)`` grid) -> slice back.
 
-    ``node=True`` sweeps ONE instance's copies per node on the ``(B, T')``
-    grid (per-node bound windows, per-node partials combined under vmap);
-    otherwise copies route by their own instance id on the flat ``(T',)``
-    grid (single-instance callers pass ``B == 1``).  Returns the updated
+    ``node=True`` runs every node's plane against the shared copies on a
+    ``(B, run, tile)`` grid (per-node straddle tables, per-node windows);
+    otherwise copies route to their own instance's plane rows via the run
+    maps (single-instance callers pass ``B == 1``).  Returns the updated
     ``(B, n_pad)`` planes and the ``(B,)`` changed flags."""
     bsz, n_pad = lb.shape
     extra = part.n_pad_part - n_pad
@@ -618,37 +844,36 @@ def _partitioned_pallas_round(
         ubp = jnp.concatenate([ub, z], axis=1)
     else:
         lbp, ubp = lb, ub
-    if node:
-        mf, mc, xf, xc = kern.node_activities_slab_tiles(
-            part.val, part.col_s, part.tile_slab, active, lbp, ubp,
-            part.slab, inf, interpret,
+    if part.has_straddle:
+        smf, smc, sxf, sxc = _straddle_aggregates(
+            part, lbp, ubp, active, node=node, inf=inf, interpret=interpret
         )
-        crow = part.chunk_row.reshape(-1)
-        seg1 = lambda x: jax.ops.segment_sum(x, crow, num_segments=num_rows)
-        g = lambda x: jax.vmap(seg1)(x.reshape(bsz, -1))[:, part.chunk_row]
-        rmf, rmc, rxf, rxc = g(mf), g(mc), g(xf), g(xc)
-        best_l, best_u = kern.node_candidates_scatter_slab_tiles(
-            part.val, part.col_s, part.ii_g, rmf, rmc, rxf, rxc,
-            part.lhs_g, part.rhs_g, part.tile_slab, active, lbp, ubp,
-            part.slab, int_eps, inf, interpret,
-        )
+        tab = lambda t: t[..., part.agg_slot]
+        smf, smc, sxf, sxc = tab(smf), tab(smc), tab(sxf), tab(sxc)
     else:
-        mf, mc, xf, xc = kern.batched_activities_slab_tiles(
-            part.val, part.col_s, part.tile_inst, part.tile_slab, active,
-            lbp, ubp, part.slab, inf, interpret,
+        shape = ((bsz,) if node else ()) + tuple(part.chunk_row.shape)
+        smf = jnp.zeros(shape, lbp.dtype)
+        smc = jnp.zeros(shape, jnp.int32)
+        sxf, sxc = smf, smc
+    if node:
+        new_lb, new_ub, ch = kern.node_slab_round_tiles(
+            part.val, part.col_s, part.ii_g, part.row_done, smf, smc, sxf, sxc,
+            part.lhs_g, part.rhs_g, part.run_start, part.run_len,
+            part.run_slab, active, lbp, ubp, part.slab, part.max_run_len,
+            eps, int_eps, inf, interpret,
         )
-        rmf, rmc, rxf, rxc = _combine_copy_partials(part, num_rows, mf, mc, xf, xc)
-        best_l, best_u = kern.batched_candidates_scatter_slab_tiles(
-            part.val, part.col_s, part.ii_g, rmf, rmc, rxf, rxc,
-            part.lhs_g, part.rhs_g, part.tile_inst, part.tile_slab, active,
-            lbp, ubp, part.slab, int_eps, inf, interpret,
+        changed = jnp.any(ch != 0, axis=1)
+    else:
+        new_lb, new_ub, ch = kern.batched_slab_round_tiles(
+            part.val, part.col_s, part.ii_g, part.row_done, smf, smc, sxf, sxc,
+            part.lhs_g, part.rhs_g, part.run_start, part.run_len,
+            part.run_inst, part.run_slab, active, lbp, ubp, part.slab,
+            part.max_run_len, eps, int_eps, inf, interpret,
         )
-    new_lb, new_ub, ch = kern.apply_updates_slab_tiles(
-        lbp, ubp, best_l, best_u, active, part.slab, eps, inf, interpret
-    )
+        changed = jax.ops.segment_max(ch, part.run_inst, num_segments=bsz) != 0
     if extra:
         new_lb, new_ub = new_lb[:, :n_pad], new_ub[:, :n_pad]
-    return new_lb, new_ub, ch
+    return new_lb, new_ub, changed
 
 
 def _prepared_round(
@@ -670,29 +895,24 @@ def _prepared_round(
     d = prep.d
 
     if scatter == "partitioned":
-        # Column-slab partitioned round (VMEM-exceeding n_pad): per-slab
-        # masked tile copies, two-phase (partials -> tiny XLA combine ->
-        # candidates + per-slab scatter), slab-gridded merge.  Only (1, S)
-        # windows are ever VMEM-resident; no nnz-shaped tensor touches HBM.
+        # Column-slab partitioned round (VMEM-exceeding n_pad): chunk-copy
+        # slab partition, straddle aggregates out of band, then ONE fused
+        # slab-parallel kernel (candidates + scatter + merge) on the 2D
+        # (run, tile) grid.  Only (1, S) windows are ever VMEM-resident;
+        # no nnz-shaped tensor touches HBM.
         part = prep.slab_partition(slab)
         if use_pallas:
             new_lb, new_ub, ch = _partitioned_pallas_round(
                 part, lb[None, :], ub[None, :], jnp.ones((1,), jnp.int32),
-                prep.m + 1, node=False, eps=eps, int_eps=int_eps, inf=inf,
+                node=False, eps=eps, int_eps=int_eps, inf=inf,
                 interpret=interpret,
             )
             return new_lb[0], new_ub[0], ch[0]
-        dt = d.val.dtype
-        extra = part.n_pad_part - prep.n_pad
-        lbp = jnp.concatenate([lb, jnp.zeros((extra,), dt)]) if extra else lb
-        ubp = jnp.concatenate([ub, jnp.zeros((extra,), dt)]) if extra else ub
         best_l, best_u = kref.partitioned_round_ref(
-            part.val, part.col_s, part.tile_slab, part.chunk_row,
-            part.ii_g != 0, part.lhs_g, part.rhs_g, lbp, ubp,
-            prep.m + 1, part.slab, part.n_pad_part, int_eps, inf,
+            part, lb[None, :], ub[None, :], int_eps, inf
         )
         return bnd.apply_updates(
-            lb, ub, best_l[: prep.n_pad], best_u[: prep.n_pad], eps, inf
+            lb, ub, best_l[0, : prep.n_pad], best_u[0, : prep.n_pad], eps, inf
         )
 
     if scatter == "fused":
@@ -830,14 +1050,33 @@ def round_fn_for(
 # ---------------------------------------------------------------------------
 
 
+# Escape hatch for the large-instance leg of ``scatter="auto"``: set
+# REPRO_AUTO_LARGE_SCATTER=segment to route VMEM-exceeding instances to the
+# materializing segment engine instead of the partitioned one (e.g. while
+# re-validating a slab-width regression on new hardware).  The default is
+# the slab-parallel partitioned engine, which wins on both bytes and wall
+# clock on the benchmarked large-instance families (see BENCH_prop.json).
+AUTO_LARGE_SCATTER_ENV = "REPRO_AUTO_LARGE_SCATTER"
+
+
+def _auto_large_scatter() -> str:
+    mode = os.environ.get(AUTO_LARGE_SCATTER_ENV, "partitioned")
+    if mode not in ("partitioned", "segment"):
+        raise ValueError(
+            f"{AUTO_LARGE_SCATTER_ENV}={mode!r}: expected 'partitioned' or 'segment'"
+        )
+    return mode
+
+
 def _resolve_scatter(scatter: str, prep: PreparedBlockEll) -> str:
     """The engine decision (see docs/ARCHITECTURE.md): ``auto`` keeps the
     fully fused round while the ``(2, n_pad)`` accumulators fit the VMEM
-    budget and moves to the column-slab partitioned round beyond it, so
-    the fused ~16 B/nnz dataflow holds at every instance size; ``segment``
-    (the materializing oracle) is only ever explicit."""
+    budget and moves to the column-slab partitioned round beyond it
+    (overridable via :data:`AUTO_LARGE_SCATTER_ENV`), so the fused
+    ~16 B/nnz dataflow holds at every instance size; ``segment`` (the
+    materializing oracle) is otherwise only ever explicit."""
     if scatter == "auto":
-        return "fused" if prep.n_pad <= SCATTER_MAX_NPAD else "partitioned"
+        return "fused" if prep.n_pad <= SCATTER_MAX_NPAD else _auto_large_scatter()
     if scatter not in ("fused", "segment", "partitioned"):
         raise ValueError(f"unknown scatter mode: {scatter!r}")
     return scatter
@@ -1114,7 +1353,7 @@ def batched_reference_round(
 def _batched_prepared_round(
     prep: PreparedBatch, lb, ub, active,
     *, eps: float, int_eps: float, inf: float,
-    use_pallas: bool, interpret: bool | None,
+    use_pallas: bool, interpret: bool | None, slab: int | None = None,
 ):
     """One round over a prepared bucket: ``(B, n_pad)`` bounds + ``(B,)``
     active mask -> updated bounds + per-instance changed flags.
@@ -1138,7 +1377,7 @@ def _batched_prepared_round(
         )
     if use_pallas and prep.n_pad > SCATTER_MAX_NPAD:
         return _partitioned_pallas_round(
-            prep.slab_partition(), lb, ub, active, prep.m_total + 1,
+            prep.slab_partition(slab), lb, ub, active,
             node=False, eps=eps, int_eps=int_eps, inf=inf, interpret=interpret,
         )
     return batched_reference_round(
@@ -1154,9 +1393,12 @@ def batched_round_fn_for(
     cfg: PropagatorConfig = DEFAULT_CONFIG,
     use_pallas: bool = True,
     interpret: bool | None = None,
+    slab: int | None = None,
 ):
     """A jit-able ``(lb, ub, active) -> (lb, ub, changed)`` batched round
-    closure over a prepared bucket."""
+    closure over a prepared bucket.  ``slab`` overrides the partitioned
+    engine's column-slab width for VMEM-exceeding buckets (ignored
+    otherwise)."""
     eps = cfg.eps_for(prep.d.val.dtype)
     return functools.partial(
         _batched_prepared_round,
@@ -1166,6 +1408,7 @@ def batched_round_fn_for(
         inf=cfg.inf,
         use_pallas=use_pallas,
         interpret=interpret,
+        slab=slab,
     )
 
 
@@ -1202,14 +1445,15 @@ def batched_device_runner(
     use_pallas: bool = True,
     interpret: bool | None = None,
     donate: bool | None = None,
+    slab: int | None = None,
 ):
     """The bucket's whole fixed point as ONE jitted dispatch, cached:
     ``run(lb0, ub0) -> (lb, ub, rounds, converged, infeasible)`` (all
     per-instance; ``lb0``/``ub0`` donated where supported)."""
-    key = (id(prep), cfg, use_pallas, interpret, donate, "device")
+    key = (id(prep), cfg, use_pallas, interpret, donate, slab, "device")
 
     def build():
-        round_fn = batched_round_fn_for(prep, cfg, use_pallas, interpret)
+        round_fn = batched_round_fn_for(prep, cfg, use_pallas, interpret, slab)
         if donate is None:
             donate_kw = donate_kwargs(argnums=(0, 1))
         else:
@@ -1255,6 +1499,7 @@ def propagate_batch_prepared(
     donate: bool | None = None,
     lb0=None,
     ub0=None,
+    slab: int | None = None,
 ):
     """Run one prepared bucket to its per-instance fixed points.
 
@@ -1270,10 +1515,10 @@ def propagate_batch_prepared(
     bsz = prep.size
 
     if driver == "host_loop":
-        key = (id(prep), cfg, use_pallas, interpret, donate, "host")
+        key = (id(prep), cfg, use_pallas, interpret, donate, slab, "host")
 
         def build():
-            round_fn = batched_round_fn_for(prep, cfg, use_pallas, interpret)
+            round_fn = batched_round_fn_for(prep, cfg, use_pallas, interpret, slab)
             if donate is None:
                 donate_kw = donate_kwargs(argnums=(0, 1))
             else:
@@ -1301,7 +1546,7 @@ def propagate_batch_prepared(
     if driver != "device_loop":
         raise ValueError(f"unknown driver: {driver!r}")
 
-    run = batched_device_runner(prep, cfg, use_pallas, interpret, donate)
+    run = batched_device_runner(prep, cfg, use_pallas, interpret, donate, slab)
     lb_init, ub_init = _batch_initial_bounds(prep, lb0, ub0)
     lb, ub, rounds, converged, infeasible = run(lb_init, ub_init)
     return _unpack_batch_results(prep, lb, ub, rounds, converged, infeasible)
@@ -1388,6 +1633,7 @@ def propagate_batch_block_ell(
     interpret: bool | None = None,
     donate: bool | None = None,
     bounds=None,
+    slab: int | None = None,
 ):
     """Batched kernel-backed propagation: pack -> per-bucket dispatch ->
     per-instance results in input order.  Packing, device transfer and the
@@ -1413,7 +1659,7 @@ def propagate_batch_block_ell(
             lb0, ub0 = _bound_planes_for_batch(batch, bounds)
         results = propagate_batch_prepared(
             prep, cfg, use_pallas=use_pallas, driver=driver,
-            interpret=interpret, donate=donate, lb0=lb0, ub0=ub0,
+            interpret=interpret, donate=donate, lb0=lb0, ub0=ub0, slab=slab,
         )
         for idx, res in zip(batch.indices, results):
             out[idx] = res
@@ -1428,7 +1674,7 @@ def propagate_batch_block_ell(
 def _node_round(
     prep: PreparedBlockEll, lb, ub, active,
     *, eps: float, int_eps: float, inf: float,
-    use_pallas: bool, interpret: bool | None,
+    use_pallas: bool, interpret: bool | None, slab: int | None = None,
 ):
     """One round over a node batch: ``(B, n_pad)`` per-node bounds +
     ``(B,)`` active mask -> updated bounds + per-node changed flags, with
@@ -1454,7 +1700,7 @@ def _node_round(
         )
     if use_pallas and prep.n_pad > SCATTER_MAX_NPAD:
         return _partitioned_pallas_round(
-            prep.slab_partition(), lb, ub, active, prep.m + 1,
+            prep.slab_partition(slab), lb, ub, active,
             node=True, eps=eps, int_eps=int_eps, inf=inf, interpret=interpret,
         )
     single = functools.partial(
@@ -1479,9 +1725,12 @@ def node_round_fn_for(
     cfg: PropagatorConfig = DEFAULT_CONFIG,
     use_pallas: bool = True,
     interpret: bool | None = None,
+    slab: int | None = None,
 ):
     """A jit-able ``(lb, ub, active) -> (lb, ub, changed)`` node-batch
-    round closure over a prepared instance (bounds ``(B, n_pad)``)."""
+    round closure over a prepared instance (bounds ``(B, n_pad)``).
+    ``slab`` overrides the partitioned engine's column-slab width for
+    VMEM-exceeding instances (ignored otherwise)."""
     eps = cfg.eps_for(prep.d.val.dtype)
     return functools.partial(
         _node_round,
@@ -1491,6 +1740,7 @@ def node_round_fn_for(
         inf=cfg.inf,
         use_pallas=use_pallas,
         interpret=interpret,
+        slab=slab,
     )
 
 
@@ -1508,19 +1758,20 @@ def node_batch_runner(
     use_pallas: bool = True,
     interpret: bool | None = None,
     donate: bool | None = None,
+    slab: int | None = None,
 ):
     """The node batch's whole fixed point as ONE jitted dispatch, cached:
     ``run(lb0, ub0) -> (lb, ub, rounds, converged, infeasible)`` with the
     node axis leading everywhere (``lb0``/``ub0`` donated where
     supported)."""
     do_donate = donate_supported() if donate is None else bool(donate)
-    key = (id(prep.d.val), batch_size, cfg, use_pallas, interpret, do_donate)
+    key = (id(prep.d.val), batch_size, cfg, use_pallas, interpret, do_donate, slab)
     anchors = (prep.d.val,)
     runner = _node_runner_cache.get(key, anchors)
     if runner is not None:
         return runner
 
-    round_fn = node_round_fn_for(prep, cfg, use_pallas, interpret)
+    round_fn = node_round_fn_for(prep, cfg, use_pallas, interpret, slab)
     donate_kw = {"donate_argnums": (0, 1)} if do_donate else {}
     col_valid = jnp.arange(prep.n_pad) < prep.n
 
@@ -1544,6 +1795,7 @@ def propagate_nodes_prepared(
     use_pallas: bool = True,
     interpret: bool | None = None,
     donate: bool | None = None,
+    slab: int | None = None,
 ):
     """Run B warm-started nodes of one prepared instance to their fixed
     points in ONE dispatch.
@@ -1572,7 +1824,7 @@ def propagate_nodes_prepared(
         if pad:
             plane = np.concatenate([plane, np.zeros((bsz, pad), dt)], axis=1)
         planes.append(jnp.asarray(plane))
-    run = node_batch_runner(prep, bsz, cfg, use_pallas, interpret, donate)
+    run = node_batch_runner(prep, bsz, cfg, use_pallas, interpret, donate, slab)
     lb, ub, rounds, converged, infeasible = run(*planes)
     return lb[:, : prep.n], ub[:, : prep.n], rounds, converged, infeasible
 

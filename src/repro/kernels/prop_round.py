@@ -46,6 +46,21 @@ Fully fused scatter kernels (the zero-HBM-tensor round engine):
         ``bounds.apply_updates`` semantics.  ``input_output_aliases`` donates
         the bound buffers so the fixed-point loop updates bounds in place.
 
+Slab-parallel partitioned kernels (``n_pad > SCATTER_MAX_NPAD``):
+
+  * ``_batched_slab_round_kernel`` / ``_node_slab_round_kernel`` -- the
+        fused round over a column-slab partition (``ops.build_slab_partition``)
+        on a 2D ``(run, tile)`` grid: one run per ``(instance, slab)``
+        window, best-bound accumulators in per-run VMEM scratch, and the
+        bound merge folded into the run's last step so no partial plane
+        round-trips through HBM.  The run axis is declared ``parallel``.
+  * ``_batched_slab_partials_kernel`` / ``_node_slab_partials_kernel`` --
+        activity partials for the few STRADDLE rows whose nonzeros are
+        split across slab copies (completed by a tiny segment sum outside).
+  * ``_apply_updates_slab_kernel``  -- standalone slab-windowed merge
+        (kept for callers composing their own partitioned pipelines; the
+        round kernels above merge in place themselves).
+
 In the fused engine the irregular gather itself moves into the kernels
 (``_gather_bounds_tile``): the bound vectors ride along as VMEM-resident
 ``(1, n_pad)`` blocks, so no nnz-proportional tensor exists in HBM at all
@@ -108,8 +123,17 @@ def tile_candidates(
 ):
     """Residual activities (§3.4 single-infinity rule) + bound candidates
     (Eqs. 4/5) + integrality rounding.  Row aggregates / sides are (.., R)
-    and broadcast over the K axis.  Pure jnp: callable inside kernels."""
-    pos, pad, min_is_inf, max_is_inf, c_min, c_max = tile_contributions(
+    and broadcast over the K axis.  Pure jnp: callable inside kernels.
+
+    Candidates use the division-first form ``(side - row_sum) / a + bound``
+    rather than dividing the residual ``row_sum - a * bound``: the two are
+    algebraically equal, but the residual form multiplies into a
+    subtraction, which CPU/LLVM backends contract into an FMA in some
+    compilation contexts (inside a fused Pallas kernel) and not others
+    (the op-by-op oracle), breaking bitwise kernel-vs-oracle equality in
+    the last mantissa bit.  The division-first chain (sub, div, add) has
+    no contractible pattern, so every context rounds identically."""
+    pos, pad, min_is_inf, max_is_inf, _, _ = tile_contributions(
         val, lb_g, ub_g, inf
     )
     rmf = row_min_fin[..., None]
@@ -119,29 +143,30 @@ def tile_candidates(
     lhs_b = lhs[..., None]
     rhs_b = rhs[..., None]
 
-    min_res = jnp.where(
-        min_is_inf,
-        jnp.where(rmc == 1, rmf, -inf),
-        jnp.where(rmc == 0, rmf - c_min, -inf),
-    )
-    max_res = jnp.where(
-        max_is_inf,
-        jnp.where(rxc == 1, rxf, inf),
-        jnp.where(rxc == 0, rxf - c_max, inf),
-    )
+    # Residual usable at this entry (§3.4): all contributions finite and
+    # the row sum complete (cnt == 0), or exactly this entry's bound
+    # infinite so the sum over the others IS the residual (cnt == 1).
+    ok_min = jnp.where(min_is_inf, rmc == 1, rmc == 0)
+    ok_max = jnp.where(max_is_inf, rxc == 1, rxc == 0)
+    # This entry's own bound, folded back in candidate space (0 when the
+    # entry's contribution was never part of the finite sum).
+    b_min = jnp.where(pos, lb_g, ub_g)
+    b_max = jnp.where(pos, ub_g, lb_g)
+    inc_min = jnp.where(min_is_inf | pad, 0.0, b_min)
+    inc_max = jnp.where(max_is_inf | pad, 0.0, b_max)
 
     safe_a = jnp.where(pad, 1.0, val)
-    num_l = jnp.where(pos, lhs_b - max_res, rhs_b - min_res)
-    num_u = jnp.where(pos, rhs_b - min_res, lhs_b - max_res)
-    lcand = num_l / safe_a
-    ucand = num_u / safe_a
+    q_min = (rhs_b - rmf) / safe_a + inc_min
+    q_max = (lhs_b - rxf) / safe_a + inc_max
+    lcand = jnp.where(pos, q_max, q_min)
+    ucand = jnp.where(pos, q_min, q_max)
 
     valid_l = (
-        jnp.where(pos, (lhs_b > -inf) & (max_res < inf), (rhs_b < inf) & (min_res > -inf))
+        jnp.where(pos, (lhs_b > -inf) & ok_max, (rhs_b < inf) & ok_min)
         & ~pad
     )
     valid_u = (
-        jnp.where(pos, (rhs_b < inf) & (min_res > -inf), (lhs_b > -inf) & (max_res < inf))
+        jnp.where(pos, (rhs_b < inf) & ok_min, (lhs_b > -inf) & ok_max)
         & ~pad
     )
     lcand = jnp.where(valid_l, jnp.clip(lcand, -inf, inf), -inf)
@@ -933,38 +958,86 @@ def node_fused_scatter_round_tiles(
 # When ``n_pad`` outgrows the VMEM accumulator budget (``SCATTER_MAX_NPAD``)
 # the resident ``(1, n_pad)`` bound/accumulator blocks of the fused kernels
 # no longer fit on chip.  The partitioned engine keeps the fused dataflow by
-# splitting the padded column space into ``slab``-wide windows and the tile
-# stream into per-slab COPIES (``ops.build_slab_partition``): a copy keeps
-# only the nonzeros whose columns fall in its slab, so its in-kernel gather
-# and scatter touch exactly one ``(1, S)`` bound window and one ``(1, S)``
-# accumulator window -- both VMEM-resident across the slab's contiguous
-# tile sweep (the same prefetch-routed residency trick as the batched
-# kernel, with (instance, slab) taking the role of the instance id).
+# splitting the padded column space into ``slab``-wide windows and the CHUNK
+# stream into per-slab copies grouped by ``(instance, slab)`` window
+# (``ops.build_slab_partition``): a copy keeps only the nonzeros whose
+# columns fall in its slab, so its in-kernel gather and scatter touch
+# exactly one ``(1, S)`` bound window -- VMEM-resident across the window's
+# whole tile run.
 #
-# Because a row's nonzeros may be split across slab copies, the partitioned
-# round is ALWAYS the two-phase variant: per-copy activity partials (kernel
-# A'''), a tiny (T', R) segment combine in XLA, then candidates + per-slab
-# scatter (kernel E''').  The jnp oracle is ``ref.partitioned_round_ref``
-# over the SAME partition arrays, which the kernels match bitwise.
+# The round kernels walk a 2D ``(run, tile)`` grid: the major axis is one
+# step per ``(instance, slab)`` window (``run_*`` scalar-prefetch maps from
+# the partition), the minor axis sweeps the window's copy tiles, padded to
+# the longest run with idempotent revisits of the run's last tile.  The run
+# axis carries no cross-step state -- the best-bound accumulators live in
+# VMEM *scratch* re-initialized at each run's first step -- so it is
+# declared ``parallel``: independent windows' reductions may run
+# concurrently (on multiple cores) while each window's sweep stays ordered.
+# Because every copy tile (including the duplicated straddling-tile copies)
+# enters through BlockSpec index maps, Mosaic's grid pipeline
+# double-buffers the HBM->VMEM copy stream automatically: step ``j+1``'s
+# tile DMAs while step ``j`` computes, so duplication overlaps the
+# reduction instead of preceding it.
+#
+# Rows whose nonzeros are split across copies cannot finish their activity
+# aggregate inside any one copy.  Those STRADDLE rows ride a small
+# sub-stream (``a_*``): ``*_slab_partials_tiles`` emits their per-copy
+# partials, a tiny XLA segment sum completes them into a table, and the
+# round kernel selects per row between its local in-register aggregate
+# (``row_done == 1``, the vast majority) and the table value.  The round
+# kernel then computes candidates, scatters them into the scratch
+# accumulators, AND merges the window's bounds in place at the run's last
+# step -- no partial best-bound plane ever round-trips through HBM.  The
+# jnp oracle is ``ref.partitioned_round_ref`` over the SAME partition
+# arrays, which the kernels match bitwise.
 
 
-def _batched_activities_slab_kernel(
-    inst_ref, slab_ref, act_ref,
+def _slab_compiler_params(interpret: bool, semantics: tuple):
+    """``compiler_params`` declaring the grid's dimension semantics (the
+    run/window axis ``parallel``, sweep axes ``arbitrary``) when compiling
+    for a real TPU backend; empty under interpret mode or when this JAX
+    build spells the params class differently."""
+    if interpret:
+        return {}
+    from jax.experimental.pallas import tpu as pltpu
+
+    cp = getattr(pltpu, "TPUCompilerParams", None) or getattr(
+        pltpu, "CompilerParams", None
+    )
+    if cp is None:
+        return {}
+    try:
+        return {"compiler_params": cp(dimension_semantics=semantics)}
+    except TypeError:
+        return {}
+
+
+def _run_tile_index(j, st, ln, rr):
+    """Copy-tile index of run ``rr`` at sweep step ``j``, clamped to the
+    run's last tile: steps padding a short run to ``max_run_len`` revisit
+    that tile (idempotent recompute) instead of reading out of range."""
+    return st[rr] + jnp.minimum(j, ln[rr] - 1)
+
+
+def _batched_slab_partials_kernel(
+    st_ref, ln_ref, ri_ref, rs_ref, act_ref,
     val_ref, col_ref, lb_ref, ub_ref,
     mf_ref, mc_ref, xf_ref, xc_ref, *, inf, block,
 ):
-    """Kernel A''': per-copy activity partials over a slab-partitioned
-    (optionally batched) tile stream.
+    """Straddle-partials kernel over a slab-partitioned (optionally
+    batched) sub-stream on the 2D ``(run, tile)`` grid.
 
-    The grid walks the ``(inst, slab, tile)``-sorted copy stream; the
-    scalar-prefetched ``inst``/``slab`` maps route each copy's ``(1, S)``
-    bound window out of the ``(B, n_pad_part)`` plane.  Columns are
-    slab-LOCAL, so the in-kernel gather walks only the resident window.
+    Each grid step computes ONE copy tile's per-row activity partials with
+    the in-kernel gather from its window's resident ``(1, S)`` bound block
+    (routed by the prefetched run maps).  Padded steps of short runs
+    recompute the run's last tile -- same inputs, same outputs, harmless.
     Copies of converged instances write zero partials and skip the gather.
     """
-    i = pl.program_id(0)
+    rr = pl.program_id(0)
+    j = pl.program_id(1)
+    act = act_ref[ri_ref[rr]] != 0
 
-    @pl.when(act_ref[inst_ref[i]] != 0)
+    @pl.when(act)
     def _():
         val = val_ref[...]
         r, k = val.shape[-2:]
@@ -977,7 +1050,7 @@ def _batched_activities_slab_kernel(
         xf_ref[...] = rxf.reshape(1, r)
         xc_ref[...] = rxc.reshape(1, r)
 
-    @pl.when(act_ref[inst_ref[i]] == 0)
+    @pl.when(~act)
     def _():
         mf_ref[...] = jnp.zeros_like(mf_ref[...])
         mc_ref[...] = jnp.zeros_like(mc_ref[...])
@@ -985,27 +1058,32 @@ def _batched_activities_slab_kernel(
         xc_ref[...] = jnp.zeros_like(xc_ref[...])
 
 
-def batched_activities_slab_tiles(
+def batched_slab_partials_tiles(
     val,
     col_s,
-    tile_inst,
-    tile_slab,
+    run_start,
+    run_len,
+    run_inst,
+    run_slab,
     active,
     lb,
     ub,
     slab: int,
+    max_run_len: int,
     inf: float = INF,
     interpret: bool | None = None,
     block: int = LANE,
 ):
-    """Per-copy activity partials of a slab-partitioned stream.
+    """Per-copy activity partials of a slab-partitioned sub-stream on the
+    slab-parallel 2D grid.
 
-    ``(T', R, K)`` slab-masked tile copies (slab-local columns) + ``(B,
-    n_pad_part)`` bound planes + ``(T',)`` copy->instance / copy->slab maps
-    + ``(B,)`` active mask -> 4 x ``(T', R)`` partials.  Single-instance
-    callers pass ``B == 1`` planes with ``tile_inst == 0``.  The gathered
-    bounds never exist in HBM; each copy reads only its slab's resident
-    ``(1, S)`` window."""
+    ``(Ta, R, K)`` slab-masked copies (slab-local columns) + the run maps
+    (one entry per populated ``(instance, slab)`` window) + ``(B,
+    n_pad_part)`` bound planes + ``(B,)`` active mask -> 4 x ``(Ta, R)``
+    partials.  Single-instance callers pass ``B == 1`` planes with
+    ``run_inst == 0``.  The gathered bounds never exist in HBM; each window
+    reads only its resident ``(1, S)`` block, and independent windows are
+    declared parallel."""
     if interpret is None:
         interpret = _on_cpu()
     if slab % block:
@@ -1013,13 +1091,15 @@ def batched_activities_slab_tiles(
     from jax.experimental.pallas import tpu as pltpu
 
     t, r, k = val.shape
+    n_runs = run_start.shape[0]
     dtype = val.dtype
-    tile = pl.BlockSpec((1, r, k), lambda i, inst, sl, act: (i, 0, 0))
-    vec = pl.BlockSpec((1, slab), lambda i, inst, sl, act: (inst[i], sl[i]))
-    out_tile = pl.BlockSpec((1, r), lambda i, inst, sl, act: (i, 0))
+    copy = lambda rr, j, st, ln, ri, rs, act: _run_tile_index(j, st, ln, rr)
+    tile = pl.BlockSpec((1, r, k), lambda rr, j, st, ln, ri, rs, act: (copy(rr, j, st, ln, ri, rs, act), 0, 0))
+    out_tile = pl.BlockSpec((1, r), lambda rr, j, st, ln, ri, rs, act: (copy(rr, j, st, ln, ri, rs, act), 0))
+    vec = pl.BlockSpec((1, slab), lambda rr, j, st, ln, ri, rs, act: (ri[rr], rs[rr]))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(t,),
+        num_scalar_prefetch=5,
+        grid=(n_runs, max_run_len),
         in_specs=[tile, tile, vec, vec],
         out_specs=[out_tile, out_tile, out_tile, out_tile],
     )
@@ -1030,91 +1110,125 @@ def batched_activities_slab_tiles(
         jax.ShapeDtypeStruct((t, r), jnp.int32),
     ]
     fn = pl.pallas_call(
-        functools.partial(_batched_activities_slab_kernel, inf=inf, block=block),
+        functools.partial(_batched_slab_partials_kernel, inf=inf, block=block),
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
+        **_slab_compiler_params(interpret, ("parallel", "arbitrary")),
     )
     return fn(
-        tile_inst.astype(jnp.int32), tile_slab.astype(jnp.int32),
-        active.astype(jnp.int32), val, col_s, lb, ub,
+        run_start.astype(jnp.int32), run_len.astype(jnp.int32),
+        run_inst.astype(jnp.int32), run_slab.astype(jnp.int32),
+        active.astype(jnp.int32),
+        val, col_s, lb, ub,
     )
 
 
-def _batched_candidates_scatter_slab_kernel(
-    inst_ref, slab_ref, act_ref,
-    val_ref, col_ref, ii_ref,
-    rmf_ref, rmc_ref, rxf_ref, rxc_ref, lhs_ref, rhs_ref,
-    lb_ref, ub_ref, bl_ref, bu_ref, *, int_eps, inf, block,
+def _batched_slab_round_kernel(
+    st_ref, ln_ref, ri_ref, rs_ref, act_ref,
+    val_ref, col_ref, ii_ref, done_ref,
+    smf_ref, smc_ref, sxf_ref, sxc_ref,
+    lhs_ref, rhs_ref, lb_ref, ub_ref,
+    nlb_ref, nub_ref, ch_ref,
+    acc_l, acc_u, *, eps, int_eps, inf, block,
 ):
-    """Kernel E''': candidates from completed row aggregates + per-slab
-    column scatter over a slab-partitioned (optionally batched) stream.
+    """The fused slab-parallel round kernel over a partitioned (optionally
+    batched) stream on the 2D ``(run, tile)`` grid.
 
-    Each copy's ``(1, S)`` accumulator window is routed by the prefetched
-    ``(inst, slab)`` maps and stays VMEM-resident across the window's
-    contiguous copies; it is initialized at the window's first copy and
-    flushed exactly once at the boundary.  Copies of converged instances
-    skip gather/compute/scatter, leaving identity accumulators."""
-    i = pl.program_id(0)
-    inst = inst_ref[i]
-    prev = jnp.maximum(i - 1, 0)
-    first = jnp.where(
-        i == 0,
-        True,
-        (inst_ref[prev] != inst) | (slab_ref[prev] != slab_ref[i]),
-    )
+    One run == one ``(instance, slab)`` window.  Its sweep: (1) first step
+    initializes the window's ``(1, S)`` best-bound accumulators, held in
+    VMEM *scratch* so no partial plane exists in HBM; (2) every real step
+    gathers bounds from the resident window, computes local row aggregates,
+    swaps in the prefetched straddle aggregates where ``row_done == 0``,
+    computes candidates and scatters them into the scratch; (3) the run's
+    LAST real step merges the accumulators into the window's bounds in
+    place (``bounds.apply_updates`` semantics) and emits the run's changed
+    flag.  Padded steps recompute the last tile (idempotent) and re-merge
+    the same result.  Converged instances skip compute and pass bounds
+    through unchanged."""
+    rr = pl.program_id(0)
+    j = pl.program_id(1)
+    ln = ln_ref[rr]
+    act = act_ref[ri_ref[rr]] != 0
 
-    @pl.when(first)
+    @pl.when(j == 0)
     def _():
-        bl_ref[...] = jnp.full_like(bl_ref[...], -inf)
-        bu_ref[...] = jnp.full_like(bu_ref[...], inf)
+        acc_l[...] = jnp.full_like(acc_l[...], -inf)
+        acc_u[...] = jnp.full_like(acc_u[...], inf)
 
-    @pl.when(act_ref[inst] != 0)
+    @pl.when((j < ln) & act)
     def _():
         val = val_ref[...]
         r, k = val.shape[-2:]
         val = val.reshape(r, k)
         col = col_ref[...].reshape(r, k)
         lb_g, ub_g = _gather_bounds_tile(col, lb_ref, ub_ref, block=block)
+        lmf, lmc, lxf, lxc = tile_row_aggregates(val, lb_g, ub_g, inf)
+        done = done_ref[...].reshape(r) != 0
+        rmf = jnp.where(done, lmf, smf_ref[...].reshape(r))
+        rmc = jnp.where(done, lmc, smc_ref[...].reshape(r))
+        rxf = jnp.where(done, lxf, sxf_ref[...].reshape(r))
+        rxc = jnp.where(done, lxc, sxc_ref[...].reshape(r))
         lcand, ucand = tile_candidates(
             val, lb_g, ub_g, ii_ref[...].reshape(r, k) != 0,
-            rmf_ref[...].reshape(r), rmc_ref[...].reshape(r),
-            rxf_ref[...].reshape(r), rxc_ref[...].reshape(r),
+            rmf, rmc, rxf, rxc,
             lhs_ref[...].reshape(r), rhs_ref[...].reshape(r), int_eps, inf,
         )
-        _scatter_tile(lcand, ucand, col, bl_ref, bu_ref, inf=inf, block=block)
+        _scatter_tile(lcand, ucand, col, acc_l, acc_u, inf=inf, block=block)
+
+    @pl.when(j == ln - 1)
+    def _():
+        lb, ub = lb_ref[...], ub_ref[...]
+        new_lb, new_ub, changed = bnd.apply_updates(
+            lb, ub, acc_l[...], acc_u[...], eps, inf
+        )
+        nlb_ref[...] = jnp.where(act, new_lb, lb)
+        nub_ref[...] = jnp.where(act, new_ub, ub)
+        ch_ref[...] = (changed & act).astype(jnp.int32).reshape(1, 1)
 
 
-def batched_candidates_scatter_slab_tiles(
+def batched_slab_round_tiles(
     val,
     col_s,
     is_int_g,
-    row_min_fin,
-    row_min_cnt,
-    row_max_fin,
-    row_max_cnt,
+    row_done,
+    str_min_fin,
+    str_min_cnt,
+    str_max_fin,
+    str_max_cnt,
     lhs_g,
     rhs_g,
-    tile_inst,
-    tile_slab,
+    run_start,
+    run_len,
+    run_inst,
+    run_slab,
     active,
     lb,
     ub,
     slab: int,
+    max_run_len: int,
+    eps: float,
     int_eps: float,
     inf: float = INF,
     interpret: bool | None = None,
     block: int = LANE,
 ):
-    """Candidates + slab-windowed column reduction over a partitioned
-    stream: ``(T', R, K)`` slab-masked copies + ``(T', R)`` completed row
-    aggregates + ``(B, n_pad_part)`` bound planes -> ``(B, n_pad_part)``
-    best_l / best_u.
+    """The fused slab-parallel round over a partitioned stream: candidates,
+    per-slab scatter AND the bound merge in ONE kernel on the 2D ``(run,
+    tile)`` grid.
 
-    Neither the gathered bounds nor the candidates ever materialize in
-    HBM; each ``(instance, slab)`` window's ``(1, S)`` accumulators flush
-    once.  Single-instance callers pass ``B == 1`` with ``tile_inst == 0``;
-    inactive instances produce identity accumulator rows."""
+    ``(T'', R, K)`` slab-masked copies + ``(T'', R)`` ``row_done`` select
+    mask and gathered straddle aggregates (``str_*``; any values where
+    ``row_done == 1``) + the run maps (exactly one run per ``(instance,
+    slab)`` window) + ``(B, n_pad_part)`` bound planes + ``(B,)`` active
+    mask -> updated ``(B, n_pad_part)`` bounds and ``(n_runs,)`` per-run
+    changed flags (OR-combine per instance outside).  Best-bound
+    accumulators live in VMEM scratch re-initialized per run, so the run
+    axis is parallel and no partial bound plane round-trips through HBM.
+    The bound buffers are NOT aliased in place (the window merge writes a
+    fresh plane); single-instance callers pass ``B == 1`` with
+    ``run_inst == 0``.  Shares ``bounds.apply_updates`` semantics with
+    every other engine."""
     if interpret is None:
         interpret = _on_cpu()
     if slab % block:
@@ -1122,53 +1236,60 @@ def batched_candidates_scatter_slab_tiles(
     from jax.experimental.pallas import tpu as pltpu
 
     t, r, k = val.shape
-    bsz = lb.shape[0]
+    bsz, n_pad_part = lb.shape
+    n_runs = run_start.shape[0]
     dtype = val.dtype
-    tile = pl.BlockSpec((1, r, k), lambda i, inst, sl, act: (i, 0, 0))
-    row_tile = pl.BlockSpec((1, r), lambda i, inst, sl, act: (i, 0))
-    vec = pl.BlockSpec((1, slab), lambda i, inst, sl, act: (inst[i], sl[i]))
+    copy = lambda rr, j, st, ln, ri, rs, act: _run_tile_index(j, st, ln, rr)
+    tile = pl.BlockSpec((1, r, k), lambda rr, j, st, ln, ri, rs, act: (copy(rr, j, st, ln, ri, rs, act), 0, 0))
+    row_tile = pl.BlockSpec((1, r), lambda rr, j, st, ln, ri, rs, act: (copy(rr, j, st, ln, ri, rs, act), 0))
+    vec = pl.BlockSpec((1, slab), lambda rr, j, st, ln, ri, rs, act: (ri[rr], rs[rr]))
+    flag = pl.BlockSpec((1, 1), lambda rr, j, st, ln, ri, rs, act: (rr, 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(t,),
-        in_specs=[tile, tile, tile,
-                  row_tile, row_tile, row_tile, row_tile, row_tile, row_tile,
-                  vec, vec],
-        out_specs=[vec, vec],
+        num_scalar_prefetch=5,
+        grid=(n_runs, max_run_len),
+        in_specs=[tile, tile, tile, row_tile,
+                  row_tile, row_tile, row_tile, row_tile,
+                  row_tile, row_tile, vec, vec],
+        out_specs=[vec, vec, flag],
+        scratch_shapes=[pltpu.VMEM((1, slab), dtype), pltpu.VMEM((1, slab), dtype)],
     )
     out_shape = [
-        jax.ShapeDtypeStruct((bsz, lb.shape[1]), dtype),
-        jax.ShapeDtypeStruct((bsz, lb.shape[1]), dtype),
+        jax.ShapeDtypeStruct((bsz, n_pad_part), dtype),
+        jax.ShapeDtypeStruct((bsz, n_pad_part), dtype),
+        jax.ShapeDtypeStruct((n_runs, 1), jnp.int32),
     ]
     fn = pl.pallas_call(
         functools.partial(
-            _batched_candidates_scatter_slab_kernel,
-            int_eps=int_eps, inf=inf, block=block,
+            _batched_slab_round_kernel, eps=eps, int_eps=int_eps, inf=inf, block=block
         ),
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
+        **_slab_compiler_params(interpret, ("parallel", "arbitrary")),
     )
-    return fn(
-        tile_inst.astype(jnp.int32), tile_slab.astype(jnp.int32),
+    new_lb, new_ub, ch = fn(
+        run_start.astype(jnp.int32), run_len.astype(jnp.int32),
+        run_inst.astype(jnp.int32), run_slab.astype(jnp.int32),
         active.astype(jnp.int32),
-        val, col_s, is_int_g.astype(jnp.int32),
-        row_min_fin, row_min_cnt, row_max_fin, row_max_cnt, lhs_g, rhs_g,
-        lb, ub,
+        val, col_s, is_int_g.astype(jnp.int32), row_done,
+        str_min_fin, str_min_cnt, str_max_fin, str_max_cnt,
+        lhs_g, rhs_g, lb, ub,
     )
+    return new_lb, new_ub, ch.reshape(n_runs)
 
 
-def _node_activities_slab_kernel(
-    slab_ref, act_ref,
+def _node_slab_partials_kernel(
+    st_ref, ln_ref, rs_ref, act_ref,
     val_ref, col_ref, lb_ref, ub_ref,
     mf_ref, mc_ref, xf_ref, xc_ref, *, inf, block,
 ):
-    """Kernel A''' over a node batch: ONE instance's slab-partitioned
-    copies, swept per node on a ``(B, T')`` grid; per-node ``(1, S)`` bound
-    windows routed by the prefetched slab map.  Inactive nodes write zero
-    partials."""
+    """Straddle-partials kernel over a node batch: ONE instance's
+    sub-stream swept per node on a ``(B, run, tile)`` grid with per-node
+    ``(1, S)`` bound windows.  Inactive nodes write zero partials."""
     b = pl.program_id(0)
+    act = act_ref[b] != 0
 
-    @pl.when(act_ref[b] != 0)
+    @pl.when(act)
     def _():
         val = val_ref[...]
         r, k = val.shape[-2:]
@@ -1181,7 +1302,7 @@ def _node_activities_slab_kernel(
         xf_ref[...] = rxf.reshape(1, 1, r)
         xc_ref[...] = rxc.reshape(1, 1, r)
 
-    @pl.when(act_ref[b] == 0)
+    @pl.when(~act)
     def _():
         mf_ref[...] = jnp.zeros_like(mf_ref[...])
         mc_ref[...] = jnp.zeros_like(mc_ref[...])
@@ -1189,22 +1310,26 @@ def _node_activities_slab_kernel(
         xc_ref[...] = jnp.zeros_like(xc_ref[...])
 
 
-def node_activities_slab_tiles(
+def node_slab_partials_tiles(
     val,
     col_s,
-    tile_slab,
+    run_start,
+    run_len,
+    run_slab,
     active,
     lb,
     ub,
     slab: int,
+    max_run_len: int,
     inf: float = INF,
     interpret: bool | None = None,
     block: int = LANE,
 ):
-    """Per-copy, per-node activity partials of ONE instance's partitioned
-    stream: ``(T', R, K)`` slab-masked copies broadcast across the node
-    axis + ``(B, n_pad_part)`` per-node bound planes -> 4 x ``(B, T', R)``
-    partials (combined outside by a per-node segment sum)."""
+    """Per-copy, per-node activity partials of ONE instance's straddle
+    sub-stream: ``(Ta, R, K)`` slab-masked copies broadcast across the node
+    axis + ``(B, n_pad_part)`` per-node bound planes -> 4 x ``(B, Ta, R)``
+    partials (completed outside by a per-node segment sum over
+    ``a_slot``)."""
     if interpret is None:
         interpret = _on_cpu()
     if slab % block:
@@ -1213,13 +1338,15 @@ def node_activities_slab_tiles(
 
     t, r, k = val.shape
     bsz = lb.shape[0]
+    n_runs = run_start.shape[0]
     dtype = val.dtype
-    tile = pl.BlockSpec((1, r, k), lambda b, i, sl, act: (i, 0, 0))
-    vec = pl.BlockSpec((1, slab), lambda b, i, sl, act: (b, sl[i]))
-    out_tile = pl.BlockSpec((1, 1, r), lambda b, i, sl, act: (b, i, 0))
+    copy = lambda rr, j, st, ln: _run_tile_index(j, st, ln, rr)
+    tile = pl.BlockSpec((1, r, k), lambda b, rr, j, st, ln, rs, act: (copy(rr, j, st, ln), 0, 0))
+    out_tile = pl.BlockSpec((1, 1, r), lambda b, rr, j, st, ln, rs, act: (b, copy(rr, j, st, ln), 0))
+    vec = pl.BlockSpec((1, slab), lambda b, rr, j, st, ln, rs, act: (b, rs[rr]))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(bsz, t),
+        num_scalar_prefetch=4,
+        grid=(bsz, n_runs, max_run_len),
         in_specs=[tile, tile, vec, vec],
         out_specs=[out_tile, out_tile, out_tile, out_tile],
     )
@@ -1230,77 +1357,107 @@ def node_activities_slab_tiles(
         jax.ShapeDtypeStruct((bsz, t, r), jnp.int32),
     ]
     fn = pl.pallas_call(
-        functools.partial(_node_activities_slab_kernel, inf=inf, block=block),
+        functools.partial(_node_slab_partials_kernel, inf=inf, block=block),
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
+        **_slab_compiler_params(interpret, ("parallel", "parallel", "arbitrary")),
     )
     return fn(
-        tile_slab.astype(jnp.int32), active.astype(jnp.int32),
+        run_start.astype(jnp.int32), run_len.astype(jnp.int32),
+        run_slab.astype(jnp.int32), active.astype(jnp.int32),
         val, col_s, lb, ub,
     )
 
 
-def _node_candidates_scatter_slab_kernel(
-    slab_ref, act_ref,
-    val_ref, col_ref, ii_ref,
-    rmf_ref, rmc_ref, rxf_ref, rxc_ref, lhs_ref, rhs_ref,
-    lb_ref, ub_ref, bl_ref, bu_ref, *, int_eps, inf, block,
+def _node_slab_round_kernel(
+    st_ref, ln_ref, rs_ref, act_ref,
+    val_ref, col_ref, ii_ref, done_ref,
+    smf_ref, smc_ref, sxf_ref, sxc_ref,
+    lhs_ref, rhs_ref, lb_ref, ub_ref,
+    nlb_ref, nub_ref, ch_ref,
+    acc_l, acc_u, *, eps, int_eps, inf, block,
 ):
-    """Kernel E''' over a node batch: per-node candidates from completed
-    aggregates + per-slab scatter on a ``(B, T')`` grid; each node's
-    ``(1, S)`` accumulator window is initialized at its slab's first copy
-    and flushed once.  Converged nodes skip compute, leaving identity."""
+    """The fused slab-parallel round kernel over a node batch: ONE
+    instance's copies against B bound planes on a ``(B, run, tile)`` grid.
+    Same sweep protocol as the batched variant (scratch init -> compute +
+    scatter -> last-step in-window merge), with per-node bound windows,
+    per-node straddle aggregates and per-node changed flags."""
     b = pl.program_id(0)
-    i = pl.program_id(1)
-    prev = jnp.maximum(i - 1, 0)
-    first = jnp.where(i == 0, True, slab_ref[prev] != slab_ref[i])
+    rr = pl.program_id(1)
+    j = pl.program_id(2)
+    ln = ln_ref[rr]
+    act = act_ref[b] != 0
 
-    @pl.when(first)
+    @pl.when(j == 0)
     def _():
-        bl_ref[...] = jnp.full_like(bl_ref[...], -inf)
-        bu_ref[...] = jnp.full_like(bu_ref[...], inf)
+        acc_l[...] = jnp.full_like(acc_l[...], -inf)
+        acc_u[...] = jnp.full_like(acc_u[...], inf)
 
-    @pl.when(act_ref[b] != 0)
+    @pl.when((j < ln) & act)
     def _():
         val = val_ref[...]
         r, k = val.shape[-2:]
         val = val.reshape(r, k)
         col = col_ref[...].reshape(r, k)
         lb_g, ub_g = _gather_bounds_tile(col, lb_ref, ub_ref, block=block)
+        lmf, lmc, lxf, lxc = tile_row_aggregates(val, lb_g, ub_g, inf)
+        done = done_ref[...].reshape(r) != 0
+        rmf = jnp.where(done, lmf, smf_ref[...].reshape(r))
+        rmc = jnp.where(done, lmc, smc_ref[...].reshape(r))
+        rxf = jnp.where(done, lxf, sxf_ref[...].reshape(r))
+        rxc = jnp.where(done, lxc, sxc_ref[...].reshape(r))
         lcand, ucand = tile_candidates(
             val, lb_g, ub_g, ii_ref[...].reshape(r, k) != 0,
-            rmf_ref[...].reshape(r), rmc_ref[...].reshape(r),
-            rxf_ref[...].reshape(r), rxc_ref[...].reshape(r),
+            rmf, rmc, rxf, rxc,
             lhs_ref[...].reshape(r), rhs_ref[...].reshape(r), int_eps, inf,
         )
-        _scatter_tile(lcand, ucand, col, bl_ref, bu_ref, inf=inf, block=block)
+        _scatter_tile(lcand, ucand, col, acc_l, acc_u, inf=inf, block=block)
+
+    @pl.when(j == ln - 1)
+    def _():
+        lb, ub = lb_ref[...], ub_ref[...]
+        new_lb, new_ub, changed = bnd.apply_updates(
+            lb, ub, acc_l[...], acc_u[...], eps, inf
+        )
+        nlb_ref[...] = jnp.where(act, new_lb, lb)
+        nub_ref[...] = jnp.where(act, new_ub, ub)
+        ch_ref[...] = (changed & act).astype(jnp.int32).reshape(1, 1)
 
 
-def node_candidates_scatter_slab_tiles(
+def node_slab_round_tiles(
     val,
     col_s,
     is_int_g,
-    row_min_fin,
-    row_min_cnt,
-    row_max_fin,
-    row_max_cnt,
+    row_done,
+    str_min_fin,
+    str_min_cnt,
+    str_max_fin,
+    str_max_cnt,
     lhs_g,
     rhs_g,
-    tile_slab,
+    run_start,
+    run_len,
+    run_slab,
     active,
     lb,
     ub,
     slab: int,
+    max_run_len: int,
+    eps: float,
     int_eps: float,
     inf: float = INF,
     interpret: bool | None = None,
     block: int = LANE,
 ):
-    """Per-node candidates + slab-windowed column reduction: ``(T', R, K)``
-    slab-masked copies of ONE instance + ``(B, T', R)`` per-node completed
-    row aggregates + ``(B, n_pad_part)`` bound planes -> ``(B,
-    n_pad_part)`` best_l / best_u; inactive nodes produce identity rows."""
+    """The fused slab-parallel round over a node batch: ``(T'', R, K)``
+    slab-masked copies of ONE instance + ``(B, T'', R)`` per-node gathered
+    straddle aggregates (``str_*``) + shared ``(T'', R)`` ``row_done`` /
+    sides + ``(B, n_pad_part)`` per-node bound planes + ``(B,)`` active
+    mask -> updated ``(B, n_pad_part)`` bounds and ``(B, n_runs)`` changed
+    flags (OR-combine per node outside).  Per node the arithmetic is
+    exactly the batched variant at ``B == 1``; inactive nodes pass their
+    bounds through unchanged."""
     if interpret is None:
         interpret = _on_cpu()
     if slab % block:
@@ -1308,38 +1465,44 @@ def node_candidates_scatter_slab_tiles(
     from jax.experimental.pallas import tpu as pltpu
 
     t, r, k = val.shape
-    bsz = lb.shape[0]
+    bsz, n_pad_part = lb.shape
+    n_runs = run_start.shape[0]
     dtype = val.dtype
-    tile = pl.BlockSpec((1, r, k), lambda b, i, sl, act: (i, 0, 0))
-    row_tile = pl.BlockSpec((1, 1, r), lambda b, i, sl, act: (b, i, 0))
-    side_tile = pl.BlockSpec((1, r), lambda b, i, sl, act: (i, 0))
-    vec = pl.BlockSpec((1, slab), lambda b, i, sl, act: (b, sl[i]))
+    copy = lambda rr, j, st, ln: _run_tile_index(j, st, ln, rr)
+    tile = pl.BlockSpec((1, r, k), lambda b, rr, j, st, ln, rs, act: (copy(rr, j, st, ln), 0, 0))
+    row_tile = pl.BlockSpec((1, r), lambda b, rr, j, st, ln, rs, act: (copy(rr, j, st, ln), 0))
+    node_tile = pl.BlockSpec((1, 1, r), lambda b, rr, j, st, ln, rs, act: (b, copy(rr, j, st, ln), 0))
+    vec = pl.BlockSpec((1, slab), lambda b, rr, j, st, ln, rs, act: (b, rs[rr]))
+    flag = pl.BlockSpec((1, 1), lambda b, rr, j, st, ln, rs, act: (b, rr))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(bsz, t),
-        in_specs=[tile, tile, tile,
-                  row_tile, row_tile, row_tile, row_tile, side_tile, side_tile,
-                  vec, vec],
-        out_specs=[vec, vec],
+        num_scalar_prefetch=4,
+        grid=(bsz, n_runs, max_run_len),
+        in_specs=[tile, tile, tile, row_tile,
+                  node_tile, node_tile, node_tile, node_tile,
+                  row_tile, row_tile, vec, vec],
+        out_specs=[vec, vec, flag],
+        scratch_shapes=[pltpu.VMEM((1, slab), dtype), pltpu.VMEM((1, slab), dtype)],
     )
     out_shape = [
-        jax.ShapeDtypeStruct((bsz, lb.shape[1]), dtype),
-        jax.ShapeDtypeStruct((bsz, lb.shape[1]), dtype),
+        jax.ShapeDtypeStruct((bsz, n_pad_part), dtype),
+        jax.ShapeDtypeStruct((bsz, n_pad_part), dtype),
+        jax.ShapeDtypeStruct((bsz, n_runs), jnp.int32),
     ]
     fn = pl.pallas_call(
         functools.partial(
-            _node_candidates_scatter_slab_kernel,
-            int_eps=int_eps, inf=inf, block=block,
+            _node_slab_round_kernel, eps=eps, int_eps=int_eps, inf=inf, block=block
         ),
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
+        **_slab_compiler_params(interpret, ("parallel", "parallel", "arbitrary")),
     )
     return fn(
-        tile_slab.astype(jnp.int32), active.astype(jnp.int32),
-        val, col_s, is_int_g.astype(jnp.int32),
-        row_min_fin, row_min_cnt, row_max_fin, row_max_cnt, lhs_g, rhs_g,
-        lb, ub,
+        run_start.astype(jnp.int32), run_len.astype(jnp.int32),
+        run_slab.astype(jnp.int32), active.astype(jnp.int32),
+        val, col_s, is_int_g.astype(jnp.int32), row_done,
+        str_min_fin, str_min_cnt, str_max_fin, str_max_cnt,
+        lhs_g, rhs_g, lb, ub,
     )
 
 

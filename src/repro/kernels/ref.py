@@ -71,6 +71,12 @@ def candidates_tiles_ref(
 
     Returns:
       (lcand, ucand): (T, R, K); invalid entries at -inf/+inf sentinels.
+
+    Candidates use the same division-first form as the kernels --
+    ``(side - row_sum) / a + bound`` instead of dividing the explicit
+    residual -- so that no backend can contract a step into an FMA and
+    kernel-vs-oracle comparisons stay bitwise in every compilation
+    context (see ``prop_round.tile_candidates``).
     """
     pos = val > 0
     pad = val == 0
@@ -78,48 +84,34 @@ def candidates_tiles_ref(
     b_max = jnp.where(pos, ub_g, lb_g)
     min_is_inf = (jnp.abs(b_min) >= inf) & ~pad
     max_is_inf = (jnp.abs(b_max) >= inf) & ~pad
-    c_min = jnp.where(min_is_inf | pad, 0.0, val * b_min)
-    c_max = jnp.where(max_is_inf | pad, 0.0, val * b_max)
 
     rmf = row_min_fin[..., None]
     rmc = row_min_cnt[..., None]
     rxf = row_max_fin[..., None]
     rxc = row_max_cnt[..., None]
 
-    # Residual activities with the §3.4 single-infinity rule.
-    min_res = jnp.where(
-        min_is_inf,
-        jnp.where(rmc == 1, rmf, -inf),
-        jnp.where(rmc == 0, rmf - c_min, -inf),
-    )
-    max_res = jnp.where(
-        max_is_inf,
-        jnp.where(rxc == 1, rxf, inf),
-        jnp.where(rxc == 0, rxf - c_max, inf),
-    )
+    # Residual usable at this entry (§3.4 single-infinity rule): all
+    # contributions finite and the row sum complete, or exactly this
+    # entry's bound infinite so the sum over the others IS the residual.
+    ok_min = jnp.where(min_is_inf, rmc == 1, rmc == 0)
+    ok_max = jnp.where(max_is_inf, rxc == 1, rxc == 0)
+    inc_min = jnp.where(min_is_inf | pad, 0.0, b_min)
+    inc_max = jnp.where(max_is_inf | pad, 0.0, b_max)
 
     lhs_b = lhs_g[..., None]
     rhs_b = rhs_g[..., None]
     safe_a = jnp.where(pad, 1.0, val)
-    num_l = jnp.where(pos, lhs_b - max_res, rhs_b - min_res)
-    num_u = jnp.where(pos, rhs_b - min_res, lhs_b - max_res)
-    lcand = num_l / safe_a
-    ucand = num_u / safe_a
+    q_min = (rhs_b - rmf) / safe_a + inc_min
+    q_max = (lhs_b - rxf) / safe_a + inc_max
+    lcand = jnp.where(pos, q_max, q_min)
+    ucand = jnp.where(pos, q_min, q_max)
 
     valid_l = (
-        jnp.where(
-            pos,
-            (lhs_b > -inf) & (max_res < inf),
-            (rhs_b < inf) & (min_res > -inf),
-        )
+        jnp.where(pos, (lhs_b > -inf) & ok_max, (rhs_b < inf) & ok_min)
         & ~pad
     )
     valid_u = (
-        jnp.where(
-            pos,
-            (rhs_b < inf) & (min_res > -inf),
-            (lhs_b > -inf) & (max_res < inf),
-        )
+        jnp.where(pos, (rhs_b < inf) & ok_min, (lhs_b > -inf) & ok_max)
         & ~pad
     )
     lcand = jnp.where(valid_l, jnp.clip(lcand, -inf, inf), -inf)
@@ -268,35 +260,92 @@ def node_fused_scatter_round_ref(
     return jax.vmap(fn)(lb, ub)
 
 
-def partitioned_round_ref(
-    val, col_s, tile_slab, chunk_row, is_int_g, lhs_g, rhs_g, lb_p, ub_p,
-    num_rows: int, slab: int, n_pad_part: int, int_eps: float, inf: float = INF,
-):
-    """Slab oracle: one round over a column-slab partitioned tile stream.
-
-    Defines the exact semantics of the partitioned kernels (A'''/E''' in
-    ``prop_round.py``) at the data level: the ``(T', R, K)`` slab-masked
-    copies carry slab-LOCAL columns (``col_s``; global id ``col_s +
-    tile_slab * slab``), per-copy activity partials are segment-combined
-    over ``chunk_row`` (rows split across slabs complete here -- the
-    summation grouping the partitioned engine commits to), candidates come
-    from the completed aggregates, and the column reduction runs over
-    global padded ids.  ``lb_p``/``ub_p`` are ``(n_pad_part,)`` bounds
-    padded to the slab grid; ``num_rows`` is the combine's segment count
-    (``m + 1`` single-instance, ``m_total + 1`` batched).  Returns
-    ``(n_pad_part,)`` best_l / best_u with sentinel identities."""
-    col_g = col_s + tile_slab[:, None, None] * jnp.int32(slab)
-    lb_g = lb_p[col_g]
-    ub_g = ub_p[col_g]
-    mf, mc, xf, xc = activities_tiles_ref(val, lb_g, ub_g, inf)
-    flat = chunk_row.reshape(-1)
-    seg = lambda x: jax.ops.segment_sum(x.reshape(-1), flat, num_segments=num_rows)
-    g = lambda x: seg(x)[chunk_row]
-    lcand, ucand = candidates_tiles_ref(
-        val, lb_g, ub_g, is_int_g, g(mf), g(mc), g(xf), g(xc),
-        lhs_g, rhs_g, int_eps, inf,
+def _partitioned_gathered_bounds(part, lbf, ubf, val, col_s, tile_inst, tile_slab):
+    """Bounds of a slab-partitioned copy stream gathered from the flattened
+    ``(B * n_pad_part,)`` plane via each copy's global window base."""
+    base = tile_inst.astype(jnp.int32) * jnp.int32(part.n_pad_part) + (
+        tile_slab.astype(jnp.int32) * jnp.int32(part.slab)
     )
-    return scatter_round_ref(lcand, ucand, col_g, n_pad_part, inf)
+    col_g = col_s + base[:, None, None]
+    return lbf[col_g], ubf[col_g], col_g
+
+
+def partitioned_round_ref(part, lb_p, ub_p, int_eps: float, inf: float = INF):
+    """Slab oracle: one round over a chunk-granularity slab partition.
+
+    Defines the exact semantics of the slab-parallel fused kernels
+    (``*_slab_partials_tiles`` / ``*_slab_round_tiles`` in
+    ``prop_round.py``) at the data level.  ``part`` is a
+    ``SlabPartition``-shaped record (duck-typed); ``lb_p``/``ub_p`` are
+    ``(B, n_pad)`` planes for any ``n_pad <= n_pad_part`` (padded to the
+    slab grid here).  Per copy: local activity partials; straddle rows
+    (``row_done == 0``) replace their local partial with the completed
+    aggregate segment-summed over the sub-stream's ``a_slot`` table --
+    exactly the summation grouping the engine's out-of-band combine
+    commits to, so complete rows' aggregates are the untouched local sums
+    and bitwise comparisons hold.  Candidates come from the selected
+    aggregates; the column reduction runs over global padded ids, via the
+    build-time rectangle-gather schedule (``col_slots``) when present.
+    Returns ``(B, n_pad_part)`` best_l / best_u with sentinel identities."""
+    bsz, n_pad = lb_p.shape
+    dt = lb_p.dtype
+    extra = part.n_pad_part - n_pad
+    if extra:
+        z = jnp.zeros((bsz, extra), dt)
+        lb_p = jnp.concatenate([lb_p, z], axis=1)
+        ub_p = jnp.concatenate([ub_p, z], axis=1)
+    lbf, ubf = lb_p.reshape(-1), ub_p.reshape(-1)
+
+    lb_g, ub_g, col_g = _partitioned_gathered_bounds(
+        part, lbf, ubf, part.val, part.col_s, part.tile_inst, part.tile_slab
+    )
+    mf, mc, xf, xc = activities_tiles_ref(part.val, lb_g, ub_g, inf)
+
+    if int(part.a_val.shape[0]):
+        a_lb, a_ub, _ = _partitioned_gathered_bounds(
+            part, lbf, ubf, part.a_val, part.a_col_s,
+            part.a_tile_inst, part.a_tile_slab,
+        )
+        amf, amc, axf, axc = activities_tiles_ref(part.a_val, a_lb, a_ub, inf)
+        slot = part.a_slot.reshape(-1)
+        nseg = part.n_straddle + 1
+        tab = lambda x: jax.ops.segment_sum(x.reshape(-1), slot, num_segments=nseg)
+        done = part.row_done != 0
+        sel = lambda local, t: jnp.where(done, local, tab(t)[part.agg_slot])
+        rmf, rmc = sel(mf, amf), sel(mc, amc)
+        rxf, rxc = sel(xf, axf), sel(xc, axc)
+    else:
+        rmf, rmc, rxf, rxc = mf, mc, xf, xc
+
+    lcand, ucand = candidates_tiles_ref(
+        part.val, lb_g, ub_g, part.ii_g != 0, rmf, rmc, rxf, rxc,
+        part.lhs_g, part.rhs_g, int_eps, inf,
+    )
+    if part.col_slots is not None:
+        # Rectangle-gather reduction: one gather + row-wise max/min over the
+        # build-time per-column slot lists (sentinel slot -> the appended
+        # -inf/+inf identity element).  Bitwise-equal to the segment ops --
+        # min/max are grouping-independent.
+        fl = jnp.concatenate([lcand.reshape(-1), jnp.full((1,), -inf, dt)])
+        fu = jnp.concatenate([ucand.reshape(-1), jnp.full((1,), inf, dt)])
+        best_l = fl[part.col_slots].max(axis=1)
+        best_u = fu[part.col_slots].min(axis=1)
+        best_l = jnp.maximum(best_l, -inf).reshape(bsz, part.n_pad_part)
+        best_u = jnp.minimum(best_u, inf).reshape(bsz, part.n_pad_part)
+        return best_l, best_u
+    return batched_scatter_round_ref(
+        lcand, ucand, col_g, bsz, part.n_pad_part, inf
+    )
+
+
+def node_partitioned_round_ref(part, lb_p, ub_p, int_eps: float, inf: float = INF):
+    """Node-batch slab oracle: ONE instance's slab partition broadcast over
+    ``(B, n_pad)`` per-node bound planes.  Per node this is exactly
+    :func:`partitioned_round_ref` at ``B == 1``, vmapped over the node
+    axis; returns ``(B, n_pad_part)`` best_l / best_u."""
+    fn = lambda l, u: partitioned_round_ref(part, l[None], u[None], int_eps, inf)
+    bl, bu = jax.vmap(fn)(lb_p, ub_p)
+    return bl[:, 0], bu[:, 0]
 
 
 def batched_candidates_scatter_round_ref(

@@ -95,37 +95,133 @@ def test_partition_is_cached_per_slab_width():
 # ---------------------------------------------------------------------------
 
 
+def _oracle_round_single(part, lb, ub, n_pad, eps=1e-9, int_eps=1e-6):
+    """One ``(n_pad,)`` plane through the jnp slab oracle + shared merge."""
+    from repro.core import bounds as bnd
+
+    best_l, best_u = kref.partitioned_round_ref(
+        part, lb[None, :], ub[None, :], int_eps
+    )
+    return bnd.apply_updates(lb, ub, best_l[0, :n_pad], best_u[0, :n_pad], eps)
+
+
+# 128/256 exercise 3- and 2-slab grids with straddling copies; 512 covers
+# the whole padded domain (n_pad = 384), forcing the single-slab degenerate
+# partition through the same 2D (run, tile) kernels.
+@pytest.mark.parametrize("slab_w", [128, 256, 512])
 @pytest.mark.parametrize("seed,tile", [(0, (4, 16)), (7, (2, 8)), (11, (8, 32))])
-def test_partitioned_round_matches_slab_oracle(seed, tile):
+def test_partitioned_round_matches_slab_oracle(seed, tile, slab_w):
     p = make_mixed(m=30, n=280, seed=seed)
     prep = prepare_block_ell(p, *tile)
-    part = prep.slab_partition(128)
-    dt = prep.d.val.dtype
-    extra = part.n_pad_part - prep.n_pad
-    lbp = jnp.concatenate([prep.lb0, jnp.zeros((extra,), dt)])
-    ubp = jnp.concatenate([prep.ub0, jnp.zeros((extra,), dt)])
+    part = prep.slab_partition(slab_w)
+    assert part.n_slabs == -(-prep.n_pad // slab_w)
+    if slab_w >= prep.n_pad:
+        assert part.n_slabs == 1
 
-    one = jnp.ones((1,), jnp.int32)
-    lb2, ub2 = lbp.reshape(1, -1), ubp.reshape(1, -1)
-    mf, mc, xf, xc = kern.batched_activities_slab_tiles(
-        part.val, part.col_s, part.tile_inst, part.tile_slab, one,
-        lb2, ub2, part.slab, interpret=True,
+    got_l, got_u, ch = kops._partitioned_pallas_round(
+        part, prep.lb0[None, :], prep.ub0[None, :], jnp.ones((1,), jnp.int32),
+        node=False, eps=1e-9, int_eps=1e-6, inf=kref.INF, interpret=True,
     )
-    rmf, rmc, rxf, rxc = kops._combine_copy_partials(
-        part, prep.m + 1, mf, mc, xf, xc
+    want_lb, want_ub, want_ch = _oracle_round_single(
+        part, prep.lb0, prep.ub0, prep.n_pad
     )
-    best_l, best_u = kern.batched_candidates_scatter_slab_tiles(
-        part.val, part.col_s, part.ii_g, rmf, rmc, rxf, rxc,
-        part.lhs_g, part.rhs_g, part.tile_inst, part.tile_slab, one,
-        lb2, ub2, part.slab, int_eps=1e-6, interpret=True,
+    np.testing.assert_array_equal(np.asarray(got_l[0]), np.asarray(want_lb))
+    np.testing.assert_array_equal(np.asarray(got_u[0]), np.asarray(want_ub))
+    assert bool(ch[0]) == bool(want_ch)
+
+
+def test_partitioned_round_straddling_every_boundary_matches_oracle():
+    """Dense knapsack rows cross EVERY slab boundary: all rows ride the
+    straddle sub-stream and the out-of-band aggregate table, and the fused
+    round still lands bitwise on the oracle."""
+    p = make_knapsack(n=280, m=8, seed=5)
+    prep = prepare_block_ell(p, 2, 8)
+    part = prep.slab_partition(128)
+    assert part.n_slabs >= 3 and part.has_straddle
+    # Straddle copies appear in every slab window (every boundary crossed).
+    assert set(np.unique(np.asarray(part.a_tile_slab))) == set(range(part.n_slabs))
+
+    got_l, got_u, ch = kops._partitioned_pallas_round(
+        part, prep.lb0[None, :], prep.ub0[None, :], jnp.ones((1,), jnp.int32),
+        node=False, eps=1e-9, int_eps=1e-6, inf=kref.INF, interpret=True,
     )
-    want_l, want_u = kref.partitioned_round_ref(
-        part.val, part.col_s, part.tile_slab, part.chunk_row,
-        part.ii_g != 0, part.lhs_g, part.rhs_g, lbp, ubp,
-        prep.m + 1, part.slab, part.n_pad_part, int_eps=1e-6,
+    want_lb, want_ub, want_ch = _oracle_round_single(
+        part, prep.lb0, prep.ub0, prep.n_pad
     )
-    np.testing.assert_array_equal(np.asarray(best_l.reshape(-1)), np.asarray(want_l))
-    np.testing.assert_array_equal(np.asarray(best_u.reshape(-1)), np.asarray(want_u))
+    np.testing.assert_array_equal(np.asarray(got_l[0]), np.asarray(want_lb))
+    np.testing.assert_array_equal(np.asarray(got_u[0]), np.asarray(want_ub))
+    assert bool(ch[0]) == bool(want_ch)
+
+
+@pytest.mark.parametrize("slab_w", [128, 256])
+def test_batched_partitioned_round_matches_slab_oracle(slab_w):
+    """Multi-instance copies route through run_inst to per-instance plane
+    rows; converged (inactive) instances freeze in-kernel."""
+    from repro.core import bounds as bnd
+
+    problems = [make_mixed(m=25, n=260, seed=s) for s in range(3)]
+    batches = kops.packed_problems(problems, 4, 32)
+    assert len(batches) == 1
+    prep = kops.prepare_problem_batch(batches[0])
+    part = prep.slab_partition(slab_w)
+    assert part.batch == 3
+
+    active = jnp.asarray([1, 0, 1], jnp.int32)
+    lb, ub = prep.d.lb0, prep.d.ub0
+    got_l, got_u, ch = kops._partitioned_pallas_round(
+        part, lb, ub, active,
+        node=False, eps=1e-9, int_eps=1e-6, inf=kref.INF, interpret=True,
+    )
+    best_l, best_u = kref.partitioned_round_ref(part, lb, ub, 1e-6)
+    for i in range(3):
+        if not int(active[i]):
+            np.testing.assert_array_equal(np.asarray(got_l[i]), np.asarray(lb[i]))
+            np.testing.assert_array_equal(np.asarray(got_u[i]), np.asarray(ub[i]))
+            assert not bool(ch[i])
+            continue
+        want_lb, want_ub, want_ch = bnd.apply_updates(
+            lb[i], ub[i], best_l[i, : prep.n_pad], best_u[i, : prep.n_pad], 1e-9
+        )
+        np.testing.assert_array_equal(np.asarray(got_l[i]), np.asarray(want_lb))
+        np.testing.assert_array_equal(np.asarray(got_u[i]), np.asarray(want_ub))
+        assert bool(ch[i]) == bool(want_ch)
+
+
+@pytest.mark.parametrize("slab_w", [128, 512])
+def test_node_partitioned_round_matches_node_oracle(slab_w):
+    """ONE instance's partition against (B, n_pad) per-node planes on the
+    (node, run, tile) grid: active nodes land bitwise on the vmapped
+    oracle, inactive nodes freeze."""
+    from repro.core import bounds as bnd
+
+    root = make_mixed(m=30, n=280, seed=3)
+    prep = prepare_block_ell(root, 4, 16)
+    part = prep.slab_partition(slab_w)
+    lb0, ub0 = np.asarray(prep.lb0), np.asarray(prep.ub0)
+    lb = np.repeat(lb0[None], 3, axis=0)
+    ub = np.repeat(ub0[None], 3, axis=0)
+    free = np.flatnonzero(
+        np.asarray(root.is_int) & (lb0[: root.n] < ub0[: root.n])
+    )
+    ub[1][free[0]] = lb0[free[0]]  # node 1: branch x[free[0]] down
+    lb, ub = jnp.asarray(lb), jnp.asarray(ub)
+
+    active = jnp.asarray([1, 1, 0], jnp.int32)
+    got_l, got_u, ch = kops._partitioned_pallas_round(
+        part, lb, ub, active,
+        node=True, eps=1e-9, int_eps=1e-6, inf=kref.INF, interpret=True,
+    )
+    best_l, best_u = kref.node_partitioned_round_ref(part, lb, ub, 1e-6)
+    for i in range(2):
+        want_lb, want_ub, want_ch = bnd.apply_updates(
+            lb[i], ub[i], best_l[i, : prep.n_pad], best_u[i, : prep.n_pad], 1e-9
+        )
+        np.testing.assert_array_equal(np.asarray(got_l[i]), np.asarray(want_lb))
+        np.testing.assert_array_equal(np.asarray(got_u[i]), np.asarray(want_ub))
+        assert bool(ch[i]) == bool(want_ch)
+    np.testing.assert_array_equal(np.asarray(got_l[2]), np.asarray(lb[2]))
+    np.testing.assert_array_equal(np.asarray(got_u[2]), np.asarray(ub[2]))
+    assert not bool(ch[2])
 
 
 def test_apply_updates_slab_matches_shared_semantics(rng):
@@ -204,6 +300,21 @@ def test_auto_selects_engine_on_both_sides_of_the_cliff():
     assert kops._resolve_scatter("auto", prep) == "partitioned"
     with pytest.raises(ValueError):
         kops._resolve_scatter("bogus", prep)
+
+
+def test_auto_large_scatter_env_override(monkeypatch):
+    """REPRO_AUTO_LARGE_SCATTER reroutes only the large-instance leg of
+    scatter='auto' (escape hatch for re-validating on new hardware)."""
+    big = make_banded(n=SCATTER_MAX_NPAD + 200, m=48, row_nnz=6, band=512, seed=0)
+    prep = prepare_block_ell(big, 8, 8)
+    assert kops._resolve_scatter("auto", prep) == "partitioned"
+    monkeypatch.setenv(kops.AUTO_LARGE_SCATTER_ENV, "segment")
+    assert kops._resolve_scatter("auto", prep) == "segment"
+    small = prepare_block_ell(make_mixed(m=10, n=50, seed=0), 4, 16)
+    assert kops._resolve_scatter("auto", small) == "fused"  # unaffected
+    monkeypatch.setenv(kops.AUTO_LARGE_SCATTER_ENV, "bogus")
+    with pytest.raises(ValueError):
+        kops._resolve_scatter("auto", prep)
 
 
 def test_default_slab_width_is_balanced():
