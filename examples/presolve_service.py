@@ -1,11 +1,16 @@
-"""Presolve-service example: BATCHED domain propagation of many MIP
-instances in a handful of device dispatches -- the "serving" shape of the
-paper's technique (a presolver processes streams of subproblems).
+"""Presolve-service example: a CONTINUOUS-BATCHING propagation service
+(``repro.core.PropagationService``) serving a Poisson request stream -- the
+"serving" shape of the paper's technique (a presolver processes streams of
+subproblems arriving at unpredictable times).
 
-The request stream is packed with ``pack_problems`` (instances bucketed by
-padded shape, one super-tile per bucket), each bucket's fixed point runs as
-ONE dispatch with a per-instance convergence mask, and redundancy /
-infeasibility verdicts are layered on top per instance.
+Instances stream through per-bucket device-resident super-tiles: each
+request is admitted into a free slot via a device-side scatter, converged
+instances retire (async readback) while co-resident instances keep
+iterating, and freed slots are backfilled from the queue without a single
+recompile (all engines are AOT-warmed at construction).  Contrast with the
+fixed-batch shape (``propagate_batch``), which must collect the whole batch
+before dispatching and holds every result until the slowest instance
+converges.
 
   PYTHONPATH=src python examples/presolve_service.py
 """
@@ -16,7 +21,7 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.core import analyze_constraints, batch_stats, pack_problems, propagate_batch
+from repro.core import PropagationService, analyze_constraints
 from repro.core.propagator import DeviceProblem
 from repro.data import make_bin_packing, make_knapsack, make_mixed, make_set_cover
 
@@ -33,25 +38,51 @@ REQUESTS = [
     ("mixed_5", make_mixed(m=320, n=240, seed=8)),
 ]
 
+MEAN_ARRIVAL_S = 0.003  # Poisson request stream: ~330 requests/sec offered
+
 names = [nm for nm, _ in REQUESTS]
 problems = [p for _, p in REQUESTS]
 
-stats = batch_stats(pack_problems(problems))
+# Size the slot pool from the sample population: one bucket per padded
+# column class, split into tile-count quantiles so small instances get
+# tight slots.  Construction AOT-compiles every step/admit engine -- the
+# serving loop below never compiles.
+t0 = time.perf_counter()
+svc = PropagationService.from_problems(
+    problems, slots=2, size_classes=2, use_pallas=False
+)
 print(
-    f"packed {stats['instances']} instances into {stats['buckets']} buckets "
-    f"{stats['bucket_shapes']} (padding {stats['padding_fraction']:.1%})"
+    f"service up in {time.perf_counter() - t0:.1f}s: "
+    + ", ".join(
+        f"bucket[n_pad={b['n_pad']} tiles={b['slot_tiles']}x{b['slots']}slots]"
+        for b in svc.stats()["buckets"]
+    )
 )
 
-# Warm-up: compile one batched fixed point per bucket (excluded from serving
-# time, like the paper's init phase).
-propagate_batch(problems, driver="device_loop")
+# Background device loop: pumps admissions/steps/retirements continuously;
+# the client thread only submits and waits on tickets.
+with svc:
+    rng = np.random.default_rng(0)
+    tickets = []
+    t0 = time.perf_counter()
+    for name, p in REQUESTS:
+        time.sleep(rng.exponential(MEAN_ARRIVAL_S))
+        tickets.append(svc.submit(p))
+    results = [tk.result(timeout=60.0) for tk in tickets]
+    wall = time.perf_counter() - t0
 
-t0 = time.perf_counter()
-results = propagate_batch(problems, driver="device_loop")
-dt = time.perf_counter() - t0
+lat = np.asarray([tk.latency() for tk in tickets]) * 1e3
 print(
-    f"batched propagation: {len(problems)} instances in {dt * 1e3:.1f} ms "
-    f"({len(problems) / dt:.0f} instances/sec)\n"
+    f"served {len(tickets)} requests in {wall * 1e3:.1f} ms wall "
+    f"({len(tickets) / wall:.0f} instances/sec with Poisson arrivals)\n"
+    f"latency p50={np.percentile(lat, 50):.1f}ms "
+    f"p95={np.percentile(lat, 95):.1f}ms max={lat.max():.1f}ms"
+)
+st = svc.stats()
+print(
+    f"retired={st['retired']} pending={st['pending']} "
+    f"mean occupancy={np.mean([b['mean_occupancy'] for b in st['buckets']]):.2f} "
+    f"engine cache: {st['engine_cache']}\n"
 )
 
 print(f"{'instance':12s} {'m':>6s} {'n':>6s} {'nnz':>8s} {'rounds':>6s} "

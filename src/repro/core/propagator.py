@@ -239,6 +239,51 @@ def _device_fixed_point(round_fn, lb0, ub0, max_rounds: int, unroll: int = 1):
     return lb, ub, changed, rounds
 
 
+def batched_step_rounds(
+    round_fn, lb, ub, active, last_changed, rounds, max_rounds: int,
+    budget: int | None = None,
+):
+    """Run up to ``budget`` rounds of a batched fixed point and return the
+    carried state -- the RESUMABLE core of :func:`batched_fixed_point`.
+
+    ``round_fn(lb, ub, active) -> (lb, ub, changed)`` as there; the state
+    quintuple ``(lb, ub, active, last_changed, rounds)`` is exactly the
+    fixed point's loop carry, so feeding one call's output to the next
+    continues the per-instance round trajectories bit-for-bit -- where the
+    step boundary falls cannot change any instance's arithmetic, because a
+    round only reads the instance's own tiles and bounds.  The loop exits
+    early when every instance converged, so a step over an all-converged
+    batch costs one predicate evaluation, not ``budget`` rounds.
+
+    This is the continuous-batching service's device step
+    (``core.service``): each pump runs a *bounded* number of rounds per
+    bucket -- the per-slot round budget -- then returns control to the host
+    so converged slots retire and free slots admit, without any one slow
+    instance holding the bucket hostage.  ``budget=None`` (run to
+    convergence) makes :func:`batched_fixed_point` a single call of this.
+    """
+
+    def body(state):
+        lb, ub, active, last_changed, rounds, k = state
+        lb, ub, changed = round_fn(lb, ub, active)
+        rounds = rounds + active.astype(jnp.int32)
+        last_changed = jnp.where(active, changed, last_changed)
+        active = active & changed & (rounds < max_rounds)
+        return lb, ub, active, last_changed, rounds, k + 1
+
+    def cond(state):
+        go = jnp.any(state[2])
+        if budget is not None:
+            go = go & (state[5] < budget)
+        return go
+
+    init = (lb, ub, active, last_changed, rounds, jnp.int32(0))
+    lb, ub, active, last_changed, rounds, _ = jax.lax.while_loop(
+        cond, body, init
+    )
+    return lb, ub, active, last_changed, rounds
+
+
 def batched_fixed_point(round_fn, lb0, ub0, max_rounds: int, active0=None):
     """Batched while_loop fixed point with a per-instance convergence mask.
 
@@ -257,19 +302,10 @@ def batched_fixed_point(round_fn, lb0, ub0, max_rounds: int, active0=None):
     if active0 is None:
         active0 = jnp.ones((bsz,), dtype=bool)
 
-    def body(state):
-        lb, ub, active, last_changed, rounds = state
-        lb, ub, changed = round_fn(lb, ub, active)
-        rounds = rounds + active.astype(jnp.int32)
-        last_changed = jnp.where(active, changed, last_changed)
-        active = active & changed & (rounds < max_rounds)
-        return lb, ub, active, last_changed, rounds
-
-    def cond(state):
-        return jnp.any(state[2])
-
-    init = (lb0, ub0, active0, active0, jnp.zeros((bsz,), jnp.int32))
-    lb, ub, _, last_changed, rounds = jax.lax.while_loop(cond, body, init)
+    lb, ub, _, last_changed, rounds = batched_step_rounds(
+        round_fn, lb0, ub0, active0, active0,
+        jnp.zeros((bsz,), jnp.int32), max_rounds, budget=None,
+    )
     return lb, ub, rounds, ~last_changed
 
 

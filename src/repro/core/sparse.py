@@ -471,10 +471,35 @@ def pack_problems(
 
 
 def batch_stats(batches: Sequence[ProblemBatch]) -> dict:
-    """Packing diagnostics: bucket shapes, fill, padding overhead."""
+    """Packing diagnostics: bucket shapes, fill, padding overhead.
+
+    ``per_bucket`` is the occupancy/padding histogram of each bucket's
+    super-tile (one entry per bucket, same order as ``batches``): instance
+    count, tile count, value slots used vs padded, and the fill fraction
+    ``nnz / padded_slots`` (so "at least half full" is ``fill >= 0.5``).
+    The service's stats endpoint surfaces the same histogram shape for its
+    resident slot buckets (``core.service.PropagationService.stats``)."""
     total = sum(b.size for b in batches)
     slots = sum(b.ell.val.size for b in batches)
     nnz = sum(int((b.ell.val != 0).sum()) for b in batches)
+    per_bucket = []
+    for b in batches:
+        b_slots = int(b.ell.val.size)
+        b_nnz = int((b.ell.val != 0).sum())
+        fill = b_nnz / b_slots if b_slots else 0.0
+        per_bucket.append(
+            {
+                "n_pad": b.n_pad,
+                "instances": b.size,
+                "tiles": b.ell.num_tiles,
+                "tile_rows": b.ell.tile_rows,
+                "tile_width": b.ell.tile_width,
+                "nnz": b_nnz,
+                "padded_slots": b_slots,
+                "fill": fill,
+                "padding_fraction": 1.0 - fill,
+            }
+        )
     return {
         "instances": total,
         "buckets": len(batches),
@@ -483,7 +508,171 @@ def batch_stats(batches: Sequence[ProblemBatch]) -> dict:
         "padded_slots": slots,
         "nnz": nnz,
         "padding_fraction": 1.0 - (nnz / slots if slots else 0.0),
+        "per_bucket": per_bucket,
     }
+
+
+# ---------------------------------------------------------------------------
+# Slot-granular packing (the continuous-batching serving shape)
+# ---------------------------------------------------------------------------
+
+
+class SlotPayload(NamedTuple):
+    """One instance packed to a FIXED slot shape, ready for device scatter.
+
+    The continuous-batching service (``core.service``) keeps per-bucket
+    super-tiles resident on device and admits instances one slot at a time:
+    instead of repacking the whole batch (``pack_problems``), an arriving
+    instance is converted host-side into this fixed-shape payload and
+    scattered into a free slot's tile/bound windows in ONE device op.  All
+    row/column ids stay SLOT-LOCAL -- the admission scatter adds the slot's
+    global offsets (``slot * n_pad`` columns, ``slot * (slot_rows + 1)``
+    rows) on device, so one payload can be admitted into any slot of any
+    bucket with matching shape.
+
+    Conventions match :class:`BatchedBlockEll`: ``val == 0`` marks padding,
+    padding chunks address the instance's own dummy row (local id ``m``),
+    sides/bounds of unused rows/columns are zero-filled (trivially
+    converged).  ``lhs_c``/``rhs_c`` are the per-chunk side gathers
+    (``lhs1[chunk_row]``) hoisted at pack time, like ``prepare_*`` does for
+    whole batches; ``ii`` is the per-nonzero integrality gather.
+    """
+
+    val: np.ndarray        # (slot_tiles, R, K) float; 0 == padding
+    col: np.ndarray        # (slot_tiles, R, K) int32 slot-local columns
+    chunk_row: np.ndarray  # (slot_tiles, R) int32 slot-local rows; m == dummy
+    ii: np.ndarray         # (slot_tiles, R, K) int32: is_int[col], 0 at padding
+    lhs_c: np.ndarray      # (slot_tiles, R) per-chunk lhs (0 at dummy rows)
+    rhs_c: np.ndarray      # (slot_tiles, R) per-chunk rhs
+    lb: np.ndarray         # (n_pad,) zero-padded initial bounds
+    ub: np.ndarray         # (n_pad,)
+    m: int                 # original row count (dummy row == m)
+    n: int                 # original column count
+    nnz: int               # nonzeros packed
+    tiles_used: int        # leading tiles actually carrying the instance
+    max_row_nnz: int       # longest row (chunk-splitting diagnostic)
+
+    @property
+    def slot_tiles(self) -> int:
+        return int(self.val.shape[0])
+
+    @property
+    def n_pad(self) -> int:
+        return int(self.lb.shape[0])
+
+    def fill(self) -> float:
+        """Fraction of the slot's value slots carrying real nonzeros."""
+        return self.nnz / float(self.val.size) if self.val.size else 0.0
+
+
+def pack_into_slot(
+    p: Problem,
+    slot_tiles: int,
+    slot_rows: int,
+    n_pad: int,
+    tile_rows: int = 8,
+    tile_width: int = 128,
+    dtype=None,
+) -> SlotPayload:
+    """Pack ONE instance to a fixed slot shape (see :class:`SlotPayload`).
+
+    The instance's block-ELL stream is laid into the leading tiles of a
+    ``(slot_tiles, tile_rows, tile_width)`` window; trailing tiles stay
+    all-padding (their chunks address the dummy row, so they contribute
+    nothing to any round).  Raises if the instance exceeds the slot
+    capacity (``tiles``, ``rows`` or ``n_pad``) -- routing instances to a
+    bucket whose slots fit them is the caller's job
+    (``core.service.BucketSpec.admits``)."""
+    b = csr_to_block_ell(p.csr, tile_rows=tile_rows, tile_width=tile_width)
+    dt = np.dtype(dtype) if dtype is not None else b.val.dtype
+    if b.num_tiles > slot_tiles:
+        raise ValueError(
+            f"instance needs {b.num_tiles} tiles > slot capacity {slot_tiles}"
+        )
+    if p.m > slot_rows:
+        raise ValueError(f"instance has {p.m} rows > slot capacity {slot_rows}")
+    if p.n > n_pad:
+        raise ValueError(f"instance has {p.n} columns > slot width {n_pad}")
+
+    val = np.zeros((slot_tiles, tile_rows, tile_width), dtype=dt)
+    col = np.zeros((slot_tiles, tile_rows, tile_width), dtype=np.int32)
+    # All-padding chunks (both the packed stream's and the unused slot
+    # tail's) address the instance's own dummy row m, exactly like
+    # ``pack_problems`` -- so they never touch another slot's rows.
+    chunk_row = np.full((slot_tiles, tile_rows), p.m, dtype=np.int32)
+    t = b.num_tiles
+    val[:t] = b.val
+    col[:t] = b.col
+    chunk_row[:t] = b.chunk_row  # local rows; padding chunks already at m
+
+    ii = np.zeros((slot_tiles, tile_rows, tile_width), dtype=np.int32)
+    ii[:t] = p.is_int[b.col].astype(np.int32)
+    ii[val == 0] = 0
+
+    # Per-chunk side gathers with the dummy row's sides pinned to 0.0 (the
+    # ``pack_problems`` convention: dummy rows are trivially redundant).
+    lhs1 = np.concatenate([np.asarray(p.lhs, np.float64), [0.0]])
+    rhs1 = np.concatenate([np.asarray(p.rhs, np.float64), [0.0]])
+    lhs_c = lhs1[chunk_row].astype(dt)
+    rhs_c = rhs1[chunk_row].astype(dt)
+
+    lb = np.zeros((n_pad,), dtype=dt)
+    ub = np.zeros((n_pad,), dtype=dt)
+    lb[: p.n] = p.lb
+    ub[: p.n] = p.ub
+
+    lengths = np.diff(p.csr.row_ptr)
+    return SlotPayload(
+        val=val,
+        col=col,
+        chunk_row=chunk_row,
+        ii=ii,
+        lhs_c=lhs_c,
+        rhs_c=rhs_c,
+        lb=lb,
+        ub=ub,
+        m=p.m,
+        n=p.n,
+        nnz=p.nnz,
+        tiles_used=t,
+        max_row_nnz=int(lengths.max()) if lengths.size else 0,
+    )
+
+
+def evict_slot(
+    slot_tiles: int,
+    slot_rows: int,
+    n_pad: int,
+    tile_rows: int = 8,
+    tile_width: int = 128,
+    dtype=np.float64,
+) -> SlotPayload:
+    """The all-padding payload that CLEARS a slot.
+
+    Scattering it through the same admission op zeroes the slot's tiles and
+    bounds and parks every chunk on the slot's dummy row (local id
+    ``slot_rows``), leaving the slot exactly as an empty bucket initializes
+    it.  Retirement itself doesn't need this -- a retired slot's stale
+    tiles are gated off by the occupancy mask and simply overwritten by the
+    next admission -- but explicit eviction keeps device state minimal when
+    a bucket idles, and gives tests a known-empty fixture."""
+    dt = np.dtype(dtype)
+    shape = (slot_tiles, tile_rows, tile_width)
+    return SlotPayload(
+        val=np.zeros(shape, dtype=dt),
+        col=np.zeros(shape, dtype=np.int32),
+        chunk_row=np.full((slot_tiles, tile_rows), slot_rows, dtype=np.int32),
+        ii=np.zeros(shape, dtype=np.int32),
+        lhs_c=np.zeros((slot_tiles, tile_rows), dtype=dt),
+        rhs_c=np.zeros((slot_tiles, tile_rows), dtype=dt),
+        lb=np.zeros((n_pad,), dtype=dt),
+        ub=np.zeros((n_pad,), dtype=dt),
+        m=slot_rows,
+        n=0,
+        nnz=0,
+        tiles_used=0,
+        max_row_nnz=0,
+    )
 
 
 def block_ell_stats(b: BlockEll) -> dict:

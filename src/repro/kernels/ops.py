@@ -57,6 +57,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import threading
 from collections import OrderedDict
 from typing import NamedTuple
 
@@ -506,6 +507,13 @@ class LRU:
     honoured only if every anchor is still the identical object.  Counts
     hits/misses for ``cache_info()``; ``on_evict`` lets dependent caches
     (compiled runners pinning a prep's device tiles) be purged with it.
+
+    THREAD-SAFE: every operation (including the hit/miss counters and the
+    eviction walk) holds one re-entrant lock, so the serving loop's
+    background admission worker and the device-loop thread can hit the
+    runner/pack caches concurrently (``core.service``).  ``on_evict`` hooks
+    run under the lock -- they only touch other LRUs, whose own re-entrant
+    locks keep the nesting safe.
     """
 
     def __init__(self, maxsize: int, on_evict=None):
@@ -514,41 +522,48 @@ class LRU:
         self.hits = 0
         self.misses = 0
         self._on_evict = on_evict
+        self._lock = threading.RLock()
 
     def get(self, key, anchors: tuple):
-        hit = self._d.get(key)
-        if hit is not None and all(a is b for a, b in zip(hit[0], anchors)):
-            self._d.move_to_end(key)
-            self.hits += 1
-            return hit[1]
-        self.misses += 1
-        return None
+        with self._lock:
+            hit = self._d.get(key)
+            if hit is not None and all(a is b for a, b in zip(hit[0], anchors)):
+                self._d.move_to_end(key)
+                self.hits += 1
+                return hit[1]
+            self.misses += 1
+            return None
 
     def put(self, key, anchors: tuple, value) -> None:
-        self._d[key] = (anchors, value)
-        while len(self._d) > self.maxsize:
-            _, (anchors_e, value_e) = self._d.popitem(last=False)
-            if self._on_evict is not None:
-                self._on_evict(anchors_e, value_e)
+        with self._lock:
+            self._d[key] = (anchors, value)
+            while len(self._d) > self.maxsize:
+                _, (anchors_e, value_e) = self._d.popitem(last=False)
+                if self._on_evict is not None:
+                    self._on_evict(anchors_e, value_e)
 
     def drop_where(self, pred) -> None:
         """Remove every entry whose ``(anchors, value)`` satisfies ``pred``."""
-        for key in [k for k, v in self._d.items() if pred(*v)]:
-            del self._d[key]
+        with self._lock:
+            for key in [k for k, v in self._d.items() if pred(*v)]:
+                del self._d[key]
 
     def clear(self) -> None:
-        self._d.clear()
+        with self._lock:
+            self._d.clear()
 
     def __len__(self) -> int:
-        return len(self._d)
+        with self._lock:
+            return len(self._d)
 
     def info(self) -> dict:
-        return {
-            "hits": self.hits,
-            "misses": self.misses,
-            "size": len(self._d),
-            "maxsize": self.maxsize,
-        }
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "size": len(self._d),
+                "maxsize": self.maxsize,
+            }
 
 
 @dataclasses.dataclass(frozen=True)

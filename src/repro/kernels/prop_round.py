@@ -761,6 +761,12 @@ def _batched_fused_scatter_kernel(
     gather/compute/scatter entirely (their accumulators stay at the
     reduction identity, so the merge kernel reports them unchanged) --
     finished instances become no-ops instead of blocking the batch.
+
+    The continuous-batching service (``repro.core.service``) reuses this
+    same mask as its SLOT-OCCUPANCY mask: an empty or retired slot is
+    simply an inactive instance, so its tiles skip all compute and its
+    stale accumulator rows stay at the identity.  No separate "empty
+    slot" machinery exists in the kernel.
     """
     i = pl.program_id(0)
     inst = inst_ref[i]
@@ -810,7 +816,9 @@ def batched_fused_scatter_round_tiles(
 
     Same per-instance semantics as :func:`fused_scatter_round_tiles`
     (requires every row of every instance to fit one chunk); inactive
-    instances produce identity accumulator rows."""
+    instances produce identity accumulator rows.  ``active`` doubles as
+    the propagation service's slot-occupancy mask -- see
+    :func:`batched_occupancy_round_tiles`."""
     if interpret is None:
         interpret = _on_cpu()
     if n_pad % block:
@@ -844,6 +852,45 @@ def batched_fused_scatter_round_tiles(
     return fn(
         tile_inst.astype(jnp.int32), active.astype(jnp.int32),
         val, col, is_int_g.astype(jnp.int32), lhs_g, rhs_g, lb, ub,
+    )
+
+
+def batched_occupancy_round_tiles(
+    val,
+    col,
+    is_int_g,
+    lhs_g,
+    rhs_g,
+    lb,
+    ub,
+    tile_inst,
+    occupied,
+    n_pad: int,
+    eps: float,
+    int_eps: float,
+    inf: float = INF,
+    interpret: bool | None = None,
+    block: int = LANE,
+):
+    """One full occupancy-masked round (candidates + scatter + merge) over a
+    slot-resident super-tile: ``(S*T, R, K)`` tile stream, ``(S, n_pad)``
+    bound plane, ``(S,)`` ``occupied`` mask -> updated bounds + per-slot
+    ``changed`` flags.
+
+    This is the round the continuous-batching service runs on its kernel
+    path.  ``occupied`` is the per-slot occupancy mask (an alias of the
+    batched kernels' ``active`` mask): free or retired slots cost no
+    gather/compute/scatter in the round kernel and pass through the merge
+    untouched, so admission and retirement never have to compact or
+    re-shape the resident state.  Requires the fused-path contract (every
+    row fits one chunk of width ``block``); multichunk buckets use the jnp
+    reference round instead."""
+    best_l, best_u = batched_fused_scatter_round_tiles(
+        val, col, is_int_g, lhs_g, rhs_g, lb, ub, tile_inst, occupied,
+        n_pad, int_eps, inf, interpret, block,
+    )
+    return apply_updates_batch_tiles(
+        lb, ub, best_l, best_u, occupied, eps, inf, interpret
     )
 
 
@@ -1595,7 +1642,9 @@ def apply_updates_batch_tiles(
     """Batched merge kernel: ``(B, n_pad)`` bounds x best candidates ->
     updated bounds + ``(B,)`` per-instance changed flags.  The bound buffers
     are donated (``input_output_aliases``); inactive instances pass through
-    untouched and report unchanged."""
+    untouched and report unchanged.  Like the round kernel, the ``active``
+    gate doubles as the service's slot-occupancy mask: retired/empty slots
+    keep their last bounds bit-for-bit and never flag a change."""
     if interpret is None:
         interpret = _on_cpu()
     bsz, n_pad = lb.shape

@@ -75,6 +75,32 @@ def test_pack_problems_flat_structure():
     assert stats["instances"] == 4 and stats["buckets"] == 1
 
 
+def test_batch_stats_per_bucket_histogram():
+    """Per-bucket occupancy/padding histogram: same shape the service's
+    stats endpoint surfaces for its resident buckets."""
+    probs = [
+        make_mixed(m=120, n=100, seed=0),
+        make_mixed(m=120, n=200, seed=1),
+        make_set_cover(n=90, m=30, seed=2),
+    ]
+    batches = pack_problems(probs)
+    stats = batch_stats(batches)
+    per = stats["per_bucket"]
+    assert len(per) == len(batches) == 2
+    keys = {
+        "n_pad", "instances", "tiles", "tile_rows", "tile_width",
+        "nnz", "padded_slots", "fill", "padding_fraction",
+    }
+    for h in per:
+        assert keys <= set(h)
+        assert 0.0 < h["fill"] <= 1.0
+        assert h["fill"] + h["padding_fraction"] == pytest.approx(1.0)
+        assert 0 < h["nnz"] <= h["padded_slots"]
+    assert sum(h["instances"] for h in per) == stats["instances"]
+    assert sum(h["nnz"] for h in per) == stats["nnz"]
+    assert sum(h["padded_slots"] for h in per) == stats["padded_slots"]
+
+
 def test_pack_problems_buckets_by_col_pad():
     probs = [make_mixed(m=120, n=100, seed=0), make_mixed(m=120, n=200, seed=1)]
     batches = pack_problems(probs)

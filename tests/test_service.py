@@ -1,0 +1,352 @@
+"""Continuous-batching service: slot lifecycle, bitwise retire/backfill,
+AOT-warmed engines, occupancy-masked device loop, stats endpoint.
+
+The load-bearing guarantees:
+  * admit -> converge -> retire -> backfill leaves every instance's bounds
+    BITWISE identical to a fresh one-shot ``propagate_batch`` of the same
+    instance with the same tile parameters (exact-arithmetic families; the
+    general-float family is pinned to reassociation-ulp agreement plus
+    exact round counts -- see the ``core.service`` module docstring);
+  * backfill never compiles (compile-trace counts frozen after warmup,
+    engine LRU hits on same-shape reconstruction);
+  * retirement/backfill happen while a slow co-resident instance is still
+    iterating -- the device loop is never stopped for slot turnover;
+  * ``batched_step_rounds`` chunked by any budget reproduces the one-call
+    fixed point bit-for-bit (the service step primitive);
+  * the stats endpoint surfaces the same per-bucket occupancy/padding
+    histogram shape as ``batch_stats``.
+"""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    INF,
+    BucketSpec,
+    PropagationService,
+    batched_fixed_point,
+    batched_step_rounds,
+    evict_slot,
+    pack_into_slot,
+    propagate_batch,
+)
+from repro.data import make_cascade_chain, make_knapsack, make_mixed, make_set_cover
+
+
+def _one_shot(p, tile_rows=8, tile_width=8):
+    """The fixed-batch reference path the service must reproduce."""
+    return propagate_batch(
+        [p], tile_rows=tile_rows, tile_width=tile_width, use_pallas=False
+    )[0]
+
+
+def _assert_bitwise(r, one):
+    np.testing.assert_array_equal(r.lb, np.asarray(one.lb))
+    np.testing.assert_array_equal(r.ub, np.asarray(one.ub))
+    assert r.rounds == int(one.rounds)
+    assert r.converged == bool(one.converged)
+    assert r.infeasible == bool(one.infeasible)
+
+
+SET_COVERS = [make_set_cover(n=60, m=20, seed=s) for s in range(6)]
+
+
+@pytest.fixture(scope="module")
+def sc_service():
+    """Two-slot multichunk bucket (tile_width 8 < longest set-cover row):
+    six instances through two slots forces retire->backfill recycling."""
+    return PropagationService.from_problems(SET_COVERS, slots=2, tile_width=8)
+
+
+# ---------------------------------------------------------------------------
+# Slot-granular packing
+# ---------------------------------------------------------------------------
+
+
+def test_pack_into_slot_invariants():
+    p = make_set_cover(n=60, m=20, seed=0)
+    pay = pack_into_slot(p, slot_tiles=12, slot_rows=30, n_pad=128, tile_width=8)
+    assert pay.val.shape == (12, 8, 8) and pay.n_pad == 128
+    assert 0 < pay.tiles_used <= 12
+    # Unused trailing tiles are all padding parked on the instance's dummy row.
+    tail = slice(pay.tiles_used, None)
+    assert (pay.val[tail] == 0).all() and (pay.chunk_row[tail] == p.m).all()
+    assert (pay.ii[pay.val == 0] == 0).all()
+    assert 0 < pay.fill() <= 1.0
+    # Bounds plane zero-padded past n.
+    assert (pay.lb[p.n:] == 0).all() and (pay.ub[p.n:] == 0).all()
+    with pytest.raises(ValueError):
+        pack_into_slot(p, slot_tiles=1, slot_rows=30, n_pad=128, tile_width=8)
+    with pytest.raises(ValueError):
+        pack_into_slot(p, slot_tiles=12, slot_rows=5, n_pad=128, tile_width=8)
+
+
+def test_evict_slot_is_all_padding():
+    pay = evict_slot(slot_tiles=3, slot_rows=10, n_pad=128, tile_width=8)
+    assert (pay.val == 0).all() and pay.nnz == 0 and pay.tiles_used == 0
+    assert (pay.chunk_row == 10).all()  # the slot's own dummy row
+    assert pay.fill() == 0.0
+
+
+def test_bucket_spec_routing():
+    spec = BucketSpec(
+        n_pad=128, slots=2, slot_tiles=8, slot_rows=25,
+        tile_width=8, fits_one_chunk=False,
+    )
+    assert spec.fits_problem(make_set_cover(n=60, m=20, seed=0))
+    assert not spec.fits_problem(make_mixed(m=120, n=100, seed=0))  # m too big
+    assert not spec.fits_problem(make_mixed(m=20, n=200, seed=0))   # n too big
+    pay = spec.pack(make_set_cover(n=60, m=20, seed=0))
+    assert spec.admits(pay)
+    other = pack_into_slot(
+        make_set_cover(n=60, m=20, seed=0),
+        slot_tiles=9, slot_rows=25, n_pad=128, tile_width=8,
+    )
+    assert not spec.admits(other)  # wrong slot shape
+    svc = PropagationService([spec], use_pallas=False)
+    with pytest.raises(ValueError):
+        svc.submit(make_mixed(m=120, n=100, seed=0))
+
+
+def test_for_problems_size_classes():
+    """Quantile sub-buckets: small instances route to tight slots instead
+    of inheriting the population max, every sampled instance still fits
+    some spec, and serving through the size-classed pool stays bitwise."""
+    small = [make_set_cover(n=60, m=20, seed=s) for s in range(3)]
+    big = [make_cascade_chain(length=100 + s) for s in range(3)]
+    pop = small + big
+    flat = BucketSpec.for_problems(pop, slots=2, tile_width=8)
+    split = BucketSpec.for_problems(
+        pop, slots=2, tile_width=8, size_classes=2
+    )
+    assert len(split) > len(flat)
+    for npad in {s.n_pad for s in split}:
+        group = [s for s in split if s.n_pad == npad]
+        tiles = [s.slot_tiles for s in group]
+        assert tiles == sorted(tiles)  # tightest-first routing order
+        rows = [s.slot_rows for s in group]
+        assert rows == sorted(rows, reverse=True)  # suffix-max row caps
+    for p in pop:
+        assert any(s.fits_problem(p) for s in split)
+    # A small instance lands in a strictly tighter slot than the flat pool
+    # (whose capacity is the population max).
+    tight = next(s for s in split if s.fits_problem(small[0]))
+    wide = next(s for s in flat if s.fits_problem(small[0]))
+    assert tight.slot_tiles < wide.slot_tiles
+    svc = PropagationService(split, use_pallas=False)
+    for p, r in zip(pop, svc.serve(pop)):
+        _assert_bitwise(r, _one_shot(p))
+
+
+# ---------------------------------------------------------------------------
+# The service step primitive
+# ---------------------------------------------------------------------------
+
+
+def test_batched_step_rounds_matches_fixed_point_bitwise():
+    """Chunking the fixed point by ANY budget cannot change the carried
+    trajectory: resumed steps land bit-for-bit on the one-call result."""
+    lb0 = jnp.zeros((3, 4))
+    ub0 = jnp.asarray(np.array([[5.3] * 4, [1.1] * 4, [0.0] * 4]))
+
+    def round_fn(lb, ub, active):
+        new_ub = jnp.maximum(lb, ub - 0.7)
+        new_ub = jnp.where(active[:, None], new_ub, ub)
+        return lb, new_ub, jnp.any(new_ub != ub, axis=-1)
+
+    lb_f, ub_f, rounds_f, conv_f = batched_fixed_point(round_fn, lb0, ub0, 100)
+    for budget in (1, 3, 7):
+        active = jnp.ones(3, bool)
+        state = (lb0, ub0, active, active, jnp.zeros(3, jnp.int32))
+        while bool(jnp.any(state[2])):
+            state = batched_step_rounds(round_fn, *state, 100, budget=budget)
+        np.testing.assert_array_equal(np.asarray(state[0]), np.asarray(lb_f))
+        np.testing.assert_array_equal(np.asarray(state[1]), np.asarray(ub_f))
+        np.testing.assert_array_equal(np.asarray(state[4]), np.asarray(rounds_f))
+        np.testing.assert_array_equal(~np.asarray(state[3]), np.asarray(conv_f))
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: admit -> converge -> retire -> backfill, bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_lifecycle_backfill_bitwise_multichunk(sc_service):
+    """Six instances through two slots (multichunk jnp round): every result
+    -- including the backfilled ones -- bitwise vs one-shot propagate_batch."""
+    before = sc_service.stats()["retired"]
+    results = sc_service.serve(SET_COVERS)
+    for p, r in zip(SET_COVERS, results):
+        _assert_bitwise(r, _one_shot(p, tile_width=8))
+    assert sc_service.stats()["retired"] == before + len(SET_COVERS)
+
+
+def test_lifecycle_backfill_bitwise_fused():
+    """Same contract through the fused (chunk-complete) engine path."""
+    probs = [make_knapsack(n=60, m=20, seed=s) for s in range(5)]
+    svc = PropagationService.from_problems(probs, slots=2, tile_width=128)
+    assert svc._buckets[0].spec.fits_one_chunk
+    for p, r in zip(probs, svc.serve(probs)):
+        _assert_bitwise(r, _one_shot(p, tile_width=128))
+
+
+def test_lifecycle_general_floats_reassociation_ulps():
+    """General-coefficient family: the service's runtime-argument graphs may
+    reassociate reductions differently from the one-shot jit-constant
+    graphs, so agreement is pinned to ulps -- but round trajectories and
+    verdicts must match exactly."""
+    probs = [make_mixed(m=60, n=50, seed=s) for s in range(4)]
+    svc = PropagationService.from_problems(probs, slots=2, tile_width=8)
+    for p, r in zip(probs, svc.serve(probs)):
+        one = _one_shot(p, tile_width=8)
+        np.testing.assert_allclose(r.lb, np.asarray(one.lb), rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(r.ub, np.asarray(one.ub), rtol=1e-12, atol=1e-12)
+        assert r.rounds == int(one.rounds)
+        assert r.converged == bool(one.converged)
+        assert r.infeasible == bool(one.infeasible)
+
+
+def test_backfill_never_compiles(sc_service):
+    """Steady state is compile-free: the compiled-trace counts of the step
+    and every admission engine are frozen after construction-time warmup,
+    across a full serve with slot recycling -- and a same-shape service
+    reconstruction is an engine-cache HIT (no rebuild either)."""
+    cc0 = sc_service.compile_counts()
+    for counts in cc0.values():
+        assert counts["step"] == 1
+        assert all(c == 1 for c in counts["admit"].values())
+    sc_service.serve(SET_COVERS)
+    assert sc_service.compile_counts() == cc0
+    hits0 = sc_service.stats()["engine_cache"]["hits"]
+    PropagationService.from_problems(SET_COVERS, slots=2, tile_width=8)
+    assert sc_service.stats()["engine_cache"]["hits"] > hits0
+
+
+def test_retire_backfill_while_slow_instance_resident():
+    """One slow cascade + four 1-round instances through two slots: the
+    fast slots turn over (retire + backfill) while the cascade is STILL
+    resident and iterating -- slot turnover never stops the device loop."""
+    slow = make_cascade_chain(24)
+    free = [
+        p._replace(lhs=np.full(p.m, -INF), rhs=np.full(p.m, INF))
+        for p in (make_set_cover(n=60, m=20, seed=s) for s in range(4))
+    ]
+    svc = PropagationService.from_problems(
+        [slow] + free, slots=2, tile_width=8, rounds_per_step=4
+    )
+    slow_t = svc.submit(slow)
+    fast_ts = [svc.submit(p) for p in free]
+    while not slow_t.done():
+        svc.pump()
+    svc.drain()
+    # The cascade ran many budgeted steps; the fast instances all finished
+    # first, and the last of them was ADMITTED after the first RETIRED
+    # (true backfill) while the cascade had not yet retired.
+    assert slow_t.result().rounds > 20
+    assert all(t.done_t < slow_t.done_t for t in fast_ts)
+    assert fast_ts[-1].admit_t > fast_ts[0].done_t
+    assert fast_ts[-1].admit_t < slow_t.done_t
+    for p, t in zip([slow] + free, [slow_t] + fast_ts):
+        _assert_bitwise(t.result(), _one_shot(p, tile_width=8))
+
+
+# ---------------------------------------------------------------------------
+# Stats endpoint + tickets
+# ---------------------------------------------------------------------------
+
+
+def test_stats_endpoint_histogram(sc_service):
+    """Mid-flight stats surface the batch_stats-shaped occupancy/padding
+    histogram over the RESIDENT instances."""
+    tickets = [sc_service.submit(p) for p in SET_COVERS[:3]]
+    sc_service.pump()  # admissions land; nothing may retire mid-flight check
+    st = sc_service.stats()
+    bk = st["buckets"][0]
+    hist = bk["histogram"]
+    assert set(hist) == {
+        "n_pad", "instances", "tiles", "tile_rows", "tile_width",
+        "nnz", "padded_slots", "fill", "padding_fraction",
+    }
+    if bk["occupied"]:  # the 1-round instances may all have retired already
+        assert hist["instances"] == bk["occupied"]
+        assert 0.0 < hist["fill"] <= 1.0
+        assert hist["fill"] + hist["padding_fraction"] == pytest.approx(1.0)
+    assert 0.0 < bk["mean_occupancy"] <= 1.0
+    assert {"hits", "misses", "size", "maxsize"} <= set(st["engine_cache"])
+    assert "batch_runner" in st["kernel_caches"]
+    sc_service.drain()
+    st = sc_service.stats()
+    assert st["occupied"] == 0 and st["pending"] == 0
+    assert all(t.done() for t in tickets)
+
+
+def test_ticket_timeout_and_latency(sc_service):
+    t = sc_service.submit(SET_COVERS[0])
+    with pytest.raises(TimeoutError):
+        t.result(timeout=0.01)
+    assert t.latency() is None
+    sc_service.drain()
+    assert t.done() and t.latency() >= 0.0
+    assert t.admit_t >= t.submit_t and t.done_t >= t.admit_t
+
+
+# ---------------------------------------------------------------------------
+# Concurrency: background loop + thread-safe caches
+# ---------------------------------------------------------------------------
+
+
+def test_background_loop_with_concurrent_submitters():
+    """Background device-loop thread + several client threads submitting
+    concurrently: every ticket resolves, results bitwise vs one-shot."""
+    probs = [make_set_cover(n=60, m=20, seed=100 + s) for s in range(9)]
+    svc = PropagationService.from_problems(probs, slots=2, tile_width=8)
+    tickets = {}
+    lock = threading.Lock()
+
+    def client(chunk):
+        for i, p in chunk:
+            t = svc.submit(p)
+            with lock:
+                tickets[i] = t
+
+    chunks = [list(enumerate(probs))[i::3] for i in range(3)]
+    with svc:  # starts/stops the background pump thread
+        workers = [threading.Thread(target=client, args=(c,)) for c in chunks]
+        for w in workers:
+            w.start()
+        for w in workers:
+            w.join()
+        results = {i: t.result(timeout=300) for i, t in tickets.items()}
+    assert len(results) == len(probs)
+    for i, p in enumerate(probs):
+        _assert_bitwise(results[i], _one_shot(p, tile_width=8))
+
+
+def test_lru_cache_thread_safety_hammer():
+    """The engine LRU caches are shared between the admission worker and
+    the device loop: hammer one from many threads and check the counters
+    stayed consistent (satellite: thread-safe LRU)."""
+    from repro.kernels.ops import LRU
+
+    lru = LRU(maxsize=8)
+    gets = 400
+    threads = 8
+
+    def worker(tid):
+        for i in range(gets):
+            key = ("k", (tid * i) % 16)
+            if lru.get(key, ()) is None:
+                lru.put(key, (), tid * 1000 + i)
+            lru.info()
+            len(lru)
+
+    ts = [threading.Thread(target=worker, args=(t,)) for t in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    info = lru.info()
+    assert info["hits"] + info["misses"] == threads * gets
+    assert info["size"] <= 8
