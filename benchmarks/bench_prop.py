@@ -294,6 +294,7 @@ def service_row(
     slots: int = SERVICE_SLOTS,
     size_classes: int = SERVICE_SIZE_CLASSES,
     rounds_per_step: int = 8,
+    tile_width: int | None = None,
     trials: int = 5,
     repeats: int = 3,
 ):
@@ -311,7 +312,11 @@ def service_row(
     to the headline is explicit rather than hidden.  Latency percentiles
     are submit->retire per ticket from the last timed trial;
     ``compiles_during_serve`` asserts the AOT warmup covered every engine
-    the loop dispatched (slot backfill never recompiles)."""
+    the loop dispatched (slot backfill never recompiles).
+
+    ``tile_width`` pins the bucket tile width (``None`` = fill-tuned per
+    bucket, the default the service ships with); :func:`service_sweep_row`
+    sweeps it alongside ``slots``/``rounds_per_step``."""
     problems = [p for _, p in instances_for_set(SET, per_family=per_family)]
     n_inst = len(problems)
 
@@ -326,7 +331,8 @@ def service_row(
         lb.block_until_ready()
 
     specs = BucketSpec.for_problems(
-        problems, slots=slots, size_classes=size_classes
+        problems, slots=slots, tile_width=tile_width,
+        size_classes=size_classes,
     )
     tuned_runners = [
         (_single_dispatch_runner(prep), prep)
@@ -417,6 +423,75 @@ def service_row(
             float(np.mean(fill_by_spec[s])) for s in specs if fill_by_spec[s]
         ],
         "compiles_during_serve": int(compiles),
+    }
+
+
+# The service tuning sweep: the row of record's config first, then
+# one-factor moves around it (more slots, one size class, shorter/longer
+# pump quanta, a pinned narrow tile).  A full factorial would mostly time
+# jit compilation of baselines; one-factor probes around the shipped point
+# answer the question the row exists for -- is the 0.5x headline a tuning
+# artifact or structural?
+SERVICE_SWEEP_GRID = (
+    dict(slots=4, size_classes=2, rounds_per_step=8, tile_width=None),
+    dict(slots=8, size_classes=2, rounds_per_step=8, tile_width=None),
+    dict(slots=4, size_classes=1, rounds_per_step=8, tile_width=None),
+    dict(slots=4, size_classes=2, rounds_per_step=4, tile_width=None),
+    dict(slots=4, size_classes=2, rounds_per_step=16, tile_width=None),
+    dict(slots=4, size_classes=2, rounds_per_step=8, tile_width=32),
+)
+
+_SWEEP_CFG_KEYS = ("slots", "size_classes", "rounds_per_step", "tile_width")
+
+# Every key the ``service_sweep`` row must carry (the smoke job and
+# docs/BENCHMARKS.md read this set).
+SERVICE_SWEEP_ROW_KEYS = frozenset({
+    "grid",
+    "tuned",
+    "target_met",
+})
+
+
+def service_sweep_row(
+    grid=SERVICE_SWEEP_GRID,
+    per_family: int = SERVICE_PER_FAMILY,
+    trials: int = 3,
+    repeats: int = 2,
+    final_trials: int = 5,
+    final_repeats: int = 3,
+):
+    """Sweep the service's tuning knobs and re-measure the best point.
+
+    Each grid point runs :func:`service_row` at reduced fidelity (the sweep
+    ranks configs; it does not need publication-grade medians), the config
+    maximizing ``speedup_vs_tuned_sequential`` is re-run at full fidelity,
+    and ``target_met`` records whether the tuned point clears 1.0x against
+    the fill-tuned sequential baseline.  When it does not, the grid is the
+    evidence that the gap is structural (pump-quantum overshoot on a
+    fast-converging population) rather than a mistuned default -- see
+    docs/BENCHMARKS.md."""
+    points = []
+    for cfg in grid:
+        row = service_row(
+            per_family=per_family, trials=trials, repeats=repeats, **cfg
+        )
+        points.append({
+            **{k: cfg[k] for k in _SWEEP_CFG_KEYS},
+            "speedup_vs_tuned_sequential": row["speedup_vs_tuned_sequential"],
+            "speedup_vs_sequential_dispatch":
+                row["speedup_vs_sequential_dispatch"],
+            "instances_per_sec": row["instances_per_sec"],
+        })
+    best = max(points, key=lambda r: r["speedup_vs_tuned_sequential"])
+    best_cfg = {k: best[k] for k in _SWEEP_CFG_KEYS}
+    tuned = service_row(
+        per_family=per_family, trials=final_trials, repeats=final_repeats,
+        **best_cfg,
+    )
+    return {
+        "grid": points,
+        "tuned": {"config": best_cfg, **tuned},
+        "target_met": bool(tuned["speedup_vs_tuned_sequential"] >= 1.0),
     }
 
 
@@ -678,11 +753,33 @@ def smoke(out_path: str = OUT_PATH):
     assert svc["latency_ms_p50"] <= svc["latency_ms_p99"]
     assert 0.0 < svc["mean_slot_occupancy"] <= 1.0
 
+    sweep = service_sweep_row(
+        grid=(
+            dict(slots=2, size_classes=1, rounds_per_step=8, tile_width=None),
+            dict(slots=2, size_classes=1, rounds_per_step=4, tile_width=None),
+        ),
+        per_family=2, trials=1, repeats=1, final_trials=1, final_repeats=1,
+    )
+    missing = SERVICE_SWEEP_ROW_KEYS - set(sweep)
+    extra = set(sweep) - SERVICE_SWEEP_ROW_KEYS
+    assert not missing and not extra, (sorted(missing), sorted(extra))
+    assert len(sweep["grid"]) == 2
+    assert set(sweep["tuned"]) == SERVICE_ROW_KEYS | {"config"}
+    assert sweep["tuned"]["config"] in [
+        {k: pt[k] for k in _SWEEP_CFG_KEYS} for pt in sweep["grid"]
+    ]
+    assert sweep["target_met"] == (
+        sweep["tuned"]["speedup_vs_tuned_sequential"] >= 1.0
+    )
+
     merged = _merge_report(
-        {"engines": {"partitioned": row, "service": svc}}, out_path
+        {"engines": {
+            "partitioned": row, "service": svc, "service_sweep": sweep,
+        }}, out_path
     )
     assert merged["engines"]["partitioned"] == row
     assert merged["engines"]["service"] == svc
+    assert merged["engines"]["service_sweep"] == sweep
     if os.path.exists(out_path):
         with open(out_path) as f:
             old = json.load(f)
@@ -747,6 +844,7 @@ def run(out_path: str = OUT_PATH):
     nodes = node_throughput()
     large = partitioned_large_row()
     svc = service_row()
+    sweep = service_sweep_row()
     report = {
         "set": SET,
         "instances": len(insts),
@@ -769,6 +867,7 @@ def run(out_path: str = OUT_PATH):
         "bucket_fill": thru["bucket_fill"],
     }
     report["engines"]["service"] = svc
+    report["engines"]["service_sweep"] = sweep
     report["engines"]["nodes"] = {
         "nodes_per_sec": nodes["shared_nodes_per_sec"],
         "speedup_vs_repack_dispatch": nodes["shared_matrix_speedup"],
@@ -808,6 +907,19 @@ def run(out_path: str = OUT_PATH):
          f"p99={svc['latency_ms_p99']:.1f}ms "
          f"occupancy={svc['mean_slot_occupancy']:.2f} "
          f"compiles_during_serve={svc['compiles_during_serve']}")
+    )
+    tuned_cfg = sweep["tuned"]["config"]
+    rows.append(
+        ("bench_prop_service_sweep",
+         1e6 / sweep["tuned"]["instances_per_sec"],
+         f"tuned[slots={tuned_cfg['slots']} "
+         f"size_classes={tuned_cfg['size_classes']} "
+         f"rounds_per_step={tuned_cfg['rounds_per_step']} "
+         f"tile_width={tuned_cfg['tile_width']}] "
+         f"speedup_vs_tuned_sequential="
+         f"{sweep['tuned']['speedup_vs_tuned_sequential']:.2f}x "
+         f"grid_points={len(sweep['grid'])} "
+         f"target_met={sweep['target_met']}")
     )
     rows.append(
         ("bench_prop_nodes",

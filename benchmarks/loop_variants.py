@@ -40,7 +40,9 @@ def _timed(p, driver, unroll=1):
 
     @jax.jit
     def run(lb0, ub0):
-        lb, ub, ch, r = _device_fixed_point(round_fn, lb0, ub0, cfg.max_rounds, unroll)
+        lb, ub, ch, r, _prog = _device_fixed_point(
+            round_fn, lb0, ub0, cfg.max_rounds, unroll
+        )
         return lb, ub, r
 
     run(dp.lb0, dp.ub0)[0].block_until_ready()

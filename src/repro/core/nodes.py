@@ -20,12 +20,19 @@ two-number change.  This module serves the tree instead:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Sequence
 
 import numpy as np
 
 from .sparse import Problem
-from .types import DEFAULT_CONFIG, PropagationResult, PropagatorConfig
+from .types import (
+    DEFAULT_CONFIG,
+    INF,
+    PropagationResult,
+    PropagatorConfig,
+    TierPolicy,
+)
 
 
 class NodeBatchResult(NamedTuple):
@@ -36,6 +43,8 @@ class NodeBatchResult(NamedTuple):
     rounds: object      # (B,) int32 rounds to each node's fixed point
     converged: object   # (B,) bool
     infeasible: object  # (B,) bool: domain emptied -> prune this node
+    progress: object = None     # (B,) last-round progress measure (or None)
+    tier_rounds: object = 0     # (B,) int32 fp32-tier rounds (two-tier runs)
 
     @property
     def size(self) -> int:
@@ -114,6 +123,9 @@ def propagate_nodes(
     interpret: bool | None = None,
     donate: bool | None = None,
     slab: int | None = None,
+    stop_progress: float | None = None,
+    patience: int = 1,
+    policy: TierPolicy | None = None,
 ) -> NodeBatchResult:
     """Propagate B warm-started nodes of ONE instance in one dispatch.
 
@@ -126,18 +138,68 @@ def propagate_nodes(
     column-slab partitioned node kernels automatically.  Per-node
     ``rounds``/``converged`` match what each node would see in its own
     single-instance run; ``infeasible`` nodes are reported for pruning,
-    and their bucket mates are unaffected."""
+    and their bucket mates are unaffected.
+
+    ``stop_progress``/``patience`` arm the per-node progress-based early
+    stop (see ``bounds.progress_measure``); ``policy`` (a
+    :class:`TierPolicy`) runs the frontier through the two-tier precision
+    scheme: an fp32 dispatch (outward-rounded merges, own cached prep +
+    runner) until per-node progress drops below ``policy.switch_progress``,
+    then an exact-cast warm start of the requested-dtype engine."""
     from ..kernels.ops import (  # lazy: kernels imports core at module scope
         prepare_block_ell,
         propagate_nodes_prepared,
     )
+    from .propagator import two_tier_bounds_dtypes
 
+    pair = two_tier_bounds_dtypes(policy, dtype) if policy is not None else None
+    if pair is not None:
+        dt32, final = pair
+        cap32 = max(1, int(cfg.max_rounds * policy.fp32_round_frac))
+        prep32 = prepare_block_ell(p, tile_rows, tile_width, dt32)
+        lb32, ub32, r32, _, inf32 = propagate_nodes_prepared(
+            prep32, lb_nodes, ub_nodes,
+            dataclasses.replace(cfg, max_rounds=cap32),
+            use_pallas=use_pallas, interpret=interpret, donate=donate,
+            slab=slab, stop_progress=policy.switch_progress,
+            patience=policy.patience,
+        )
+        # Per-node promotion; a node whose fp32 tier declared infeasibility
+        # restarts from its ORIGINAL bounds (fp32 verdicts are never
+        # trusted -- see core.propagator's two-tier front end).
+        bad = np.asarray(inf32)[:, None]
+        warm_lb = np.where(bad, np.asarray(lb_nodes), np.asarray(lb32, np.float64))
+        warm_ub = np.where(bad, np.asarray(ub_nodes), np.asarray(ub32, np.float64))
+        # Canonicalize the cast sentinels (fp32's 1e20 rounds up; see
+        # bounds.canonical_infinite) so untouched infinite bounds promote
+        # bitwise.
+        warm_lb = np.where(warm_lb <= -INF, -INF, warm_lb)
+        warm_ub = np.where(warm_ub >= INF, INF, warm_ub)
+        r32 = np.where(np.asarray(inf32), 0, np.asarray(r32)).astype(np.int32)
+        rem = dataclasses.replace(cfg, max_rounds=max(1, cfg.max_rounds - cap32))
+        prep = prepare_block_ell(p, tile_rows, tile_width, final)
+        lb, ub, rounds, converged, infeasible, progress = propagate_nodes_prepared(
+            prep, warm_lb, warm_ub, rem,
+            use_pallas=use_pallas, interpret=interpret, donate=donate,
+            slab=slab, stop_progress=policy.stop_progress,
+            patience=policy.patience, with_progress=True,
+        )
+        return NodeBatchResult(
+            lb, ub, rounds + r32, converged, infeasible,
+            progress=progress, tier_rounds=r32,
+        )
+    if policy is not None:
+        stop_progress = policy.stop_progress
+        patience = policy.patience
     prep = prepare_block_ell(p, tile_rows, tile_width, dtype)
-    lb, ub, rounds, converged, infeasible = propagate_nodes_prepared(
+    lb, ub, rounds, converged, infeasible, progress = propagate_nodes_prepared(
         prep, lb_nodes, ub_nodes, cfg,
         use_pallas=use_pallas, interpret=interpret, donate=donate, slab=slab,
+        stop_progress=stop_progress, patience=patience, with_progress=True,
     )
-    return NodeBatchResult(lb, ub, rounds, converged, infeasible)
+    return NodeBatchResult(
+        lb, ub, rounds, converged, infeasible, progress=progress
+    )
 
 
 def propagate_node_batch(

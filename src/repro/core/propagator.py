@@ -23,6 +23,7 @@ fixed point by construction.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import jax
 import jax.numpy as jnp
@@ -31,7 +32,13 @@ import numpy as np
 from . import activities as act
 from . import bounds as bnd
 from .sparse import Problem
-from .types import DEFAULT_CONFIG, INF, PropagationResult, PropagatorConfig
+from .types import (
+    DEFAULT_CONFIG,
+    INF,
+    PropagationResult,
+    PropagatorConfig,
+    TierPolicy,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +85,7 @@ def propagation_round(
     eps: float,
     int_eps: float,
     inf: float = INF,
+    outward: float = 0.0,
 ):
     """Pure function: one parallel propagation round.  Returns (lb, ub, changed)."""
     lb_col = lb[col]
@@ -106,7 +114,7 @@ def propagation_round(
     best_u = jax.ops.segment_min(ucand, col, num_segments=n)
     # Columns with no nonzeros get segment identity (-inf/+inf fill is fine).
 
-    return bnd.apply_updates(lb, ub, best_l, best_u, eps, inf)
+    return bnd.apply_updates(lb, ub, best_l, best_u, eps, inf, outward)
 
 
 def _round_fn(dp: DeviceProblem, cfg: PropagatorConfig):
@@ -124,6 +132,7 @@ def _round_fn(dp: DeviceProblem, cfg: PropagatorConfig):
         eps=eps,
         int_eps=cfg.int_eps,
         inf=cfg.inf,
+        outward=cfg.outward_for(dp.dtype),
     )
 
 
@@ -192,21 +201,40 @@ def propagate_host_loop(
     cfg: PropagatorConfig = DEFAULT_CONFIG,
     lb0=None,
     ub0=None,
+    stop_progress: float | None = None,
+    patience: int = 1,
 ) -> PropagationResult:
     """cpu_loop analogue: host iterates rounds, syncing one flag per round.
 
     Zero-copy: (lb, ub) are donated each call, so XLA reuses the same two
     bound buffers round over round instead of allocating fresh ones.
     ``lb0``/``ub0`` warm-start the fixed point from caller-supplied bounds
-    (default: the problem's root bounds)."""
-    round_fn = jax.jit(_round_fn(dp, cfg), **donate_kwargs(argnames=("lb", "ub")))
+    (default: the problem's root bounds).  ``stop_progress`` arms the
+    progress-based early stop (see :func:`_device_fixed_point`); on this
+    driver the measure is read back per round like the changed flag."""
+    base = _round_fn(dp, cfg)
+
+    def step(lb, ub):
+        # Progress is computed INSIDE the jit, while the pre-round bounds
+        # are still live -- the donated input buffers are gone afterwards.
+        nlb, nub, ch = base(lb=lb, ub=ub)
+        return nlb, nub, ch, bnd.progress_measure(lb, ub, nlb, nub)
+
+    round_fn = jax.jit(step, **donate_kwargs(argnums=(0, 1)))
     lb, ub = initial_bounds((dp.lb0, dp.ub0), lb0, ub0, dp.dtype, dp.n)
     rounds = 0
     changed = True
+    prog = float("nan")
+    flat = 0
     while changed and rounds < cfg.max_rounds:
-        lb, ub, changed_dev = round_fn(lb=lb, ub=ub)
+        lb, ub, changed_dev, prog_dev = round_fn(lb, ub)
         changed = bool(changed_dev)  # the per-round host<->device sync point
         rounds += 1
+        if stop_progress is not None:
+            prog = float(prog_dev)
+            flat = flat + 1 if prog < stop_progress else 0
+            if flat >= patience:
+                break
     infeasible = bool(check_infeasible(lb, ub, cfg.feas_eps))
     return PropagationResult(
         lb=lb,
@@ -214,34 +242,56 @@ def propagate_host_loop(
         rounds=jnp.int32(rounds),
         converged=jnp.asarray(not changed),
         infeasible=jnp.asarray(infeasible),
+        progress=jnp.asarray(prog),
     )
 
 
-def _device_fixed_point(round_fn, lb0, ub0, max_rounds: int, unroll: int = 1):
-    """while_loop fixed point; ``unroll`` rounds per convergence check."""
+def _device_fixed_point(
+    round_fn, lb0, ub0, max_rounds: int, unroll: int = 1,
+    stop_progress: float | None = None, patience: int = 1,
+):
+    """while_loop fixed point; ``unroll`` rounds per convergence check.
+
+    Carries the per-check progress measure (``bounds.progress_measure`` over
+    the bound planes -- a device scalar, no host sync).  ``stop_progress``
+    arms the early stop: once progress stays below it for ``patience``
+    consecutive checks the loop exits even though epsilon-level changes
+    continue (a flatlined instance).  Returns ``(lb, ub, changed, rounds,
+    progress)`` -- ``progress`` is the last check's measure (NaN before the
+    first round)."""
 
     def body(state):
-        lb, ub, _, rounds = state
+        lb, ub, _, rounds, _, flat = state
+        lb_in, ub_in = lb, ub
         changed_any = jnp.asarray(False)
         for _ in range(unroll):
             lb, ub, changed = round_fn(lb=lb, ub=ub)
             changed_any = changed_any | changed
             rounds = rounds + 1
-        return lb, ub, changed_any, rounds
+        prog = bnd.progress_measure(lb_in, ub_in, lb, ub)
+        if stop_progress is not None:
+            flat = jnp.where(prog < stop_progress, flat + 1, 0)
+        return lb, ub, changed_any, rounds, prog, flat
 
     def cond(state):
-        _, _, changed, rounds = state
-        return changed & (rounds < max_rounds)
+        _, _, changed, rounds, _, flat = state
+        go = changed & (rounds < max_rounds)
+        if stop_progress is not None:
+            go = go & (flat < patience)
+        return go
 
-    init = (lb0, ub0, jnp.asarray(True), jnp.int32(0))
+    nan = jnp.asarray(jnp.nan, lb0.dtype)
+    init = (lb0, ub0, jnp.asarray(True), jnp.int32(0), nan, jnp.int32(0))
     # First iteration must run: seed changed=True, but do not count it.
-    lb, ub, changed, rounds = jax.lax.while_loop(cond, body, init)
-    return lb, ub, changed, rounds
+    lb, ub, changed, rounds, prog, _ = jax.lax.while_loop(cond, body, init)
+    return lb, ub, changed, rounds, prog
 
 
 def batched_step_rounds(
     round_fn, lb, ub, active, last_changed, rounds, max_rounds: int,
-    budget: int | None = None,
+    budget: int | None = None, *,
+    stop_progress: float | None = None, patience: int = 1,
+    progress=None, flat=None, with_progress: bool = False,
 ):
     """Run up to ``budget`` rounds of a batched fixed point and return the
     carried state -- the RESUMABLE core of :func:`batched_fixed_point`.
@@ -261,30 +311,62 @@ def batched_step_rounds(
     so converged slots retire and free slots admit, without any one slow
     instance holding the bucket hostage.  ``budget=None`` (run to
     convergence) makes :func:`batched_fixed_point` a single call of this.
+
+    Progress control (all keyword-only, default off so the 5-tuple
+    contract below is unchanged): ``stop_progress`` arms the per-instance
+    flatline stop -- an instance whose per-round ``progress_measure``
+    stays below it for ``patience`` consecutive rounds drops out of
+    ``active`` with ``last_changed`` still True (stopped, not converged).
+    ``progress``/``flat`` are the carried ``(B,)`` measure and low-progress
+    streak (pass a previous call's values to resume bit-for-bit across
+    step boundaries); ``with_progress=True`` appends them to the return,
+    making it ``(lb, ub, active, last_changed, rounds, progress, flat)``.
     """
+    track = with_progress or stop_progress is not None
+    bsz = lb.shape[0]
+    if progress is None:
+        progress = jnp.full((bsz,), jnp.nan, lb.dtype)
+    if flat is None:
+        flat = jnp.zeros((bsz,), jnp.int32)
 
     def body(state):
-        lb, ub, active, last_changed, rounds, k = state
+        lb, ub, active, last_changed, rounds, progress, flat, k = state
+        lb_in, ub_in = lb, ub
         lb, ub, changed = round_fn(lb, ub, active)
         rounds = rounds + active.astype(jnp.int32)
         last_changed = jnp.where(active, changed, last_changed)
+        if track:
+            prog = bnd.progress_measure(lb_in, ub_in, lb, ub)
+            progress = jnp.where(active, prog, progress)
+            if stop_progress is not None:
+                flat = jnp.where(
+                    active, jnp.where(prog < stop_progress, flat + 1, 0), flat
+                )
         active = active & changed & (rounds < max_rounds)
-        return lb, ub, active, last_changed, rounds, k + 1
+        if stop_progress is not None:
+            active = active & (flat < patience)
+        return lb, ub, active, last_changed, rounds, progress, flat, k + 1
 
     def cond(state):
         go = jnp.any(state[2])
         if budget is not None:
-            go = go & (state[5] < budget)
+            go = go & (state[7] < budget)
         return go
 
-    init = (lb, ub, active, last_changed, rounds, jnp.int32(0))
-    lb, ub, active, last_changed, rounds, _ = jax.lax.while_loop(
-        cond, body, init
+    init = (lb, ub, active, last_changed, rounds, progress, flat, jnp.int32(0))
+    lb, ub, active, last_changed, rounds, progress, flat, _ = (
+        jax.lax.while_loop(cond, body, init)
     )
+    if with_progress:
+        return lb, ub, active, last_changed, rounds, progress, flat
     return lb, ub, active, last_changed, rounds
 
 
-def batched_fixed_point(round_fn, lb0, ub0, max_rounds: int, active0=None):
+def batched_fixed_point(
+    round_fn, lb0, ub0, max_rounds: int, active0=None, *,
+    stop_progress: float | None = None, patience: int = 1,
+    with_progress: bool = False,
+):
     """Batched while_loop fixed point with a per-instance convergence mask.
 
     ``round_fn(lb, ub, active) -> (lb, ub, changed)`` operates on
@@ -296,16 +378,23 @@ def batched_fixed_point(round_fn, lb0, ub0, max_rounds: int, active0=None):
     have seen in its own single-instance ``device_loop``.
 
     Returns ``(lb, ub, rounds, converged)`` with ``rounds``/``converged``
-    per instance.
+    per instance; ``with_progress=True`` appends the per-instance last
+    progress measure (``(lb, ub, rounds, converged, progress)``).
+    ``stop_progress``/``patience`` arm the per-instance flatline stop (see
+    :func:`batched_step_rounds`): a stopped instance reports
+    ``converged=False`` at ``rounds < max_rounds``.
     """
     bsz = lb0.shape[0]
     if active0 is None:
         active0 = jnp.ones((bsz,), dtype=bool)
 
-    lb, ub, _, last_changed, rounds = batched_step_rounds(
+    lb, ub, _, last_changed, rounds, progress, _ = batched_step_rounds(
         round_fn, lb0, ub0, active0, active0,
         jnp.zeros((bsz,), jnp.int32), max_rounds, budget=None,
+        stop_progress=stop_progress, patience=patience, with_progress=True,
     )
+    if with_progress:
+        return lb, ub, rounds, ~last_changed, progress
     return lb, ub, rounds, ~last_changed
 
 
@@ -321,6 +410,9 @@ def propagate_batch(
     donate: bool | None = None,
     bounds=None,
     slab: int | None = None,
+    stop_progress: float | None = None,
+    patience: int = 1,
+    policy: TierPolicy | None = None,
 ):
     """Propagate a batch of instances, thousands per device dispatch.
 
@@ -336,7 +428,9 @@ def propagate_batch(
     runners are LRU-cached on the identity of the problem list / packed
     batch (see ``kernels.cache_info()``), so a serving loop pays them
     once.  See ``kernels.ops.propagate_batch_block_ell`` for the engine
-    knobs."""
+    knobs; ``stop_progress``/``patience`` arm the per-instance
+    progress-based early stop and ``policy`` the two-tier precision
+    scheme (both documented there)."""
     from ..kernels.ops import propagate_batch_block_ell  # lazy: kernels imports core
 
     return propagate_batch_block_ell(
@@ -351,6 +445,9 @@ def propagate_batch(
         donate=donate,
         bounds=bounds,
         slab=slab,
+        stop_progress=stop_progress,
+        patience=patience,
+        policy=policy,
     )
 
 
@@ -360,25 +457,30 @@ def propagate_device_loop(
     unroll: int = 1,
     lb0=None,
     ub0=None,
+    stop_progress: float | None = None,
+    patience: int = 1,
 ) -> PropagationResult:
     """gpu_loop analogue: the whole fixed point is one XLA dispatch.
 
     Zero-copy: the initial bounds are donated into the while_loop carry, so
     the fixed point runs in place on two device buffers.  ``lb0``/``ub0``
-    warm-start the fixed point from caller-supplied bounds."""
+    warm-start the fixed point from caller-supplied bounds;
+    ``stop_progress``/``patience`` arm the in-dispatch progress-based early
+    stop (see :func:`_device_fixed_point`)."""
     round_fn = _round_fn(dp, cfg)
 
     @functools.partial(jax.jit, **donate_kwargs(argnums=(0, 1)))
     def run(lb0, ub0):
-        lb, ub, changed, rounds = _device_fixed_point(
-            round_fn, lb0, ub0, cfg.max_rounds, unroll=unroll
+        lb, ub, changed, rounds, prog = _device_fixed_point(
+            round_fn, lb0, ub0, cfg.max_rounds, unroll=unroll,
+            stop_progress=stop_progress, patience=patience,
         )
         infeasible = check_infeasible(lb, ub, cfg.feas_eps)
-        return lb, ub, rounds, ~changed, infeasible
+        return lb, ub, rounds, ~changed, infeasible, prog
 
     lb_init, ub_init = initial_bounds((dp.lb0, dp.ub0), lb0, ub0, dp.dtype, dp.n)
-    lb, ub, rounds, converged, infeasible = run(lb_init, ub_init)
-    return PropagationResult(lb, ub, rounds, converged, infeasible)
+    lb, ub, rounds, converged, infeasible, prog = run(lb_init, ub_init)
+    return PropagationResult(lb, ub, rounds, converged, infeasible, prog)
 
 
 def propagate_unrolled(
@@ -387,9 +489,31 @@ def propagate_unrolled(
     unroll: int = 4,
     lb0=None,
     ub0=None,
+    stop_progress: float | None = None,
+    patience: int = 1,
 ) -> PropagationResult:
     """megakernel-flavored driver: k fused rounds per convergence check."""
-    return propagate_device_loop(dp, cfg, unroll=unroll, lb0=lb0, ub0=ub0)
+    return propagate_device_loop(
+        dp, cfg, unroll=unroll, lb0=lb0, ub0=ub0,
+        stop_progress=stop_progress, patience=patience,
+    )
+
+
+def two_tier_bounds_dtypes(policy: TierPolicy, dtype):
+    """Resolve the (fp32 tier, endgame) dtype pair of a tiered run, or
+    ``None`` when the policy degenerates to single-tier (disabled, or the
+    requested dtype is already low-precision)."""
+    import numpy as np
+
+    final = jnp.dtype(dtype) if dtype is not None else (
+        jnp.dtype(jnp.float64) if jax.config.jax_enable_x64
+        else jnp.dtype(jnp.float32)
+    )
+    if not policy.two_tier or final in (
+        jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16)
+    ):
+        return None
+    return np.float32, final
 
 
 def propagate(
@@ -399,6 +523,7 @@ def propagate(
     dtype=None,
     lb0=None,
     ub0=None,
+    policy: TierPolicy | None = None,
 ) -> PropagationResult:
     """Convenience front end: Problem -> PropagationResult (pure-jnp round,
     no Pallas -- the kernel-backed sibling is ``kernels.propagate_block_ell``).
@@ -410,14 +535,68 @@ def propagate(
     are ``(n,)`` warm-start overrides for this call only (the tree-search
     path: propagate a B&B node's domain through the root problem's device
     arrays without rebuilding anything); the returned bounds are ``(n,)``
-    device arrays in that dtype."""
+    device arrays in that dtype.
+
+    ``policy`` (a :class:`TierPolicy`) turns on runtime progress control:
+    with ``two_tier`` the fixed point runs an fp32 tier (outward-rounded
+    merges, so its bounds are never inside the fp64 fixed point) until
+    per-round progress drops below ``switch_progress``, promotes the
+    bounds by exact cast, and finishes in the requested dtype -- landing
+    on the same fixed point the untied run reaches; ``stop_progress``
+    additionally early-stops flatlined runs.  ``result.tier_rounds``
+    counts the fp32-tier rounds."""
+    pair = two_tier_bounds_dtypes(policy, dtype) if policy is not None else None
+    if pair is not None:
+        dt32, final = pair
+        cap32 = max(1, int(cfg.max_rounds * policy.fp32_round_frac))
+        r32 = _propagate_single(
+            p, dataclasses.replace(cfg, max_rounds=cap32), driver, dt32,
+            lb0, ub0, stop_progress=policy.switch_progress,
+            patience=policy.patience,
+        )
+        if bool(r32.infeasible):
+            # Never trust an fp32 infeasibility verdict: outward rounding
+            # makes it overwhelmingly a true positive, but a cancellation-
+            # heavy row can overtighten past the widening, so the endgame
+            # re-derives the verdict in the final dtype from scratch.
+            r = _propagate_single(
+                p, cfg, driver, final, lb0, ub0,
+                stop_progress=policy.stop_progress, patience=policy.patience,
+            )
+            return r._replace(tier_rounds=r32.rounds)
+        rem = dataclasses.replace(
+            cfg, max_rounds=max(1, cfg.max_rounds - int(r32.rounds))
+        )
+        warm_lb, warm_ub = bnd.canonical_infinite(
+            jnp.asarray(r32.lb, final), jnp.asarray(r32.ub, final)
+        )
+        r = _propagate_single(
+            p, rem, driver, final, warm_lb, warm_ub,
+            stop_progress=policy.stop_progress, patience=policy.patience,
+        )
+        return r._replace(
+            rounds=r.rounds + r32.rounds, tier_rounds=r32.rounds
+        )
+    stop = policy.stop_progress if policy is not None else None
+    patience = policy.patience if policy is not None else 1
+    return _propagate_single(
+        p, cfg, driver, dtype, lb0, ub0, stop_progress=stop, patience=patience
+    )
+
+
+def _propagate_single(
+    p: Problem, cfg, driver, dtype, lb0, ub0,
+    stop_progress=None, patience: int = 1,
+) -> PropagationResult:
+    """One single-dtype fixed point (the tiered front end calls this twice)."""
     dp = DeviceProblem(p, dtype=dtype)
+    kw = dict(lb0=lb0, ub0=ub0, stop_progress=stop_progress, patience=patience)
     if driver == "host_loop":
-        return propagate_host_loop(dp, cfg, lb0=lb0, ub0=ub0)
+        return propagate_host_loop(dp, cfg, **kw)
     if driver == "device_loop":
-        return propagate_device_loop(dp, cfg, lb0=lb0, ub0=ub0)
+        return propagate_device_loop(dp, cfg, **kw)
     if driver == "unrolled":
-        return propagate_unrolled(dp, cfg, lb0=lb0, ub0=ub0)
+        return propagate_unrolled(dp, cfg, **kw)
     raise ValueError(f"unknown driver: {driver}")
 
 

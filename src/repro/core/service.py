@@ -74,9 +74,12 @@ from .types import DEFAULT_CONFIG, PropagationResult, PropagatorConfig
 #   8 active (slots,) bool            occupancy mask == still-running mask
 #   9 last_changed (slots,) bool      convergence evidence (as in fixed point)
 #  10 rounds (slots,) int32           per-slot rounds executed
+#  11 progress (slots,)               last round's progress measure (NaN fresh)
+#  12 flat   (slots,) int32           consecutive low-progress rounds
 _LB, _UB, _ACTIVE, _LAST_CHANGED, _ROUNDS = 6, 7, 8, 9, 10
+_PROGRESS, _FLAT = 11, 12
 _MATRIX_ARGS = 6          # state[:6] is the scattered matrix payload
-_STATE_ARGS = 11
+_STATE_ARGS = 13
 
 _TW_CANDIDATES = (8, 16, 32, 64, 128)
 
@@ -278,6 +281,13 @@ class _BucketEngine:
     new instance never retraces); ``admits[k]`` scatters ``k`` payloads
     into ``k`` slots in one dispatch (one compiled function per power of
     two bounds compiles at ~log2(slots) per bucket, all warmed up front).
+
+    The step also carries the per-slot *measure of progress* and its
+    low-progress streak (state planes 11/12); with ``stop_progress`` set,
+    a slot whose progress flatlines for ``patience`` consecutive rounds
+    drops out of ``active`` inside the device loop, so the pump's normal
+    retire path frees its slot early (``last_changed`` still True marks it
+    stopped-not-converged).
     """
 
     def __init__(
@@ -288,6 +298,8 @@ class _BucketEngine:
         rounds_per_step: int,
         use_pallas: bool,
         interpret: bool | None,
+        stop_progress: float | None = None,
+        patience: int = 1,
     ):
         from ..kernels import ops as kops  # lazy: kernels imports core at module scope
         from ..kernels import prop_round as kern
@@ -309,16 +321,17 @@ class _BucketEngine:
             and n_pad <= kops.SCATTER_MAX_NPAD and n_pad % LANE == 0
         )
         eps, int_eps, inf = self.eps, cfg.int_eps, cfg.inf
+        outward = cfg.outward_for(self.dev_dtype)
         max_rounds, budget = cfg.max_rounds, rounds_per_step
 
         def step(val, col, ii, crow, lhs_c, rhs_c,
-                 lb, ub, active, last_changed, rounds):
+                 lb, ub, active, last_changed, rounds, progress, flat):
             ti = jnp.asarray(tile_inst)
             if pallas_ok:
                 def round_fn(lb_, ub_, act):
                     return kern.batched_occupancy_round_tiles(
                         val, col, ii, lhs_c, rhs_c, lb_, ub_, ti, act,
-                        n_pad, eps, int_eps, inf, interpret,
+                        n_pad, eps, int_eps, inf, interpret, outward=outward,
                     )
             else:
                 col_g = col + ti[:, None, None] * n_pad
@@ -327,11 +340,13 @@ class _BucketEngine:
                         val, col_g, ii, crow, lhs_c, rhs_c, lb_, ub_, act,
                         m_total=m_total, n_pad=n_pad,
                         fits_one_chunk=spec.fits_one_chunk,
-                        eps=eps, int_eps=int_eps, inf=inf,
+                        eps=eps, int_eps=int_eps, inf=inf, outward=outward,
                     )
             return batched_step_rounds(
                 round_fn, lb, ub, active, last_changed, rounds,
                 max_rounds, budget=budget,
+                stop_progress=stop_progress, patience=patience,
+                progress=progress, flat=flat, with_progress=True,
             )
 
         self.step = jax.jit(
@@ -342,7 +357,7 @@ class _BucketEngine:
 
         def make_admit(kk: int):
             def admit(val, col, ii, crow, lhs_c, rhs_c,
-                      lb, ub, active, last_changed, rounds,
+                      lb, ub, active, last_changed, rounds, progress, flat,
                       p_val, p_col, p_ii, p_crow, p_lhs, p_rhs, p_lb, p_ub,
                       slot_ids, on):
                 tix = (slot_ids[:, None] * t + jnp.arange(t)[None, :]).reshape(-1)
@@ -358,8 +373,10 @@ class _BucketEngine:
                 active = active.at[slot_ids].set(on)
                 last_changed = last_changed.at[slot_ids].set(on)
                 rounds = rounds.at[slot_ids].set(0)
+                progress = progress.at[slot_ids].set(jnp.nan)
+                flat = flat.at[slot_ids].set(0)
                 return (val, col, ii, crow, lhs_c, rhs_c,
-                        lb, ub, active, last_changed, rounds)
+                        lb, ub, active, last_changed, rounds, progress, flat)
             return jax.jit(admit, **donate_kwargs(argnums=range(_STATE_ARGS)))
 
         self.admits = {
@@ -389,6 +406,8 @@ class _BucketEngine:
             jnp.asarray(np.zeros((s, spec.n_pad), dt)),
             jnp.asarray(np.zeros((s,), bool)),
             jnp.asarray(np.zeros((s,), bool)),
+            jnp.asarray(np.zeros((s,), np.int32)),
+            jnp.asarray(np.full((s,), np.nan, dt)),
             jnp.asarray(np.zeros((s,), np.int32)),
         )
 
@@ -450,16 +469,20 @@ def _engine_lru():
         return _engine_cache
 
 
-def _get_engine(spec, dtype, cfg, rounds_per_step, use_pallas, interpret):
+def _get_engine(spec, dtype, cfg, rounds_per_step, use_pallas, interpret,
+                stop_progress=None, patience=1):
     """Fetch-or-build the warmed engine of one bucket shape."""
     key = (
         spec, np.dtype(dtype).str, dataclasses.astuple(cfg),
-        rounds_per_step, use_pallas, interpret,
+        rounds_per_step, use_pallas, interpret, stop_progress, patience,
     )
     lru = _engine_lru()
     eng = lru.get(key, ())
     if eng is None:
-        eng = _BucketEngine(spec, dtype, cfg, rounds_per_step, use_pallas, interpret)
+        eng = _BucketEngine(
+            spec, dtype, cfg, rounds_per_step, use_pallas, interpret,
+            stop_progress=stop_progress, patience=patience,
+        )
         lru.put(key, (), eng)
     eng.warm()
     return eng
@@ -477,6 +500,7 @@ class _Bucket:
         self.slot_tickets: list[ServiceTicket | None] = [None] * spec.slots
         self.queue: deque[ServiceTicket] = deque()
         self.retired = 0
+        self.early_stopped = 0
         self.occupancy_sum = 0.0
         self.pumps = 0
 
@@ -493,6 +517,17 @@ class PropagationService:
     ``submit`` as a fully asynchronous request API.  All compiled engines
     are built and warmed at construction; steady-state operation never
     compiles, repacks a batch, or stops the device loop to retire/admit.
+
+    ``stop_progress``/``patience`` arm the progress-based early retire
+    (see :class:`repro.core.types.TierPolicy`): a resident slot whose
+    per-round *measure of progress* flatlines below ``stop_progress`` for
+    ``patience`` consecutive rounds is deactivated inside the device step
+    and retired at the next step boundary with ``converged=False`` and the
+    last measure in ``PropagationResult.progress`` -- freeing the slot for
+    the backlog instead of grinding out epsilon-level tail rounds.  A
+    whole-service fp32 tier is ``dtype=np.float32`` (the engines apply the
+    outward-rounded merge automatically); per-slot tier promotion is not a
+    service feature -- resubmit promoted instances to an fp64 service.
     """
 
     def __init__(
@@ -503,6 +538,8 @@ class PropagationService:
         rounds_per_step: int = 8,
         use_pallas: bool | None = None,
         interpret: bool | None = None,
+        stop_progress: float | None = None,
+        patience: int = 1,
     ):
         if not specs:
             raise ValueError("PropagationService needs at least one BucketSpec")
@@ -511,6 +548,7 @@ class PropagationService:
             use_pallas = not kern._on_cpu()
         self._cfg = cfg
         self._dtype = np.dtype(dtype)
+        self._stop_progress = stop_progress
         self._lock = threading.RLock()
         self._wake = threading.Event()
         self._stop_evt = threading.Event()
@@ -518,7 +556,8 @@ class PropagationService:
         self._submitted = 0
         self._buckets = [
             _Bucket(spec, _get_engine(
-                spec, dtype, cfg, rounds_per_step, use_pallas, interpret
+                spec, dtype, cfg, rounds_per_step, use_pallas, interpret,
+                stop_progress=stop_progress, patience=patience,
             ))
             for spec in specs
         ]
@@ -625,7 +664,7 @@ class PropagationService:
                 ]
                 if not done_slots:
                     continue
-                for idx in (_LB, _UB, _LAST_CHANGED, _ROUNDS):
+                for idx in (_LB, _UB, _LAST_CHANGED, _ROUNDS, _PROGRESS):
                     hint = getattr(bk.state[idx], "copy_to_host_async", None)
                     if callable(hint):
                         hint()
@@ -633,20 +672,28 @@ class PropagationService:
                 ub_h = np.asarray(bk.state[_UB])
                 lc_h = np.asarray(bk.state[_LAST_CHANGED])
                 rd_h = np.asarray(bk.state[_ROUNDS])
+                pg_h = np.asarray(bk.state[_PROGRESS])
                 now = time.perf_counter()
                 for i in done_slots:
                     tk = bk.slot_tickets[i]
                     n = tk.payload.n
                     lb_i = lb_h[i, :n].copy()
                     ub_i = ub_h[i, :n].copy()
+                    # An early-retired (flatlined) slot leaves last_changed
+                    # True with rounds below the cap: stopped, not converged.
+                    conv = not bool(lc_h[i])
+                    if (self._stop_progress is not None and not conv
+                            and int(rd_h[i]) < self._cfg.max_rounds):
+                        bk.early_stopped += 1
                     tk._result = PropagationResult(
                         lb=lb_i,
                         ub=ub_i,
                         rounds=int(rd_h[i]),
-                        converged=not bool(lc_h[i]),
+                        converged=conv,
                         infeasible=bool(
                             np.any(lb_i > ub_i + self._cfg.feas_eps)
                         ),
+                        progress=float(pg_h[i]),
                     )
                     tk.done_t = now
                     bk.slot_tickets[i] = None
@@ -751,6 +798,7 @@ class PropagationService:
                     "occupied": bk.occupied(),
                     "pending": len(bk.queue),
                     "retired": bk.retired,
+                    "early_stopped": bk.early_stopped,
                     "mean_occupancy": (
                         bk.occupancy_sum / bk.pumps if bk.pumps else 0.0
                     ),
@@ -769,6 +817,7 @@ class PropagationService:
             return {
                 "submitted": self._submitted,
                 "retired": sum(bk.retired for bk in self._buckets),
+                "early_stopped": sum(bk.early_stopped for bk in self._buckets),
                 "pending": sum(len(bk.queue) for bk in self._buckets),
                 "occupied": sum(bk.occupied() for bk in self._buckets),
                 "buckets": buckets,

@@ -21,6 +21,30 @@ import numpy as np
 INF = 1e20
 
 
+def _is_low_precision(dtype) -> bool:
+    return jnp.dtype(dtype) in (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16))
+
+
+def int_round_slack(dtype) -> float:
+    """Scale-aware integrality-rounding slack of a tier dtype.
+
+    ``ceil``/``floor`` amplify arithmetic error discontinuously: an fp32
+    candidate a few ulps above ``k - int_eps`` rounds to ``k`` where the
+    exact candidate rounds to ``k - 1`` -- an O(1) overtightening no merge-
+    side widening can undo.  Low-precision rounding therefore subtracts
+    (adds) ``slack * max(1, |candidate|)`` before the ceil (floor), treating
+    anything within the tier's accumulated-error margin of an integer as
+    that integer.  Same magnitude as the merge widening
+    (``PropagatorConfig.outward_eps_f32``); 0.0 for fp64 (exact rounding,
+    bitwise-identical to the pre-tier engines)."""
+    dt = jnp.dtype(dtype)
+    if dt == jnp.dtype(jnp.float32):
+        return 2.0**-17
+    if dt == jnp.dtype(jnp.bfloat16):
+        return 2.0**-6
+    return 0.0
+
+
 @dataclasses.dataclass(frozen=True)
 class PropagatorConfig:
     """Numeric + termination knobs shared by all propagator implementations."""
@@ -31,14 +55,62 @@ class PropagatorConfig:
     int_eps: float = 1e-6          # integrality rounding tolerance
     feas_eps: float = 1e-8         # empty-domain detection: l > u + feas_eps
     inf: float = INF
+    # fp32-tier outward rounding: every accepted tightening is widened back
+    # toward the old bound by ``outward_eps_f32 * max(1, |bound|)`` in the
+    # merge, so accumulated fp32 arithmetic error can never push a bound
+    # INSIDE the fp64 fixed point (no false infeasibility, promotion-safe).
+    # Must stay < tighten_eps_f32 so accepted updates still make strict
+    # progress and the fp32 fixed point terminates.
+    outward_eps_f32: float = 2.0**-17
 
     def eps_for(self, dtype) -> float:
-        if jnp.dtype(dtype) in (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16)):
+        if _is_low_precision(dtype):
             return self.tighten_eps_f32
         return self.tighten_eps
 
+    def outward_for(self, dtype) -> float:
+        """Outward-rounding width for a tier dtype (0.0 = exact merge).
+
+        fp64 merges stay exact (bitwise-compatible with every pre-tier
+        engine and oracle); low-precision tiers widen accepted tightenings
+        by this relative amount."""
+        return self.outward_eps_f32 if _is_low_precision(dtype) else 0.0
+
 
 DEFAULT_CONFIG = PropagatorConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class TierPolicy:
+    """Runtime policy for two-tier adaptive precision + progress control.
+
+    The *measure of progress* (Sofranac et al., arXiv:2106.07573, adapted
+    to sentinel-infinite bounds -- see ``bounds.progress_measure``) is a
+    per-round device scalar: the scale-normalized total bound movement of
+    the round.  Two decisions hang off it:
+
+      * **tier switch** (``two_tier``): rounds run in fp32 (half the
+        bytes/round of the fused dataflow, double the effective slab
+        width) while per-round progress stays >= ``switch_progress``;
+        once it drops below for ``patience`` consecutive rounds the
+        bounds are promoted (exact fp32->fp64 cast -- they are outward-
+        rounded, so never inside the fp64 fixed point) and the fp64
+        engine finishes the endgame.
+      * **early stop** (``stop_progress``): a fixed point whose progress
+        stays below this for ``patience`` rounds is declared flatlined
+        and stopped even though epsilon-level changes continue; the
+        service pump retires such slots early to keep occupancy high.
+        ``None`` disables the early stop (iterate to exact convergence).
+    """
+
+    two_tier: bool = True          # run an fp32 tier before the fp64 endgame
+    switch_progress: float = 1e-3  # fp32 tier: promote below this progress
+    stop_progress: float | None = None  # early stop threshold (None = off)
+    patience: int = 2              # consecutive low-progress rounds to act
+    fp32_round_frac: float = 0.5   # fp32 tier's share of the round cap
+
+
+DEFAULT_TIER_POLICY = TierPolicy()
 
 
 class Bounds(NamedTuple):
@@ -76,6 +148,8 @@ class PropagationResult(NamedTuple):
     rounds: jnp.ndarray        # () int32: propagation rounds executed
     converged: jnp.ndarray     # () bool: fixed point reached within cap
     infeasible: jnp.ndarray    # () bool: some variable domain became empty
+    progress: jnp.ndarray = jnp.nan    # () last round's progress measure
+    tier_rounds: jnp.ndarray = 0       # () int32: rounds run in the fp32 tier
 
 
 def is_pos_inf(v, inf: float = INF):

@@ -71,6 +71,7 @@ from ..core.propagator import (
     donate_kwargs,
     donate_supported,
     owned_copy,
+    two_tier_bounds_dtypes,
 )
 from ..core.sparse import (
     BlockEll,
@@ -80,16 +81,32 @@ from ..core.sparse import (
     csr_to_block_ell,
     pack_problems,
 )
-from ..core.types import DEFAULT_CONFIG, INF, PropagationResult, PropagatorConfig
+from ..core.types import (
+    DEFAULT_CONFIG,
+    INF,
+    PropagationResult,
+    PropagatorConfig,
+    TierPolicy,
+    _is_low_precision,
+)
 from . import prop_round as kern
 from . import ref as kref
+
+
+# Compact index streams: a low-precision tier whose padded column space fits
+# int16 narrows its per-nonzero index streams (col -> int16, the is_int
+# gather -> int8), shrinking the round's dominant HBM traffic beyond the
+# value-dtype halving alone (the fp32 fused round streams 7 B per padded
+# nonzero instead of 12).  Kernels compare/gather with the narrow ids
+# directly -- widening happens in registers, never at the HBM boundary.
+_COMPACT_COL_MAX_NPAD = 1 << 15
 
 
 class DeviceBlockEll(NamedTuple):
     """Device-resident block-ELL instance (pytree)."""
 
     val: jnp.ndarray        # (T, R, K)
-    col: jnp.ndarray        # (T, R, K) int32
+    col: jnp.ndarray        # (T, R, K) int32 (int16 on compact low-precision tiers)
     chunk_row: jnp.ndarray  # (T, R) int32 in [0, m]; m == padding
     lhs1: jnp.ndarray       # (m+1,) sides padded with one dummy slot at index m
     rhs1: jnp.ndarray       # (m+1,)
@@ -367,7 +384,9 @@ def build_slab_partition(
     in-kernel.  ``SlabPartition.duplication`` reports the chunk-copy
     blowup (near 1 unless single rows genuinely span many slabs)."""
     val = np.asarray(val)
-    col = np.asarray(col)
+    # Compact (int16) tier streams widen here: slab arithmetic below mixes
+    # columns with slab offsets that overflow narrow index types.
+    col = np.asarray(col, dtype=np.int32)
     chunk_row = np.asarray(chunk_row)
     tile_inst = np.asarray(tile_inst, dtype=np.int64)
     is_int_rows = np.asarray(is_int_rows)
@@ -700,10 +719,14 @@ def prepare_block_ell(
 
     d = device_block_ell(p, tile_rows, tile_width, dt)
     n_pad = kern.col_pad(p.n)
+    compact = _is_low_precision(dt) and n_pad <= _COMPACT_COL_MAX_NPAD
+    ii_g = d.is_int[d.col].astype(jnp.int8 if compact else jnp.int32)
+    if compact:
+        d = d._replace(col=d.col.astype(jnp.int16))
     padn = lambda x: jnp.concatenate([x, jnp.zeros((n_pad - p.n,), x.dtype)])
     prep = PreparedBlockEll(
         d=d,
-        ii_g=d.is_int[d.col].astype(jnp.int32),
+        ii_g=ii_g,
         lhs_g=d.lhs1[d.chunk_row],
         rhs_g=d.rhs1[d.chunk_row],
         lb0=padn(d.lb0) if n_pad > p.n else d.lb0,
@@ -742,6 +765,7 @@ def block_ell_round(
     use_pallas: bool = True,
     fused: bool = False,
     interpret: bool | None = None,
+    outward: float = 0.0,
 ):
     """One propagation round over block-ELL tiles (seed dataflow, kept as the
     legacy baseline: per-round constant gathers, candidates materialized in
@@ -790,7 +814,7 @@ def block_ell_round(
     flat_col = d.col.reshape(-1)
     best_l = jax.ops.segment_max(lcand.reshape(-1), flat_col, num_segments=n)
     best_u = jax.ops.segment_min(ucand.reshape(-1), flat_col, num_segments=n)
-    return bnd.apply_updates(lb, ub, best_l, best_u, eps, inf)
+    return bnd.apply_updates(lb, ub, best_l, best_u, eps, inf, outward)
 
 
 def _combine_chunk_partials(prep: PreparedBlockEll, mf, mc, xf, xc):
@@ -837,7 +861,7 @@ def _straddle_aggregates(part: SlabPartition, lb, ub, active, *, node, inf, inte
 def _partitioned_pallas_round(
     part: SlabPartition, lb, ub, active,
     *, node: bool, eps: float, int_eps: float, inf: float,
-    interpret: bool | None,
+    interpret: bool | None, outward: float = 0.0,
 ):
     """The one slab-round dataflow every partitioned engine shares, over
     ``(B, n_pad)`` bound planes: pad to the slab grid -> straddle-row
@@ -875,7 +899,7 @@ def _partitioned_pallas_round(
             part.val, part.col_s, part.ii_g, part.row_done, smf, smc, sxf, sxc,
             part.lhs_g, part.rhs_g, part.run_start, part.run_len,
             part.run_slab, active, lbp, ubp, part.slab, part.max_run_len,
-            eps, int_eps, inf, interpret,
+            eps, int_eps, inf, interpret, outward=outward,
         )
         changed = jnp.any(ch != 0, axis=1)
     else:
@@ -883,7 +907,7 @@ def _partitioned_pallas_round(
             part.val, part.col_s, part.ii_g, part.row_done, smf, smc, sxf, sxc,
             part.lhs_g, part.rhs_g, part.run_start, part.run_len,
             part.run_inst, part.run_slab, active, lbp, ubp, part.slab,
-            part.max_run_len, eps, int_eps, inf, interpret,
+            part.max_run_len, eps, int_eps, inf, interpret, outward=outward,
         )
         changed = jax.ops.segment_max(ch, part.run_inst, num_segments=bsz) != 0
     if extra:
@@ -904,6 +928,7 @@ def _prepared_round(
     scatter: str,
     interpret: bool | None,
     slab: int | None = None,
+    outward: float = 0.0,
 ):
     """One round over hoisted constants.  (lb, ub) live in the column-padded
     ``(n_pad,)`` domain end to end; only the bound gathers run in XLA."""
@@ -920,14 +945,15 @@ def _prepared_round(
             new_lb, new_ub, ch = _partitioned_pallas_round(
                 part, lb[None, :], ub[None, :], jnp.ones((1,), jnp.int32),
                 node=False, eps=eps, int_eps=int_eps, inf=inf,
-                interpret=interpret,
+                interpret=interpret, outward=outward,
             )
             return new_lb[0], new_ub[0], ch[0]
         best_l, best_u = kref.partitioned_round_ref(
             part, lb[None, :], ub[None, :], int_eps, inf
         )
         return bnd.apply_updates(
-            lb, ub, best_l[0, : prep.n_pad], best_u[0, : prep.n_pad], eps, inf
+            lb, ub, best_l[0, : prep.n_pad], best_u[0, : prep.n_pad], eps, inf,
+            outward,
         )
 
     if scatter == "fused":
@@ -968,8 +994,10 @@ def _prepared_round(
                     prep.lhs_g, prep.rhs_g, lb, ub, prep.n_pad, int_eps, inf,
                 )
         if use_pallas:
-            return kern.apply_updates_tiles(lb, ub, best_l, best_u, eps, inf, interpret)
-        return bnd.apply_updates(lb, ub, best_l, best_u, eps, inf)
+            return kern.apply_updates_tiles(
+                lb, ub, best_l, best_u, eps, inf, interpret, outward
+            )
+        return bnd.apply_updates(lb, ub, best_l, best_u, eps, inf, outward)
 
     # scatter == "segment": the materializing oracle path (hoisted gathers).
     lb_g = lb[d.col]
@@ -1003,7 +1031,7 @@ def _prepared_round(
     flat_col = d.col.reshape(-1)
     best_l = jax.ops.segment_max(lcand.reshape(-1), flat_col, num_segments=prep.n_pad)
     best_u = jax.ops.segment_min(ucand.reshape(-1), flat_col, num_segments=prep.n_pad)
-    return bnd.apply_updates(lb, ub, best_l, best_u, eps, inf)
+    return bnd.apply_updates(lb, ub, best_l, best_u, eps, inf, outward)
 
 
 def legacy_round_fn_for(
@@ -1027,6 +1055,7 @@ def legacy_round_fn_for(
         use_pallas=use_pallas,
         fused=prep.fits_one_chunk,
         interpret=interpret,
+        outward=cfg.outward_for(prep.d.val.dtype),
     )
 
 
@@ -1057,6 +1086,7 @@ def round_fn_for(
         scatter=scatter,
         interpret=interpret,
         slab=slab,
+        outward=cfg.outward_for(prep.d.val.dtype),
     )
 
 
@@ -1129,6 +1159,9 @@ def propagate_block_ell(
     lb0=None,
     ub0=None,
     slab: int | None = None,
+    stop_progress: float | None = None,
+    patience: int = 1,
+    policy: TierPolicy | None = None,
 ) -> PropagationResult:
     """Kernel-backed propagation.
 
@@ -1143,9 +1176,52 @@ def propagate_block_ell(
     ``lb0``/``ub0`` warm-start the fixed point from caller-supplied bounds:
     the prepared tiles, hoisted gathers AND the compiled fixed point are all
     cached per matrix structure, so propagating a B&B node costs one
-    dispatch with two (n,) uploads -- no repacking, no recompilation."""
+    dispatch with two (n,) uploads -- no repacking, no recompilation.
+
+    ``stop_progress``/``patience`` arm the progress-based early stop (see
+    ``bounds.progress_measure``); ``policy`` (a :class:`TierPolicy`) runs
+    the two-tier precision scheme -- an fp32 tier with outward-rounded
+    merges until per-round progress drops below ``policy.switch_progress``,
+    then an exact-cast promotion into the requested dtype for the endgame.
+    Both tiers reuse their own dtype-keyed prepared engines and compiled
+    runners, so tiered tree search stays recompile-free."""
     if driver not in ("host_loop", "device_loop"):
         raise ValueError(f"unknown driver: {driver!r}")
+    pair = two_tier_bounds_dtypes(policy, dtype) if policy is not None else None
+    if pair is not None:
+        dt32, final = pair
+        kw = dict(
+            tile_rows=tile_rows, tile_width=tile_width, use_pallas=use_pallas,
+            fused=fused, driver=driver, interpret=interpret, scatter=scatter,
+            donate=donate, slab=slab, patience=policy.patience,
+        )
+        cap32 = max(1, int(cfg.max_rounds * policy.fp32_round_frac))
+        r32 = propagate_block_ell(
+            p, dataclasses.replace(cfg, max_rounds=cap32), dtype=dt32,
+            lb0=lb0, ub0=ub0, stop_progress=policy.switch_progress, **kw,
+        )
+        if bool(r32.infeasible):
+            # fp32 infeasibility is never trusted (see core.propagator):
+            # re-derive the verdict in the final dtype from scratch.
+            r = propagate_block_ell(
+                p, cfg, dtype=final, lb0=lb0, ub0=ub0,
+                stop_progress=policy.stop_progress, **kw,
+            )
+            return r._replace(tier_rounds=r32.rounds)
+        rem = dataclasses.replace(
+            cfg, max_rounds=max(1, cfg.max_rounds - int(r32.rounds))
+        )
+        warm_lb, warm_ub = bnd.canonical_infinite(
+            jnp.asarray(r32.lb, final), jnp.asarray(r32.ub, final)
+        )
+        r = propagate_block_ell(
+            p, rem, dtype=final, lb0=warm_lb, ub0=warm_ub,
+            stop_progress=policy.stop_progress, **kw,
+        )
+        return r._replace(rounds=r.rounds + r32.rounds, tier_rounds=r32.rounds)
+    if policy is not None:
+        stop_progress = policy.stop_progress
+        patience = policy.patience
     prep = prepare_block_ell(p, tile_rows, tile_width, dtype)
     do_fuse = (
         prep.fits_one_chunk if fused == "auto" else bool(fused == "yes" or fused is True)
@@ -1156,7 +1232,7 @@ def propagate_block_ell(
 
     key = (
         id(prep.d.val), cfg, use_pallas, do_fuse, scatter, interpret, do_donate,
-        driver, slab,
+        driver, slab, stop_progress, patience,
     )
     anchors = (prep.d.val,)
 
@@ -1175,24 +1251,38 @@ def propagate_block_ell(
             slab=slab,
         )
         if driver == "host_loop":
-            return jax.jit(round_fn, **donate_kw)
+            # Progress is computed INSIDE the jit, where the pre-round
+            # bounds are still live (they are donated away by the call).
+            def step(lb, ub):
+                nlb, nub, ch = round_fn(lb, ub)
+                return nlb, nub, ch, bnd.progress_measure(lb, ub, nlb, nub)
+
+            return jax.jit(step, **donate_kw)
 
         @functools.partial(jax.jit, **donate_kw)
         def run(lb0, ub0):
             def body(state):
-                lb, ub, _, r = state
-                lb, ub, ch = round_fn(lb, ub)
-                return lb, ub, ch, r + 1
+                lb, ub, _, r, _, flat = state
+                nlb, nub, ch = round_fn(lb, ub)
+                prog = bnd.progress_measure(lb, ub, nlb, nub)
+                if stop_progress is not None:
+                    flat = jnp.where(prog < stop_progress, flat + 1, jnp.int32(0))
+                return nlb, nub, ch, r + 1, prog, flat
 
             def cond(state):
-                _, _, ch, r = state
-                return ch & (r < cfg.max_rounds)
+                _, _, ch, r, _, flat = state
+                go = ch & (r < cfg.max_rounds)
+                if stop_progress is not None:
+                    go = go & (flat < patience)
+                return go
 
-            lb, ub, ch, r = jax.lax.while_loop(
-                cond, body, (lb0, ub0, jnp.asarray(True), jnp.int32(0))
+            init = (
+                lb0, ub0, jnp.asarray(True), jnp.int32(0),
+                jnp.asarray(jnp.nan, lb0.dtype), jnp.int32(0),
             )
+            lb, ub, ch, r, prog, _ = jax.lax.while_loop(cond, body, init)
             lb, ub = lb[:n], ub[:n]
-            return lb, ub, r, ~ch, jnp.any(lb > ub + cfg.feas_eps)
+            return lb, ub, r, ~ch, jnp.any(lb > ub + cfg.feas_eps), prog
 
         return run
 
@@ -1204,20 +1294,26 @@ def propagate_block_ell(
     lb, ub = _initial_padded_bounds(prep, lb0, ub0)
 
     if driver == "host_loop":
-        rounds, changed = 0, True
+        rounds, changed, flat = 0, True, 0
+        prog = jnp.asarray(jnp.nan, lb.dtype)
         while changed and rounds < cfg.max_rounds:
             # Donated in, fresh buffers out: the loop owns its bounds, so XLA
             # reuses the same two (n_pad,) buffers round over round.
-            lb, ub, cdev = runner(lb, ub)
+            lb, ub, cdev, prog = runner(lb, ub)
             changed = bool(cdev)
             rounds += 1
+            if stop_progress is not None:
+                flat = flat + 1 if float(prog) < stop_progress else 0
+                if flat >= patience:
+                    break
         infeas = bool(jnp.any(lb[:n] > ub[:n] + cfg.feas_eps))
         return PropagationResult(
-            lb[:n], ub[:n], jnp.int32(rounds), jnp.asarray(not changed), jnp.asarray(infeas)
+            lb[:n], ub[:n], jnp.int32(rounds), jnp.asarray(not changed),
+            jnp.asarray(infeas), progress=prog,
         )
 
-    lb, ub, rounds, converged, infeasible = runner(lb, ub)
-    return PropagationResult(lb, ub, rounds, converged, infeasible)
+    lb, ub, rounds, converged, infeasible, prog = runner(lb, ub)
+    return PropagationResult(lb, ub, rounds, converged, infeasible, progress=prog)
 
 
 # ---------------------------------------------------------------------------
@@ -1342,7 +1438,7 @@ def prepare_problem_batch(batch: ProblemBatch, dtype=None) -> PreparedBatch:
 def batched_reference_round(
     val, col_g, ii_g, chunk_row, lhs_g, rhs_g, lb, ub, active,
     *, m_total: int, n_pad: int, fits_one_chunk: bool,
-    eps: float, int_eps: float, inf: float,
+    eps: float, int_eps: float, inf: float, outward: float = 0.0,
 ):
     """One batched round at the data level (jnp oracle arithmetic), usable
     under ``shard_map``/``jit`` with the batch axis as a plain leading dim
@@ -1362,13 +1458,14 @@ def batched_reference_round(
         )
     best_l = jnp.where(active[:, None], best_l, -inf)
     best_u = jnp.where(active[:, None], best_u, inf)
-    return bnd.apply_updates_batch(lb, ub, best_l, best_u, eps, inf)
+    return bnd.apply_updates_batch(lb, ub, best_l, best_u, eps, inf, outward)
 
 
 def _batched_prepared_round(
     prep: PreparedBatch, lb, ub, active,
     *, eps: float, int_eps: float, inf: float,
     use_pallas: bool, interpret: bool | None, slab: int | None = None,
+    outward: float = 0.0,
 ):
     """One round over a prepared bucket: ``(B, n_pad)`` bounds + ``(B,)``
     active mask -> updated bounds + per-instance changed flags.
@@ -1388,18 +1485,19 @@ def _batched_prepared_round(
             d.tile_inst, active, prep.n_pad, int_eps, inf, interpret,
         )
         return kern.apply_updates_batch_tiles(
-            lb, ub, best_l, best_u, active, eps, inf, interpret
+            lb, ub, best_l, best_u, active, eps, inf, interpret, outward
         )
     if use_pallas and prep.n_pad > SCATTER_MAX_NPAD:
         return _partitioned_pallas_round(
             prep.slab_partition(slab), lb, ub, active,
             node=False, eps=eps, int_eps=int_eps, inf=inf, interpret=interpret,
+            outward=outward,
         )
     return batched_reference_round(
         d.val, d.col_g, d.ii_g, d.chunk_row, d.lhs_g, d.rhs_g, lb, ub, active,
         m_total=prep.m_total, n_pad=prep.n_pad,
         fits_one_chunk=prep.fits_one_chunk,
-        eps=eps, int_eps=int_eps, inf=inf,
+        eps=eps, int_eps=int_eps, inf=inf, outward=outward,
     )
 
 
@@ -1424,15 +1522,17 @@ def batched_round_fn_for(
         use_pallas=use_pallas,
         interpret=interpret,
         slab=slab,
+        outward=cfg.outward_for(prep.d.val.dtype),
     )
 
 
-def _unpack_batch_results(prep, lb, ub, rounds, converged, infeasible):
+def _unpack_batch_results(prep, lb, ub, rounds, converged, infeasible, progress=None):
     out = []
     for i, p in enumerate(prep.batch.problems):
         out.append(
             PropagationResult(
-                lb[i, : p.n], ub[i, : p.n], rounds[i], converged[i], infeasible[i]
+                lb[i, : p.n], ub[i, : p.n], rounds[i], converged[i], infeasible[i],
+                progress=jnp.nan if progress is None else progress[i],
             )
         )
     return out
@@ -1461,11 +1561,18 @@ def batched_device_runner(
     interpret: bool | None = None,
     donate: bool | None = None,
     slab: int | None = None,
+    stop_progress: float | None = None,
+    patience: int = 1,
 ):
     """The bucket's whole fixed point as ONE jitted dispatch, cached:
-    ``run(lb0, ub0) -> (lb, ub, rounds, converged, infeasible)`` (all
-    per-instance; ``lb0``/``ub0`` donated where supported)."""
-    key = (id(prep), cfg, use_pallas, interpret, donate, slab, "device")
+    ``run(lb0, ub0) -> (lb, ub, rounds, converged, infeasible, progress)``
+    (all per-instance; ``lb0``/``ub0`` donated where supported).
+    ``stop_progress``/``patience`` arm the per-instance progress-based
+    early stop inside the dispatch."""
+    key = (
+        id(prep), cfg, use_pallas, interpret, donate, slab,
+        stop_progress, patience, "device",
+    )
 
     def build():
         round_fn = batched_round_fn_for(prep, cfg, use_pallas, interpret, slab)
@@ -1477,11 +1584,13 @@ def batched_device_runner(
 
         @functools.partial(jax.jit, **donate_kw)
         def run(lb0, ub0):
-            lb, ub, rounds, converged = batched_fixed_point(
-                round_fn, lb0, ub0, cfg.max_rounds
+            lb, ub, rounds, converged, progress = batched_fixed_point(
+                round_fn, lb0, ub0, cfg.max_rounds,
+                stop_progress=stop_progress, patience=patience,
+                with_progress=True,
             )
             infeasible = jnp.any((lb > ub + cfg.feas_eps) & col_valid, axis=-1)
-            return lb, ub, rounds, converged, infeasible
+            return lb, ub, rounds, converged, infeasible, progress
 
         return run
 
@@ -1515,6 +1624,8 @@ def propagate_batch_prepared(
     lb0=None,
     ub0=None,
     slab: int | None = None,
+    stop_progress: float | None = None,
+    patience: int = 1,
 ):
     """Run one prepared bucket to its per-instance fixed points.
 
@@ -1538,33 +1649,51 @@ def propagate_batch_prepared(
                 donate_kw = donate_kwargs(argnums=(0, 1))
             else:
                 donate_kw = {"donate_argnums": (0, 1)} if donate else {}
-            return jax.jit(round_fn, **donate_kw)
+
+            # Progress is computed INSIDE the jit, where the pre-round
+            # bounds are still live (they are donated away by the call).
+            def step(lb, ub, active):
+                nlb, nub, ch = round_fn(lb, ub, active)
+                return nlb, nub, ch, bnd.progress_measure(lb, ub, nlb, nub)
+
+            return jax.jit(step, **donate_kw)
 
         jit_round = _cached_batch_runner(prep, key, build)
         lb, ub = _batch_initial_bounds(prep, lb0, ub0)
         active = np.ones(bsz, dtype=bool)
         last_changed = np.ones(bsz, dtype=bool)
         rounds = np.zeros(bsz, dtype=np.int32)
+        flat = np.zeros(bsz, dtype=np.int32)
+        progress = np.full(bsz, np.nan)
         while active.any():
-            lb, ub, ch = jit_round(lb, ub, jnp.asarray(active))
+            lb, ub, ch, prog = jit_round(lb, ub, jnp.asarray(active))
             ch = np.asarray(ch)  # the per-round host<->device sync point
+            prog = np.asarray(prog)
             rounds += active
             last_changed = np.where(active, ch, last_changed)
+            progress = np.where(active, prog, progress)
             active = active & ch & (rounds < cfg.max_rounds)
+            if stop_progress is not None:
+                flat = np.where(active & (prog < stop_progress), flat + 1, 0)
+                active = active & (flat < patience)
         infeasible = np.asarray(
             jnp.any((lb > ub + cfg.feas_eps) & d.col_valid, axis=-1)
         )
         return _unpack_batch_results(
-            prep, lb, ub, rounds, ~last_changed, infeasible
+            prep, lb, ub, rounds, ~last_changed, infeasible, progress
         )
 
     if driver != "device_loop":
         raise ValueError(f"unknown driver: {driver!r}")
 
-    run = batched_device_runner(prep, cfg, use_pallas, interpret, donate, slab)
+    run = batched_device_runner(
+        prep, cfg, use_pallas, interpret, donate, slab, stop_progress, patience
+    )
     lb_init, ub_init = _batch_initial_bounds(prep, lb0, ub0)
-    lb, ub, rounds, converged, infeasible = run(lb_init, ub_init)
-    return _unpack_batch_results(prep, lb, ub, rounds, converged, infeasible)
+    lb, ub, rounds, converged, infeasible, progress = run(lb_init, ub_init)
+    return _unpack_batch_results(
+        prep, lb, ub, rounds, converged, infeasible, progress
+    )
 
 
 # Packed-batch cache (maxsize 8, see ``cache_info()``): serving
@@ -1649,6 +1778,9 @@ def propagate_batch_block_ell(
     donate: bool | None = None,
     bounds=None,
     slab: int | None = None,
+    stop_progress: float | None = None,
+    patience: int = 1,
+    policy: TierPolicy | None = None,
 ):
     """Batched kernel-backed propagation: pack -> per-bucket dispatch ->
     per-instance results in input order.  Packing, device transfer and the
@@ -1657,8 +1789,55 @@ def propagate_batch_block_ell(
     ``(lb, ub)`` pair or ``None`` per problem, input order) warm-starts
     instances from caller bounds through the SAME packed tiles and compiled
     runners -- nothing is repacked or recompiled.  The public front end is
-    ``repro.core.propagate_batch``."""
+    ``repro.core.propagate_batch``.
+
+    ``stop_progress``/``patience`` arm the per-instance progress-based
+    early stop; ``policy`` (a :class:`TierPolicy`) runs the whole batch
+    through the two-tier precision scheme -- an fp32 pass (outward-rounded
+    merges) until each instance's progress drops below
+    ``policy.switch_progress``, then an exact-cast warm start of the
+    requested-dtype engine through the same packed batches."""
     problems = list(problems)
+    pair = two_tier_bounds_dtypes(policy, dtype) if policy is not None else None
+    if pair is not None:
+        dt32, final = pair
+        kw = dict(
+            tile_rows=tile_rows, tile_width=tile_width, use_pallas=use_pallas,
+            driver=driver, interpret=interpret, donate=donate, slab=slab,
+            patience=policy.patience,
+        )
+        cap32 = max(1, int(cfg.max_rounds * policy.fp32_round_frac))
+        r32 = propagate_batch_block_ell(
+            problems, dataclasses.replace(cfg, max_rounds=cap32),
+            dtype=dt32, bounds=bounds,
+            stop_progress=policy.switch_progress, **kw,
+        )
+        # Per-instance promotion, except that an instance whose fp32 tier
+        # declared infeasibility restarts from its ORIGINAL bounds (fp32
+        # verdicts are never trusted -- see core.propagator).
+        orig = bounds if bounds is not None else [None] * len(problems)
+        warm = [
+            None if bool(t.infeasible) else bnd.canonical_infinite(
+                jnp.asarray(t.lb, final), jnp.asarray(t.ub, final)
+            )
+            for t in r32
+        ]
+        warm = [w if w is not None else o for w, o in zip(warm, orig)]
+        rem = dataclasses.replace(cfg, max_rounds=max(1, cfg.max_rounds - cap32))
+        res = propagate_batch_block_ell(
+            problems, rem, dtype=final, bounds=warm,
+            stop_progress=policy.stop_progress, **kw,
+        )
+        return [
+            r._replace(
+                rounds=r.rounds + (0 if bool(t.infeasible) else t.rounds),
+                tier_rounds=t.rounds,
+            )
+            for r, t in zip(res, r32)
+        ]
+    if policy is not None:
+        stop_progress = policy.stop_progress
+        patience = policy.patience
     if bounds is not None:
         bounds = list(bounds)
         if len(bounds) != len(problems):
@@ -1675,6 +1854,7 @@ def propagate_batch_block_ell(
         results = propagate_batch_prepared(
             prep, cfg, use_pallas=use_pallas, driver=driver,
             interpret=interpret, donate=donate, lb0=lb0, ub0=ub0, slab=slab,
+            stop_progress=stop_progress, patience=patience,
         )
         for idx, res in zip(batch.indices, results):
             out[idx] = res
@@ -1690,6 +1870,7 @@ def _node_round(
     prep: PreparedBlockEll, lb, ub, active,
     *, eps: float, int_eps: float, inf: float,
     use_pallas: bool, interpret: bool | None, slab: int | None = None,
+    outward: float = 0.0,
 ):
     """One round over a node batch: ``(B, n_pad)`` per-node bounds +
     ``(B,)`` active mask -> updated bounds + per-node changed flags, with
@@ -1711,12 +1892,13 @@ def _node_round(
             active, prep.n_pad, int_eps, inf, interpret,
         )
         return kern.apply_updates_batch_tiles(
-            lb, ub, best_l, best_u, active, eps, inf, interpret
+            lb, ub, best_l, best_u, active, eps, inf, interpret, outward
         )
     if use_pallas and prep.n_pad > SCATTER_MAX_NPAD:
         return _partitioned_pallas_round(
             prep.slab_partition(slab), lb, ub, active,
             node=True, eps=eps, int_eps=int_eps, inf=inf, interpret=interpret,
+            outward=outward,
         )
     single = functools.partial(
         _prepared_round,
@@ -1728,6 +1910,7 @@ def _node_round(
         fused=prep.fits_one_chunk,
         scatter=_resolve_scatter("auto", prep),
         interpret=interpret,
+        outward=outward,
     )
     new_lb, new_ub, changed = jax.vmap(single)(lb, ub)
     lb = jnp.where(active[:, None], new_lb, lb)
@@ -1756,6 +1939,7 @@ def node_round_fn_for(
         use_pallas=use_pallas,
         interpret=interpret,
         slab=slab,
+        outward=cfg.outward_for(prep.d.val.dtype),
     )
 
 
@@ -1774,13 +1958,19 @@ def node_batch_runner(
     interpret: bool | None = None,
     donate: bool | None = None,
     slab: int | None = None,
+    stop_progress: float | None = None,
+    patience: int = 1,
 ):
     """The node batch's whole fixed point as ONE jitted dispatch, cached:
-    ``run(lb0, ub0) -> (lb, ub, rounds, converged, infeasible)`` with the
-    node axis leading everywhere (``lb0``/``ub0`` donated where
-    supported)."""
+    ``run(lb0, ub0) -> (lb, ub, rounds, converged, infeasible, progress)``
+    with the node axis leading everywhere (``lb0``/``ub0`` donated where
+    supported).  ``stop_progress``/``patience`` arm the per-node
+    progress-based early stop inside the dispatch."""
     do_donate = donate_supported() if donate is None else bool(donate)
-    key = (id(prep.d.val), batch_size, cfg, use_pallas, interpret, do_donate, slab)
+    key = (
+        id(prep.d.val), batch_size, cfg, use_pallas, interpret, do_donate, slab,
+        stop_progress, patience,
+    )
     anchors = (prep.d.val,)
     runner = _node_runner_cache.get(key, anchors)
     if runner is not None:
@@ -1792,11 +1982,12 @@ def node_batch_runner(
 
     @functools.partial(jax.jit, **donate_kw)
     def run(lb0, ub0):
-        lb, ub, rounds, converged = batched_fixed_point(
-            round_fn, lb0, ub0, cfg.max_rounds
+        lb, ub, rounds, converged, progress = batched_fixed_point(
+            round_fn, lb0, ub0, cfg.max_rounds,
+            stop_progress=stop_progress, patience=patience, with_progress=True,
         )
         infeasible = jnp.any((lb > ub + cfg.feas_eps) & col_valid[None, :], axis=-1)
-        return lb, ub, rounds, converged, infeasible
+        return lb, ub, rounds, converged, infeasible, progress
 
     _node_runner_cache.put(key, anchors, run)
     return run
@@ -1811,16 +2002,22 @@ def propagate_nodes_prepared(
     interpret: bool | None = None,
     donate: bool | None = None,
     slab: int | None = None,
+    stop_progress: float | None = None,
+    patience: int = 1,
+    with_progress: bool = False,
 ):
     """Run B warm-started nodes of one prepared instance to their fixed
     points in ONE dispatch.
 
     ``lb_nodes``/``ub_nodes`` are ``(B, n)`` per-node bound planes (the
     only per-node state -- the matrix tiles are resident once).  Returns
-    ``(lb, ub, rounds, converged, infeasible)`` with the node axis leading;
-    ``infeasible`` marks nodes whose domain emptied (prune them).  Each
-    node's result is exactly what its own single-instance warm-started
-    ``propagate_block_ell`` run would produce, including round counts."""
+    ``(lb, ub, rounds, converged, infeasible)`` with the node axis leading
+    (``with_progress=True`` appends the ``(B,)`` last-round progress
+    measure); ``infeasible`` marks nodes whose domain emptied (prune
+    them).  ``stop_progress``/``patience`` arm the per-node progress-based
+    early stop.  Each node's result is exactly what its own
+    single-instance warm-started ``propagate_block_ell`` run would
+    produce, including round counts."""
     lb_nodes = np.asarray(lb_nodes)
     ub_nodes = np.asarray(ub_nodes)
     if lb_nodes.ndim != 2 or lb_nodes.shape != ub_nodes.shape:
@@ -1839,9 +2036,13 @@ def propagate_nodes_prepared(
         if pad:
             plane = np.concatenate([plane, np.zeros((bsz, pad), dt)], axis=1)
         planes.append(jnp.asarray(plane))
-    run = node_batch_runner(prep, bsz, cfg, use_pallas, interpret, donate, slab)
-    lb, ub, rounds, converged, infeasible = run(*planes)
-    return lb[:, : prep.n], ub[:, : prep.n], rounds, converged, infeasible
+    run = node_batch_runner(
+        prep, bsz, cfg, use_pallas, interpret, donate, slab,
+        stop_progress, patience,
+    )
+    lb, ub, rounds, converged, infeasible, progress = run(*planes)
+    out = (lb[:, : prep.n], ub[:, : prep.n], rounds, converged, infeasible)
+    return out + (progress,) if with_progress else out
 
 
 # ---------------------------------------------------------------------------

@@ -80,11 +80,21 @@ from ..core import bounds as bnd
 # col_pad moved to core.sparse with the batch packing; re-exported here (the
 # redundant alias marks the intentional re-export) for kernel-level callers.
 from ..core.sparse import LANE as LANE, col_pad as col_pad
-from ..core.types import INF
+from ..core.types import INF, int_round_slack
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _int_operand(x):
+    """Integer pallas_call operand: bools widen to int32, integer dtypes
+    pass through unchanged -- compact low-precision index streams (int16
+    cols / int8 integrality marks) must reach the kernel narrow, since an
+    entry-point widening would materialize an int32 copy at the HBM
+    boundary and forfeit the tier's byte savings."""
+    x = jnp.asarray(x)
+    return x.astype(jnp.int32) if x.dtype == jnp.bool_ else x
 
 
 # ---------------------------------------------------------------------------
@@ -174,8 +184,16 @@ def tile_candidates(
 
     do_l = is_int_g & (jnp.abs(lcand) < inf)
     do_u = is_int_g & (jnp.abs(ucand) < inf)
-    lcand = jnp.where(do_l, jnp.ceil(lcand - int_eps), lcand)
-    ucand = jnp.where(do_u, jnp.floor(ucand + int_eps), ucand)
+    # Low-precision tiers widen the integrality rounding by the dtype's
+    # scale-aware slack (see core.types.int_round_slack): ceil/floor are
+    # discontinuous, so tier arithmetic error must not cross an integer.
+    slack = int_round_slack(jnp.result_type(lcand))
+    sl = su = int_eps
+    if slack:  # static per dtype: fp64 keeps the exact scalar subtraction
+        sl = int_eps + slack * jnp.maximum(1.0, jnp.abs(lcand))
+        su = int_eps + slack * jnp.maximum(1.0, jnp.abs(ucand))
+    lcand = jnp.where(do_l, jnp.ceil(lcand - sl), lcand)
+    ucand = jnp.where(do_u, jnp.floor(ucand + su), ucand)
     return lcand, ucand
 
 
@@ -364,7 +382,7 @@ def candidates_tiles(
         val,
         lb_g,
         ub_g,
-        is_int_g.astype(jnp.int32),
+        _int_operand(is_int_g),
         row_min_fin,
         row_min_cnt,
         row_max_fin,
@@ -423,7 +441,7 @@ def fused_round_tiles(
         out_shape=out_shape,
         interpret=interpret,
     )
-    return fn(val, lb_g, ub_g, is_int_g.astype(jnp.int32), lhs_g, rhs_g)
+    return fn(val, lb_g, ub_g, _int_operand(is_int_g), lhs_g, rhs_g)
 
 
 # ---------------------------------------------------------------------------
@@ -601,7 +619,7 @@ def fused_scatter_round_tiles(
         interpret=interpret,
     )
     best_l, best_u = fn(
-        val, col, is_int_g.astype(jnp.int32), lhs_g, rhs_g,
+        val, col, _int_operand(is_int_g), lhs_g, rhs_g,
         lb.reshape(1, n_pad), ub.reshape(1, n_pad),
     )
     return best_l.reshape(n_pad), best_u.reshape(n_pad)
@@ -677,7 +695,7 @@ def candidates_scatter_tiles(
         interpret=interpret,
     )
     best_l, best_u = fn(
-        val, col, is_int_g.astype(jnp.int32),
+        val, col, _int_operand(is_int_g),
         row_min_fin, row_min_cnt, row_max_fin, row_max_cnt, lhs_g, rhs_g,
         lb.reshape(1, n_pad), ub.reshape(1, n_pad),
     )
@@ -690,10 +708,10 @@ def candidates_scatter_tiles(
 
 
 def _apply_updates_kernel(
-    lb_ref, ub_ref, bl_ref, bu_ref, nlb_ref, nub_ref, ch_ref, *, eps, inf
+    lb_ref, ub_ref, bl_ref, bu_ref, nlb_ref, nub_ref, ch_ref, *, eps, inf, outward
 ):
     new_lb, new_ub, changed = bnd.apply_updates(
-        lb_ref[...], ub_ref[...], bl_ref[...], bu_ref[...], eps, inf
+        lb_ref[...], ub_ref[...], bl_ref[...], bu_ref[...], eps, inf, outward
     )
     nlb_ref[...] = new_lb
     nub_ref[...] = new_ub
@@ -708,13 +726,15 @@ def apply_updates_tiles(
     eps: float,
     inf: float = INF,
     interpret: bool | None = None,
+    outward: float = 0.0,
 ):
     """Pallas merge kernel: (n_pad,) bounds x best candidates -> updated
     bounds + changed flag.  The bound buffers are donated
     (``input_output_aliases``) so the update is in place on device.
 
     Shares ``bounds.apply_updates`` with every other engine, so all paths
-    converge to identical fixed points by construction."""
+    converge to identical fixed points by construction; ``outward`` is the
+    fp32-tier safety widening (0.0 = exact fp64 merge)."""
     if interpret is None:
         interpret = _on_cpu()
     (n_pad,) = lb.shape
@@ -726,7 +746,7 @@ def apply_updates_tiles(
         jax.ShapeDtypeStruct((1, 1), jnp.int32),
     ]
     fn = pl.pallas_call(
-        functools.partial(_apply_updates_kernel, eps=eps, inf=inf),
+        functools.partial(_apply_updates_kernel, eps=eps, inf=inf, outward=outward),
         in_specs=[vec, vec, vec, vec],
         out_specs=[vec, vec, pl.BlockSpec((1, 1), lambda: (0, 0))],
         out_shape=out_shape,
@@ -851,7 +871,7 @@ def batched_fused_scatter_round_tiles(
     )
     return fn(
         tile_inst.astype(jnp.int32), active.astype(jnp.int32),
-        val, col, is_int_g.astype(jnp.int32), lhs_g, rhs_g, lb, ub,
+        val, col, _int_operand(is_int_g), lhs_g, rhs_g, lb, ub,
     )
 
 
@@ -871,6 +891,7 @@ def batched_occupancy_round_tiles(
     inf: float = INF,
     interpret: bool | None = None,
     block: int = LANE,
+    outward: float = 0.0,
 ):
     """One full occupancy-masked round (candidates + scatter + merge) over a
     slot-resident super-tile: ``(S*T, R, K)`` tile stream, ``(S, n_pad)``
@@ -890,7 +911,7 @@ def batched_occupancy_round_tiles(
         n_pad, int_eps, inf, interpret, block,
     )
     return apply_updates_batch_tiles(
-        lb, ub, best_l, best_u, occupied, eps, inf, interpret
+        lb, ub, best_l, best_u, occupied, eps, inf, interpret, outward
     )
 
 
@@ -994,7 +1015,7 @@ def node_fused_scatter_round_tiles(
     )
     return fn(
         active.astype(jnp.int32),
-        val, col, is_int_g.astype(jnp.int32), lhs_g, rhs_g, lb, ub,
+        val, col, _int_operand(is_int_g), lhs_g, rhs_g, lb, ub,
     )
 
 
@@ -1177,7 +1198,7 @@ def _batched_slab_round_kernel(
     smf_ref, smc_ref, sxf_ref, sxc_ref,
     lhs_ref, rhs_ref, lb_ref, ub_ref,
     nlb_ref, nub_ref, ch_ref,
-    acc_l, acc_u, *, eps, int_eps, inf, block,
+    acc_l, acc_u, *, eps, int_eps, inf, outward, block,
 ):
     """The fused slab-parallel round kernel over a partitioned (optionally
     batched) stream on the 2D ``(run, tile)`` grid.
@@ -1227,7 +1248,7 @@ def _batched_slab_round_kernel(
     def _():
         lb, ub = lb_ref[...], ub_ref[...]
         new_lb, new_ub, changed = bnd.apply_updates(
-            lb, ub, acc_l[...], acc_u[...], eps, inf
+            lb, ub, acc_l[...], acc_u[...], eps, inf, outward
         )
         nlb_ref[...] = jnp.where(act, new_lb, lb)
         nub_ref[...] = jnp.where(act, new_ub, ub)
@@ -1259,6 +1280,7 @@ def batched_slab_round_tiles(
     inf: float = INF,
     interpret: bool | None = None,
     block: int = LANE,
+    outward: float = 0.0,
 ):
     """The fused slab-parallel round over a partitioned stream: candidates,
     per-slab scatter AND the bound merge in ONE kernel on the 2D ``(run,
@@ -1307,7 +1329,8 @@ def batched_slab_round_tiles(
     ]
     fn = pl.pallas_call(
         functools.partial(
-            _batched_slab_round_kernel, eps=eps, int_eps=int_eps, inf=inf, block=block
+            _batched_slab_round_kernel, eps=eps, int_eps=int_eps, inf=inf,
+            outward=outward, block=block,
         ),
         grid_spec=grid_spec,
         out_shape=out_shape,
@@ -1318,7 +1341,7 @@ def batched_slab_round_tiles(
         run_start.astype(jnp.int32), run_len.astype(jnp.int32),
         run_inst.astype(jnp.int32), run_slab.astype(jnp.int32),
         active.astype(jnp.int32),
-        val, col_s, is_int_g.astype(jnp.int32), row_done,
+        val, col_s, _int_operand(is_int_g), row_done,
         str_min_fin, str_min_cnt, str_max_fin, str_max_cnt,
         lhs_g, rhs_g, lb, ub,
     )
@@ -1423,7 +1446,7 @@ def _node_slab_round_kernel(
     smf_ref, smc_ref, sxf_ref, sxc_ref,
     lhs_ref, rhs_ref, lb_ref, ub_ref,
     nlb_ref, nub_ref, ch_ref,
-    acc_l, acc_u, *, eps, int_eps, inf, block,
+    acc_l, acc_u, *, eps, int_eps, inf, outward, block,
 ):
     """The fused slab-parallel round kernel over a node batch: ONE
     instance's copies against B bound planes on a ``(B, run, tile)`` grid.
@@ -1465,7 +1488,7 @@ def _node_slab_round_kernel(
     def _():
         lb, ub = lb_ref[...], ub_ref[...]
         new_lb, new_ub, changed = bnd.apply_updates(
-            lb, ub, acc_l[...], acc_u[...], eps, inf
+            lb, ub, acc_l[...], acc_u[...], eps, inf, outward
         )
         nlb_ref[...] = jnp.where(act, new_lb, lb)
         nub_ref[...] = jnp.where(act, new_ub, ub)
@@ -1496,6 +1519,7 @@ def node_slab_round_tiles(
     inf: float = INF,
     interpret: bool | None = None,
     block: int = LANE,
+    outward: float = 0.0,
 ):
     """The fused slab-parallel round over a node batch: ``(T'', R, K)``
     slab-masked copies of ONE instance + ``(B, T'', R)`` per-node gathered
@@ -1537,7 +1561,8 @@ def node_slab_round_tiles(
     ]
     fn = pl.pallas_call(
         functools.partial(
-            _node_slab_round_kernel, eps=eps, int_eps=int_eps, inf=inf, block=block
+            _node_slab_round_kernel, eps=eps, int_eps=int_eps, inf=inf,
+            outward=outward, block=block,
         ),
         grid_spec=grid_spec,
         out_shape=out_shape,
@@ -1547,18 +1572,19 @@ def node_slab_round_tiles(
     return fn(
         run_start.astype(jnp.int32), run_len.astype(jnp.int32),
         run_slab.astype(jnp.int32), active.astype(jnp.int32),
-        val, col_s, is_int_g.astype(jnp.int32), row_done,
+        val, col_s, _int_operand(is_int_g), row_done,
         str_min_fin, str_min_cnt, str_max_fin, str_max_cnt,
         lhs_g, rhs_g, lb, ub,
     )
 
 
 def _apply_updates_slab_kernel(
-    lb_ref, ub_ref, bl_ref, bu_ref, act_ref, nlb_ref, nub_ref, ch_ref, *, eps, inf
+    lb_ref, ub_ref, bl_ref, bu_ref, act_ref, nlb_ref, nub_ref, ch_ref,
+    *, eps, inf, outward
 ):
     lb, ub = lb_ref[...], ub_ref[...]
     new_lb, new_ub, changed = bnd.apply_updates(
-        lb, ub, bl_ref[...], bu_ref[...], eps, inf
+        lb, ub, bl_ref[...], bu_ref[...], eps, inf, outward
     )
     act = act_ref[0, 0] != 0
     nlb_ref[...] = jnp.where(act, new_lb, lb)
@@ -1576,6 +1602,7 @@ def apply_updates_slab_tiles(
     eps: float,
     inf: float = INF,
     interpret: bool | None = None,
+    outward: float = 0.0,
 ):
     """Slab-gridded merge kernel for VMEM-exceeding column spaces:
     ``(B, n_pad_part)`` bounds x best candidates -> updated bounds +
@@ -1583,7 +1610,10 @@ def apply_updates_slab_tiles(
 
     The grid walks ``(instance, slab)`` so only ``(1, S)`` windows are ever
     VMEM-resident; per-window changed flags are OR-combined outside (the
-    cheap cross-slab combine).  The bound buffers are donated
+    cheap cross-slab combine).  Every grid step touches a DISJOINT window
+    of the planes (no carried accumulator), so both axes are declared
+    ``parallel`` like the slab round kernel -- Mosaic may run the window
+    merges in any order or concurrently.  The bound buffers are donated
     (``input_output_aliases``); inactive instances pass through untouched.
     Shares ``bounds.apply_updates`` semantics with every other engine."""
     if interpret is None:
@@ -1602,13 +1632,16 @@ def apply_updates_slab_tiles(
         jax.ShapeDtypeStruct((bsz, n_slabs), jnp.int32),
     ]
     fn = pl.pallas_call(
-        functools.partial(_apply_updates_slab_kernel, eps=eps, inf=inf),
+        functools.partial(
+            _apply_updates_slab_kernel, eps=eps, inf=inf, outward=outward
+        ),
         grid=(bsz, n_slabs),
         in_specs=[vec, vec, vec, vec, flag_in],
         out_specs=[vec, vec, flag_out],
         out_shape=out_shape,
         input_output_aliases={0: 0, 1: 1},
         interpret=interpret,
+        **_slab_compiler_params(interpret, ("parallel", "parallel")),
     )
     new_lb, new_ub, changed = fn(
         lb, ub, best_l, best_u, active.astype(jnp.int32).reshape(bsz, 1)
@@ -1617,11 +1650,12 @@ def apply_updates_slab_tiles(
 
 
 def _apply_updates_batch_kernel(
-    lb_ref, ub_ref, bl_ref, bu_ref, act_ref, nlb_ref, nub_ref, ch_ref, *, eps, inf
+    lb_ref, ub_ref, bl_ref, bu_ref, act_ref, nlb_ref, nub_ref, ch_ref,
+    *, eps, inf, outward
 ):
     lb, ub = lb_ref[...], ub_ref[...]
     new_lb, new_ub, changed = bnd.apply_updates(
-        lb, ub, bl_ref[...], bu_ref[...], eps, inf
+        lb, ub, bl_ref[...], bu_ref[...], eps, inf, outward
     )
     act = act_ref[0, 0] != 0
     nlb_ref[...] = jnp.where(act, new_lb, lb)
@@ -1638,6 +1672,7 @@ def apply_updates_batch_tiles(
     eps: float,
     inf: float = INF,
     interpret: bool | None = None,
+    outward: float = 0.0,
 ):
     """Batched merge kernel: ``(B, n_pad)`` bounds x best candidates ->
     updated bounds + ``(B,)`` per-instance changed flags.  The bound buffers
@@ -1657,7 +1692,9 @@ def apply_updates_batch_tiles(
         jax.ShapeDtypeStruct((bsz, 1), jnp.int32),
     ]
     fn = pl.pallas_call(
-        functools.partial(_apply_updates_batch_kernel, eps=eps, inf=inf),
+        functools.partial(
+            _apply_updates_batch_kernel, eps=eps, inf=inf, outward=outward
+        ),
         grid=(bsz,),
         in_specs=[vec, vec, vec, vec, flag],
         out_specs=[vec, vec, flag],

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..core.types import INF
+from ..core.types import INF, int_round_slack
 
 
 # ---------------------------------------------------------------------------
@@ -117,11 +117,17 @@ def candidates_tiles_ref(
     lcand = jnp.where(valid_l, jnp.clip(lcand, -inf, inf), -inf)
     ucand = jnp.where(valid_u, jnp.clip(ucand, -inf, inf), inf)
 
-    # Integrality strengthening.
+    # Integrality strengthening (same dtype-keyed low-precision slack as
+    # the kernel, so kernel-vs-oracle comparisons stay bitwise per tier).
     do_l = is_int_g & (jnp.abs(lcand) < inf)
     do_u = is_int_g & (jnp.abs(ucand) < inf)
-    lcand = jnp.where(do_l, jnp.ceil(lcand - int_eps), lcand)
-    ucand = jnp.where(do_u, jnp.floor(ucand + int_eps), ucand)
+    slack = int_round_slack(jnp.result_type(lcand))
+    sl = su = int_eps
+    if slack:
+        sl = int_eps + slack * jnp.maximum(1.0, jnp.abs(lcand))
+        su = int_eps + slack * jnp.maximum(1.0, jnp.abs(ucand))
+    lcand = jnp.where(do_l, jnp.ceil(lcand - sl), lcand)
+    ucand = jnp.where(do_u, jnp.floor(ucand + su), ucand)
     return lcand, ucand
 
 
