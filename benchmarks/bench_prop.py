@@ -57,13 +57,23 @@ from repro.kernels import (
     packed_problems,
     prepare_block_ell,
     prepare_problem_batch,
+    propagate_block_ell,
     round_cost_analysis,
     round_fn_for,
 )
 from repro.kernels import ref as kref
 from repro.kernels.ops import default_slab_width
+from repro.obs.metrics import run_metadata
+from repro.obs.timing import (
+    median_of,
+    median_ratio,
+    paired_trials,
+    time_fenced,
+    time_phases,
+)
+from repro.obs.trace import SPAN_KEYS, Tracer
 
-from .common import geomean, time_fn
+from .common import geomean
 
 SET = "Set-2"
 PER_FAMILY = 2
@@ -173,14 +183,10 @@ def batched_throughput():
     # Paired trials (sequential and batched alternate within each trial) with
     # a median-of-trials speedup: robust against the container's background
     # load drifting between the two measurements.
-    trials = []
-    for _ in range(7):
-        t_seq = time_fn(run_sequential, repeats=3, warmup=1)
-        t_bat = time_fn(run_batched, repeats=3, warmup=1)
-        trials.append((t_seq, t_bat))
-    speedup = float(np.median([ts / tb for ts, tb in trials]))
-    t_seq = float(np.median([ts for ts, _ in trials]))
-    t_bat = float(np.median([tb for _, tb in trials]))
+    trials = paired_trials([run_sequential, run_batched], trials=7, repeats=3)
+    speedup = median_ratio(trials, num=0, den=1)
+    t_seq = median_of(trials, 0)
+    t_bat = median_of(trials, 1)
     n_inst = len(problems)
     return {
         "instances": n_inst,
@@ -242,14 +248,10 @@ def node_throughput():
         lb.block_until_ready()
 
     propagate_fresh(lb_nodes[0], ub_nodes[0])[0].block_until_ready()  # compile
-    trials = []
-    for _ in range(7):
-        t_rep = time_fn(run_repack, repeats=3, warmup=1)
-        t_sha = time_fn(run_shared, repeats=3, warmup=1)
-        trials.append((t_rep, t_sha))
-    speedup = float(np.median([tr / ts for tr, ts in trials]))
-    t_rep = float(np.median([tr for tr, _ in trials]))
-    t_sha = float(np.median([ts for _, ts in trials]))
+    trials = paired_trials([run_repack, run_shared], trials=7, repeats=3)
+    speedup = median_ratio(trials, num=0, den=1)
+    t_rep = median_of(trials, 0)
+    t_sha = median_of(trials, 1)
     return {
         "instance": {"family": "pseudo_boolean", "m": root.m, "n": root.n,
                      "nnz": root.nnz},
@@ -283,6 +285,12 @@ SERVICE_ROW_KEYS = frozenset({
     "latency_ms_p50",
     "latency_ms_p95",
     "latency_ms_p99",
+    "queue_latency_ms_p50",
+    "queue_latency_ms_p95",
+    "queue_latency_ms_p99",
+    "service_latency_ms_p50",
+    "service_latency_ms_p95",
+    "service_latency_ms_p99",
     "mean_slot_occupancy",
     "bucket_fill",
     "compiles_during_serve",
@@ -310,7 +318,10 @@ def service_row(
     across PRs), and the fill-tuned one (the service's own tile sizing
     applied per instance) is recorded alongside so the layout contribution
     to the headline is explicit rather than hidden.  Latency percentiles
-    are submit->retire per ticket from the last timed trial;
+    are per ticket from the last timed trial, split three ways:
+    submit->retire (``latency_ms_*``), submit->admit queueing
+    (``queue_latency_ms_*``) and admit->retire resident service time
+    (``service_latency_ms_*``);
     ``compiles_during_serve`` asserts the AOT warmup covered every engine
     the loop dispatched (slot backfill never recompiles).
 
@@ -373,12 +384,10 @@ def service_row(
     # already happened at service construction -- AOT warmup)
     counts_before = svc.compile_counts()
 
-    trials_ = []
-    for _ in range(trials):
-        t_seq = time_fn(run_sequential, repeats=repeats, warmup=1)
-        t_tun = time_fn(run_tuned_sequential, repeats=repeats, warmup=1)
-        t_svc = time_fn(run_service, repeats=repeats, warmup=1)
-        trials_.append((t_seq, t_tun, t_svc))
+    trials_ = paired_trials(
+        [run_sequential, run_tuned_sequential, run_service],
+        trials=trials, repeats=repeats,
+    )
     counts_after = svc.compile_counts()
     compiles = sum(
         (a["step"] or 0) - (b["step"] or 0)
@@ -387,12 +396,14 @@ def service_row(
     )
     assert compiles == 0, f"serve loop recompiled: {counts_after}"
 
-    speedup = float(np.median([ts / tv for ts, _, tv in trials_]))
-    speedup_tuned = float(np.median([tt / tv for _, tt, tv in trials_]))
-    t_seq = float(np.median([ts for ts, _, _ in trials_]))
-    t_tun = float(np.median([tt for _, tt, _ in trials_]))
-    t_svc = float(np.median([tv for _, _, tv in trials_]))
+    speedup = median_ratio(trials_, num=0, den=2)
+    speedup_tuned = median_ratio(trials_, num=1, den=2)
+    t_seq = median_of(trials_, 0)
+    t_tun = median_of(trials_, 1)
+    t_svc = median_of(trials_, 2)
     lat_ms = np.asarray([tk.latency() for tk in last_tickets]) * 1e3
+    queue_ms = np.asarray([tk.queue_latency() for tk in last_tickets]) * 1e3
+    svc_ms = np.asarray([tk.service_latency() for tk in last_tickets]) * 1e3
     st = svc.stats()
     # Already a fraction of the slot pool: the bucket accumulates
     # occupied/slots per pump.
@@ -418,6 +429,12 @@ def service_row(
         "latency_ms_p50": float(np.percentile(lat_ms, 50)),
         "latency_ms_p95": float(np.percentile(lat_ms, 95)),
         "latency_ms_p99": float(np.percentile(lat_ms, 99)),
+        "queue_latency_ms_p50": float(np.percentile(queue_ms, 50)),
+        "queue_latency_ms_p95": float(np.percentile(queue_ms, 95)),
+        "queue_latency_ms_p99": float(np.percentile(queue_ms, 99)),
+        "service_latency_ms_p50": float(np.percentile(svc_ms, 50)),
+        "service_latency_ms_p95": float(np.percentile(svc_ms, 95)),
+        "service_latency_ms_p99": float(np.percentile(svc_ms, 99)),
         "mean_slot_occupancy": occ,
         "bucket_fill": [
             float(np.mean(fill_by_spec[s])) for s in specs if fill_by_spec[s]
@@ -602,10 +619,11 @@ def _partitioned_phase_fns(prep, part):
     return copy_phase, reduce_phase, combine_phase, merge_phase
 
 
-def _partitioned_phase_times(prep, part, repeats: int = 3) -> dict:
-    """Per-phase wall times (us) of one partitioned round, each phase fed
-    the previous phase's ready outputs and fenced with
-    ``jax.block_until_ready``."""
+def _partitioned_phase_times(prep, part, repeats: int = 3, tracer=None) -> dict:
+    """Per-phase wall times (us) of one partitioned round via
+    ``obs.timing.time_phases``: each phase is fed the previous phase's
+    ready outputs and fenced at its boundary; a ``tracer`` additionally
+    emits one ``phase:<name>`` span per phase onto the shared trace."""
     copy_f, reduce_f, combine_f, merge_f = _partitioned_phase_fns(prep, part)
     g = jax.block_until_ready
     lb, ub = prep.lb0, prep.ub0
@@ -613,19 +631,16 @@ def _partitioned_phase_times(prep, part, repeats: int = 3) -> dict:
     partials = g(reduce_f(*gathered[:4]))
     cands = g(combine_f(*partials, gathered[0], gathered[1]))
     g(merge_f(*cands, gathered[4], lb, ub))
-    return {
-        "copy": time_fn(lambda: g(copy_f(lb, ub)), repeats=repeats) * 1e6,
-        "reduce": time_fn(
-            lambda: g(reduce_f(*gathered[:4])), repeats=repeats
-        ) * 1e6,
-        "combine": time_fn(
-            lambda: g(combine_f(*partials, gathered[0], gathered[1])),
-            repeats=repeats,
-        ) * 1e6,
-        "merge": time_fn(
-            lambda: g(merge_f(*cands, gathered[4], lb, ub)), repeats=repeats
-        ) * 1e6,
-    }
+    return time_phases(
+        {
+            "copy": lambda: copy_f(lb, ub),
+            "reduce": lambda: reduce_f(*gathered[:4]),
+            "combine": lambda: combine_f(*partials, gathered[0], gathered[1]),
+            "merge": lambda: merge_f(*cands, gathered[4], lb, ub),
+        },
+        repeats=repeats,
+        tracer=tracer,
+    )
 
 
 def sweep_slab_widths(n_pad: int) -> "list[int]":
@@ -674,10 +689,7 @@ def partitioned_large_row(
                 round_fn_for(prep, use_pallas=False, scatter="partitioned", slab=w)
             )
             lb, ub = prep.lb0, prep.ub0
-            fn(lb, ub)[0].block_until_ready()  # compile outside the timer
-            t = time_fn(
-                lambda: fn(lb, ub)[0].block_until_ready(), repeats=repeats
-            )
+            t = time_fenced(lambda: fn(lb, ub), repeats=repeats)
             us.append(t * 1e6)
         sweep_raw[w] = us
     tuned = min(sweep_raw, key=lambda w: geomean(sweep_raw[w]))
@@ -687,8 +699,7 @@ def partitioned_large_row(
     for p, prep in pairs:
         fn = jax.jit(round_fn_for(prep, use_pallas=False, scatter="segment"))
         lb, ub = prep.lb0, prep.ub0
-        fn(lb, ub)[0].block_until_ready()
-        t = time_fn(lambda: fn(lb, ub)[0].block_until_ready(), repeats=repeats)
+        t = time_fenced(lambda: fn(lb, ub), repeats=repeats)
         seg_us.append(t * 1e6)
         seg_b.append(round_cost_analysis(p, "segment", **tile)["bytes_accessed"])
         part_b.append(
@@ -720,6 +731,168 @@ def partitioned_large_row(
         "slab_sweep_us": {str(w): geomean(us) for w, us in sweep_raw.items()},
         "phases_us": {k: geomean(v) for k, v in phase_acc.items()},
     }
+
+
+# Every key the ``obs`` observability row must carry (the smoke job and
+# docs/OBSERVABILITY.md read this set).
+OBS_ROW_KEYS = frozenset({
+    "population",
+    "telemetry_capacity",
+    "overhead_ratio",
+    "overhead_bound",
+    "bitwise_identical",
+    "rounds_recorded",
+    "ring_wrapped",
+    "span_count",
+    "span_schema_ok",
+    "metrics_sources",
+})
+
+# Acceptance bars for the telemetry-on/off wall-clock ratio.  The full-row
+# population amortizes the per-round record ops into the round arithmetic;
+# the smoke population is tiny (fixed dispatch costs loom large), so its
+# bar is looser.  Both are pinned: a regression that makes telemetry
+# expensive fails the bench, not just a dashboard.
+OBS_OVERHEAD_BOUND = 1.25
+OBS_SMOKE_OVERHEAD_BOUND = 1.5
+
+
+def obs_row(
+    per_family: int = PER_FAMILY,
+    capacity: int = 64,
+    trials: int = 7,
+    repeats: int = 3,
+    overhead_bound: float = OBS_OVERHEAD_BOUND,
+):
+    """The ``obs`` row: what does device telemetry cost, and does the rest
+    of the observability plane hold its contracts?
+
+    Three measurements in one row: (1) paired-trials wall-clock ratio of
+    full fixed points with the telemetry plane on vs off over the Set-2
+    population plus one contraction chain (the 100-round worst case, where
+    per-round recording has the most rounds to slow down), asserted under
+    the pinned ``overhead_bound`` and required bitwise-identical; (2) a
+    traced+telemetered service run whose exported spans are schema-checked
+    against ``SPAN_KEYS``; (3) the service's metrics-registry source list,
+    so a silently dropped gauge shows up as a row diff."""
+    from .precision import _contraction_chain  # lazy: precision imports us
+
+    problems = [p for _, p in instances_for_set(SET, per_family=per_family)]
+    problems.append(_contraction_chain(48, rho=0.9))
+
+    def run_off():
+        return [propagate_block_ell(p, use_pallas=False) for p in problems]
+
+    def run_on():
+        return [
+            propagate_block_ell(p, use_pallas=False, telemetry=capacity)
+            for p in problems
+        ]
+
+    off, on = run_off(), run_on()
+    bitwise = all(
+        np.array_equal(np.asarray(a.lb), np.asarray(b.lb))
+        and np.array_equal(np.asarray(a.ub), np.asarray(b.ub))
+        and int(a.rounds) == int(b.rounds)
+        for a, b in zip(off, on)
+    )
+    assert bitwise, "telemetry-on bounds diverged from telemetry-off"
+    rounds_recorded = sum(r.telemetry.rounds_recorded for r in on)
+    ring_wrapped = sum(r.telemetry.rounds_recorded > capacity for r in on)
+
+    trials_ = paired_trials([run_off, run_on], trials=trials, repeats=repeats)
+    ratio = median_ratio(trials_, num=1, den=0)
+    assert ratio <= overhead_bound, (
+        f"telemetry overhead {ratio:.3f}x exceeds the {overhead_bound}x bar"
+    )
+
+    svc_probs = [p for _, p in instances_for_set(SET, per_family=1)]
+    specs = BucketSpec.for_problems(svc_probs, slots=2)
+    tracer = Tracer()
+    svc = PropagationService(
+        specs, use_pallas=False, telemetry=capacity, tracer=tracer
+    )
+    svc_res = svc.serve(svc_probs)
+    assert all(r.telemetry is not None for r in svc_res)
+    lines = [json.loads(ln) for ln in tracer.export().strip().splitlines()]
+    span_schema_ok = bool(lines) and all(set(d) == SPAN_KEYS for d in lines)
+    assert span_schema_ok, "exported spans violate the pinned SPAN_KEYS schema"
+    assert {"pump", "step", "ticket"} <= {d["name"] for d in lines}
+
+    return {
+        "population": {
+            "set": SET,
+            "instances": len(problems),
+            "contraction_chains": 1,
+        },
+        "telemetry_capacity": capacity,
+        "overhead_ratio": float(ratio),
+        "overhead_bound": float(overhead_bound),
+        "bitwise_identical": bool(bitwise),
+        "rounds_recorded": int(rounds_recorded),
+        "ring_wrapped": int(ring_wrapped),
+        "span_count": len(lines),
+        "span_schema_ok": bool(span_schema_ok),
+        "metrics_sources": sorted(svc.stats()["metrics"]["sources"]),
+    }
+
+
+def obs_smoke(out_path: str = OUT_PATH):
+    """CI schema smoke for ``--smoke --telemetry``: a scaled-down ``obs``
+    row from the SAME builder, schema-asserted against ``OBS_ROW_KEYS``
+    (with the smoke overhead bar) and merged into a THROWAWAY copy of
+    ``BENCH_prop.json``, run-metadata stamp included."""
+    row = obs_row(
+        per_family=1, capacity=8, trials=2, repeats=1,
+        overhead_bound=OBS_SMOKE_OVERHEAD_BOUND,
+    )
+    missing = OBS_ROW_KEYS - set(row)
+    extra = set(row) - OBS_ROW_KEYS
+    assert not missing and not extra, (sorted(missing), sorted(extra))
+    assert row["bitwise_identical"] is True
+    assert row["overhead_ratio"] <= row["overhead_bound"]
+    assert row["span_schema_ok"] and row["span_count"] > 0
+    # The contraction chain runs to the round cap, so a capacity-8 ring
+    # must have wrapped -- truncation semantics exercised, not just spare
+    # capacity.
+    assert row["ring_wrapped"] >= 1
+    assert {"compile_counts", "engine_cache", "kernel_caches", "service"} <= set(
+        row["metrics_sources"]
+    )
+    merged = _merge_report({"obs": row}, out_path)
+    assert merged["obs"] == row
+    assert set(merged["run_meta"]) == {
+        "git_commit", "timestamp", "jax_version", "x64", "backend",
+    }
+    with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as f:
+        json.dump(merged, f, indent=2)
+        tmp = f.name
+    try:
+        with open(tmp) as f:
+            assert json.load(f)["obs"] == row
+    finally:
+        os.unlink(tmp)
+    return [
+        ("obs_smoke", 0.0,
+         f"schema_ok overhead_ratio={row['overhead_ratio']:.3f} "
+         f"(bar<={row['overhead_bound']}) spans={row['span_count']} "
+         f"ring_wrapped={row['ring_wrapped']}")
+    ]
+
+
+def obs_run(out_path: str = OUT_PATH):
+    """Record the full-fidelity ``obs`` row into ``BENCH_prop.json``."""
+    row = obs_row()
+    merged = _merge_report({"obs": row}, out_path)
+    with open(out_path, "w") as f:
+        json.dump(merged, f, indent=2)
+    return [
+        ("obs_telemetry", 0.0,
+         f"overhead_ratio={row['overhead_ratio']:.3f} "
+         f"(bar<={row['overhead_bound']}) "
+         f"rounds_recorded={row['rounds_recorded']} "
+         f"ring_wrapped={row['ring_wrapped']} spans={row['span_count']}")
+    ]
 
 
 def smoke(out_path: str = OUT_PATH):
@@ -806,7 +979,10 @@ def smoke(out_path: str = OUT_PATH):
 
 def _merge_report(report: dict, out_path: str) -> dict:
     """Merge new engine rows into an existing BENCH_prop.json: engine rows
-    are updated/added, any other keys from earlier PRs are preserved."""
+    are updated/added, any other keys from earlier PRs are preserved.
+    Every merge re-stamps ``run_meta`` (git commit, timestamp, jax
+    version, x64, backend -- ``obs.metrics.run_metadata``) so the
+    trajectory file always attributes its newest rows."""
     if os.path.exists(out_path):
         try:
             with open(out_path) as f:
@@ -817,8 +993,10 @@ def _merge_report(report: dict, out_path: str) -> dict:
         engines.update(report.get("engines", {}))
         merged = {**old, **report}
         merged["engines"] = engines
-        return merged
-    return report
+    else:
+        merged = dict(report)
+    merged["run_meta"] = run_metadata()
+    return merged
 
 
 def run(out_path: str = OUT_PATH):
@@ -833,8 +1011,7 @@ def run(out_path: str = OUT_PATH):
             else:
                 fn = jax.jit(round_fn_for(prep, use_pallas=False, scatter=engine))
                 lb, ub = prep.lb0, prep.ub0
-            fn(lb, ub)[0].block_until_ready()  # compile outside the timer
-            t = time_fn(lambda: fn(lb, ub)[0].block_until_ready())
+            t = time_fenced(lambda: fn(lb, ub))  # warmup compiles off-timer
             acc[engine]["round_us"].append(t * 1e6)
             acc[engine]["bytes"].append(
                 round_cost_analysis(p, engine)["bytes_accessed"]
@@ -958,7 +1135,18 @@ if __name__ == "__main__":
         help="quick CI schema check: scaled-down partitioned row, merged "
         "into a throwaway copy of BENCH_prop.json (nothing written)",
     )
+    parser.add_argument(
+        "--telemetry",
+        action="store_true",
+        help="additionally build the obs row: telemetry on/off overhead "
+        "ratio (asserted under its pinned bound), span schema check and "
+        "metrics-registry sources (merged like the engine rows; with "
+        "--smoke, asserted against a throwaway copy instead)",
+    )
     ns = parser.parse_args()
     jax.config.update("jax_enable_x64", True)  # match benchmarks.run
-    for r in (smoke() if ns.smoke else run()):
+    rows = list(smoke() if ns.smoke else run())
+    if ns.telemetry:
+        rows += obs_smoke() if ns.smoke else obs_run()
+    for r in rows:
         print(",".join(map(str, r)))

@@ -40,9 +40,10 @@ from repro.core import (
 )
 from repro.data.instances import instances_for_set
 from repro.kernels import prepare_block_ell, round_cost_analysis, round_fn_for
+from repro.obs.timing import median_ratio, paired_trials
 
 from .bench_prop import OUT_PATH, SET, _merge_report
-from .common import geomean, time_fn
+from .common import geomean
 
 PER_FAMILY = 2
 STOP_PROGRESS = 1e-3   # early-stop threshold the row is recorded at
@@ -119,25 +120,19 @@ def precision_row(
         bytes32.append(b32)
         bytes64.append(b64)
 
-        # Paired fused-round timing at both dtypes (median of paired
-        # trials -- robust against background-load drift, the bench_prop
-        # idiom).
-        fns = {}
+        # Paired fused-round timing at both dtypes
+        # (``obs.timing.paired_trials``: fp32/fp64 interleave within each
+        # trial, the median per-trial ratio is robust to background-load
+        # drift; the shared warmup fences the compiles off-timer).
+        variants = []
         for dt in (np.float32, np.float64):
             prep = prepare_block_ell(p, dtype=dt)
             fn = jax.jit(round_fn_for(prep, use_pallas=False, scatter="fused"))
-            fn(prep.lb0, prep.ub0)[0].block_until_ready()  # compile
-            fns[np.dtype(dt)] = (fn, prep.lb0, prep.ub0)
-        pair = []
-        for _ in range(trials):
-            ts = {}
-            for dt, (fn, lb0, ub0) in fns.items():
-                ts[dt] = time_fn(
-                    lambda: fn(lb0, ub0)[0].block_until_ready(),
-                    repeats=repeats, warmup=0,
-                )
-            pair.append(ts[np.dtype(np.float32)] / ts[np.dtype(np.float64)])
-        us_ratios.append(float(np.median(pair)))
+            variants.append(
+                lambda fn=fn, lb0=prep.lb0, ub0=prep.ub0: fn(lb0, ub0)
+            )
+        pair = paired_trials(variants, trials=trials, repeats=repeats)
+        us_ratios.append(median_ratio(pair, num=0, den=1))
 
         # Paper §4.5: where does the fp32-ONLY fixed point land relative
         # to the fp64 one?

@@ -45,16 +45,39 @@ class NodeBatchResult(NamedTuple):
     infeasible: object  # (B,) bool: domain emptied -> prune this node
     progress: object = None     # (B,) last-round progress measure (or None)
     tier_rounds: object = 0     # (B,) int32 fp32-tier rounds (two-tier runs)
+    telemetry: object = None    # batched obs.TelemetryPlane (or None)
+    fp32_telemetry: object = None  # fp32 tier's plane under a TierPolicy
 
     @property
     def size(self) -> int:
         return int(self.lb.shape[0])
 
+    def node_telemetry(self, i: int):
+        """Node ``i``'s ``obs.TelemetrySnapshot`` (None when telemetry off).
+
+        Rows view the shared batched plane lazily -- no readback until a
+        snapshot accessor is called.  Under a two-tier run the fp32 tier's
+        snapshot hangs off ``.fp32`` and ``tier_switch_round`` is the
+        node's fp32 round count (``-1`` if its fp32 tier was distrusted).
+        """
+        if self.telemetry is None:
+            return None
+        from ..obs.telemetry import TelemetrySnapshot  # lazy: keep import light
+
+        snap = TelemetrySnapshot(plane=self.telemetry, index=i)
+        if self.fp32_telemetry is not None:
+            snap.fp32 = TelemetrySnapshot(plane=self.fp32_telemetry, index=i)
+            # tier_rounds was zeroed for nodes whose fp32 verdict was
+            # distrusted (no promotion happened for them).
+            tr = int(np.asarray(self.tier_rounds)[i])
+            snap.tier_switch_round = tr if tr > 0 else -1
+        return snap
+
     def result(self, i: int) -> PropagationResult:
         """Node ``i``'s result in single-instance form."""
         return PropagationResult(
             self.lb[i], self.ub[i], self.rounds[i], self.converged[i],
-            self.infeasible[i],
+            self.infeasible[i], telemetry=self.node_telemetry(i),
         )
 
     def results(self) -> "list[PropagationResult]":
@@ -126,6 +149,7 @@ def propagate_nodes(
     stop_progress: float | None = None,
     patience: int = 1,
     policy: TierPolicy | None = None,
+    telemetry: int | None = None,
 ) -> NodeBatchResult:
     """Propagate B warm-started nodes of ONE instance in one dispatch.
 
@@ -145,25 +169,32 @@ def propagate_nodes(
     :class:`TierPolicy`) runs the frontier through the two-tier precision
     scheme: an fp32 dispatch (outward-rounded merges, own cached prep +
     runner) until per-node progress drops below ``policy.switch_progress``,
-    then an exact-cast warm start of the requested-dtype engine."""
+    then an exact-cast warm start of the requested-dtype engine.
+
+    ``telemetry`` (a ring capacity) carries a per-node device telemetry
+    plane through the dispatch; read node trajectories via
+    ``result.node_telemetry(i)`` / ``result.result(i).telemetry``."""
     from ..kernels.ops import (  # lazy: kernels imports core at module scope
         prepare_block_ell,
         propagate_nodes_prepared,
     )
     from .propagator import two_tier_bounds_dtypes
 
+    tel_cap = int(telemetry or 0)
     pair = two_tier_bounds_dtypes(policy, dtype) if policy is not None else None
     if pair is not None:
         dt32, final = pair
         cap32 = max(1, int(cfg.max_rounds * policy.fp32_round_frac))
         prep32 = prepare_block_ell(p, tile_rows, tile_width, dt32)
-        lb32, ub32, r32, _, inf32 = propagate_nodes_prepared(
+        out32 = propagate_nodes_prepared(
             prep32, lb_nodes, ub_nodes,
             dataclasses.replace(cfg, max_rounds=cap32),
             use_pallas=use_pallas, interpret=interpret, donate=donate,
             slab=slab, stop_progress=policy.switch_progress,
-            patience=policy.patience,
+            patience=policy.patience, telemetry=tel_cap,
         )
+        lb32, ub32, r32, _, inf32 = out32[:5]
+        plane32 = out32[5] if tel_cap else None
         # Per-node promotion; a node whose fp32 tier declared infeasibility
         # restarts from its ORIGINAL bounds (fp32 verdicts are never
         # trusted -- see core.propagator's two-tier front end).
@@ -178,27 +209,32 @@ def propagate_nodes(
         r32 = np.where(np.asarray(inf32), 0, np.asarray(r32)).astype(np.int32)
         rem = dataclasses.replace(cfg, max_rounds=max(1, cfg.max_rounds - cap32))
         prep = prepare_block_ell(p, tile_rows, tile_width, final)
-        lb, ub, rounds, converged, infeasible, progress = propagate_nodes_prepared(
+        out = propagate_nodes_prepared(
             prep, warm_lb, warm_ub, rem,
             use_pallas=use_pallas, interpret=interpret, donate=donate,
             slab=slab, stop_progress=policy.stop_progress,
-            patience=policy.patience, with_progress=True,
+            patience=policy.patience, with_progress=True, telemetry=tel_cap,
         )
+        lb, ub, rounds, converged, infeasible, progress = out[:6]
         return NodeBatchResult(
             lb, ub, rounds + r32, converged, infeasible,
             progress=progress, tier_rounds=r32,
+            telemetry=out[6] if tel_cap else None, fp32_telemetry=plane32,
         )
     if policy is not None:
         stop_progress = policy.stop_progress
         patience = policy.patience
     prep = prepare_block_ell(p, tile_rows, tile_width, dtype)
-    lb, ub, rounds, converged, infeasible, progress = propagate_nodes_prepared(
+    out = propagate_nodes_prepared(
         prep, lb_nodes, ub_nodes, cfg,
         use_pallas=use_pallas, interpret=interpret, donate=donate, slab=slab,
         stop_progress=stop_progress, patience=patience, with_progress=True,
+        telemetry=tel_cap,
     )
+    lb, ub, rounds, converged, infeasible, progress = out[:6]
     return NodeBatchResult(
-        lb, ub, rounds, converged, infeasible, progress=progress
+        lb, ub, rounds, converged, infeasible, progress=progress,
+        telemetry=out[6] if tel_cap else None,
     )
 
 

@@ -31,6 +31,7 @@ import numpy as np
 
 from . import activities as act
 from . import bounds as bnd
+from ..obs import telemetry as obs
 from .sparse import Problem
 from .types import (
     DEFAULT_CONFIG,
@@ -203,6 +204,7 @@ def propagate_host_loop(
     ub0=None,
     stop_progress: float | None = None,
     patience: int = 1,
+    telemetry: int | None = None,
 ) -> PropagationResult:
     """cpu_loop analogue: host iterates rounds, syncing one flag per round.
 
@@ -211,14 +213,21 @@ def propagate_host_loop(
     ``lb0``/``ub0`` warm-start the fixed point from caller-supplied bounds
     (default: the problem's root bounds).  ``stop_progress`` arms the
     progress-based early stop (see :func:`_device_fixed_point`); on this
-    driver the measure is read back per round like the changed flag."""
+    driver the measure is read back per round like the changed flag.
+    ``telemetry`` (a ring capacity) records the per-round trajectory
+    host-side -- this driver syncs every round anyway -- into the same
+    snapshot shape the device drivers produce."""
     base = _round_fn(dp, cfg)
+    tel_on = bool(telemetry)
 
     def step(lb, ub):
         # Progress is computed INSIDE the jit, while the pre-round bounds
         # are still live -- the donated input buffers are gone afterwards.
         nlb, nub, ch = base(lb=lb, ub=ub)
-        return nlb, nub, ch, bnd.progress_measure(lb, ub, nlb, nub)
+        out = nlb, nub, ch, bnd.progress_measure(lb, ub, nlb, nub)
+        if tel_on:
+            out = out + (check_infeasible(nlb, nub, cfg.feas_eps),)
+        return out
 
     round_fn = jax.jit(step, **donate_kwargs(argnums=(0, 1)))
     lb, ub = initial_bounds((dp.lb0, dp.ub0), lb0, ub0, dp.dtype, dp.n)
@@ -226,16 +235,29 @@ def propagate_host_loop(
     changed = True
     prog = float("nan")
     flat = 0
+    history: list[float] = []
+    stop_round = -1
+    infeas_round = -1
     while changed and rounds < cfg.max_rounds:
-        lb, ub, changed_dev, prog_dev = round_fn(lb, ub)
+        lb, ub, changed_dev, prog_dev, *infeas_dev = round_fn(lb, ub)
         changed = bool(changed_dev)  # the per-round host<->device sync point
         rounds += 1
+        if tel_on:
+            history.append(float(prog_dev))
+            if infeas_round < 0 and bool(infeas_dev[0]):
+                infeas_round = rounds
         if stop_progress is not None:
             prog = float(prog_dev)
             flat = flat + 1 if prog < stop_progress else 0
             if flat >= patience:
+                stop_round = rounds
                 break
     infeasible = bool(check_infeasible(lb, ub, cfg.feas_eps))
+    snap = None
+    if tel_on:
+        snap = obs.host_snapshot(
+            history, telemetry, stop_round=stop_round, infeas_round=infeas_round
+        )
     return PropagationResult(
         lb=lb,
         ub=ub,
@@ -243,12 +265,14 @@ def propagate_host_loop(
         converged=jnp.asarray(not changed),
         infeasible=jnp.asarray(infeasible),
         progress=jnp.asarray(prog),
+        telemetry=snap,
     )
 
 
 def _device_fixed_point(
     round_fn, lb0, ub0, max_rounds: int, unroll: int = 1,
     stop_progress: float | None = None, patience: int = 1,
+    plane=None, feas_eps: float | None = None,
 ):
     """while_loop fixed point; ``unroll`` rounds per convergence check.
 
@@ -258,10 +282,18 @@ def _device_fixed_point(
     consecutive checks the loop exits even though epsilon-level changes
     continue (a flatlined instance).  Returns ``(lb, ub, changed, rounds,
     progress)`` -- ``progress`` is the last check's measure (NaN before the
-    first round)."""
+    first round).
+
+    ``plane`` (an ``obs.telemetry.TelemetryPlane``, scalar layout) arms the
+    device-resident telemetry: the plane joins the loop carry, each check
+    appends its progress sample and latches early-stop / infeasibility
+    rounds (the probe needs ``feas_eps``), and the final plane is appended
+    to the return tuple.  Recording reads the same progress scalar the
+    carry already computes and never feeds back into the bounds, so the
+    fixed point's arithmetic is unchanged -- still zero host syncs."""
 
     def body(state):
-        lb, ub, _, rounds, _, flat = state
+        lb, ub, _, rounds, _, flat = state[:6]
         lb_in, ub_in = lb, ub
         changed_any = jnp.asarray(False)
         for _ in range(unroll):
@@ -271,10 +303,18 @@ def _device_fixed_point(
         prog = bnd.progress_measure(lb_in, ub_in, lb, ub)
         if stop_progress is not None:
             flat = jnp.where(prog < stop_progress, flat + 1, 0)
-        return lb, ub, changed_any, rounds, prog, flat
+        out = (lb, ub, changed_any, rounds, prog, flat)
+        if plane is not None:
+            stopped = (flat >= patience) if stop_progress is not None else None
+            tel = obs.record_round(
+                state[6], prog, rounds,
+                check_infeasible(lb, ub, feas_eps), stopped,
+            )
+            out = out + (tel,)
+        return out
 
     def cond(state):
-        _, _, changed, rounds, _, flat = state
+        changed, rounds, flat = state[2], state[3], state[5]
         go = changed & (rounds < max_rounds)
         if stop_progress is not None:
             go = go & (flat < patience)
@@ -282,8 +322,13 @@ def _device_fixed_point(
 
     nan = jnp.asarray(jnp.nan, lb0.dtype)
     init = (lb0, ub0, jnp.asarray(True), jnp.int32(0), nan, jnp.int32(0))
+    if plane is not None:
+        init = init + (plane,)
     # First iteration must run: seed changed=True, but do not count it.
-    lb, ub, changed, rounds, prog, _ = jax.lax.while_loop(cond, body, init)
+    final = jax.lax.while_loop(cond, body, init)
+    lb, ub, changed, rounds, prog = final[:5]
+    if plane is not None:
+        return lb, ub, changed, rounds, prog, final[6]
     return lb, ub, changed, rounds, prog
 
 
@@ -292,6 +337,7 @@ def batched_step_rounds(
     budget: int | None = None, *,
     stop_progress: float | None = None, patience: int = 1,
     progress=None, flat=None, with_progress: bool = False,
+    plane=None, feas_eps: float | None = None,
 ):
     """Run up to ``budget`` rounds of a batched fixed point and return the
     carried state -- the RESUMABLE core of :func:`batched_fixed_point`.
@@ -321,8 +367,18 @@ def batched_step_rounds(
     streak (pass a previous call's values to resume bit-for-bit across
     step boundaries); ``with_progress=True`` appends them to the return,
     making it ``(lb, ub, active, last_changed, rounds, progress, flat)``.
+
+    ``plane`` (an ``obs.telemetry.TelemetryPlane``, batched layout) arms
+    device-resident telemetry: the plane rides the carry, every round
+    records per-instance progress / early-stop / infeasibility (probe
+    needs ``feas_eps``) for the instances that actually ran, and the final
+    plane is appended to the return -- the 8-tuple ``(..., progress, flat,
+    plane)``.  Passing a previous step's plane back resumes its rings
+    bit-for-bit, exactly like the rest of the carry.  Recording never
+    touches the bound dataflow (bitwise-identical bounds, zero host
+    syncs); its masks reuse the round's own ``active``/``flat`` values.
     """
-    track = with_progress or stop_progress is not None
+    track = with_progress or stop_progress is not None or plane is not None
     bsz = lb.shape[0]
     if progress is None:
         progress = jnp.full((bsz,), jnp.nan, lb.dtype)
@@ -330,8 +386,9 @@ def batched_step_rounds(
         flat = jnp.zeros((bsz,), jnp.int32)
 
     def body(state):
-        lb, ub, active, last_changed, rounds, progress, flat, k = state
+        lb, ub, active, last_changed, rounds, progress, flat, k = state[:8]
         lb_in, ub_in = lb, ub
+        ran = active
         lb, ub, changed = round_fn(lb, ub, active)
         rounds = rounds + active.astype(jnp.int32)
         last_changed = jnp.where(active, changed, last_changed)
@@ -345,7 +402,16 @@ def batched_step_rounds(
         active = active & changed & (rounds < max_rounds)
         if stop_progress is not None:
             active = active & (flat < patience)
-        return lb, ub, active, last_changed, rounds, progress, flat, k + 1
+        out = (lb, ub, active, last_changed, rounds, progress, flat, k + 1)
+        if plane is not None:
+            stopped = (flat >= patience) if stop_progress is not None else None
+            tel = obs.record_round(
+                state[8], prog,
+                rounds, jnp.any(lb > ub + feas_eps, axis=-1), stopped,
+                active=ran,
+            )
+            out = out + (tel,)
+        return out
 
     def cond(state):
         go = jnp.any(state[2])
@@ -354,9 +420,12 @@ def batched_step_rounds(
         return go
 
     init = (lb, ub, active, last_changed, rounds, progress, flat, jnp.int32(0))
-    lb, ub, active, last_changed, rounds, progress, flat, _ = (
-        jax.lax.while_loop(cond, body, init)
-    )
+    if plane is not None:
+        init = init + (plane,)
+    final = jax.lax.while_loop(cond, body, init)
+    lb, ub, active, last_changed, rounds, progress, flat = final[:7]
+    if plane is not None:
+        return lb, ub, active, last_changed, rounds, progress, flat, final[8]
     if with_progress:
         return lb, ub, active, last_changed, rounds, progress, flat
     return lb, ub, active, last_changed, rounds
@@ -365,7 +434,7 @@ def batched_step_rounds(
 def batched_fixed_point(
     round_fn, lb0, ub0, max_rounds: int, active0=None, *,
     stop_progress: float | None = None, patience: int = 1,
-    with_progress: bool = False,
+    with_progress: bool = False, plane=None, feas_eps: float | None = None,
 ):
     """Batched while_loop fixed point with a per-instance convergence mask.
 
@@ -383,19 +452,26 @@ def batched_fixed_point(
     ``stop_progress``/``patience`` arm the per-instance flatline stop (see
     :func:`batched_step_rounds`): a stopped instance reports
     ``converged=False`` at ``rounds < max_rounds``.
+
+    ``plane``/``feas_eps`` arm per-instance device telemetry (see
+    :func:`batched_step_rounds`); the final plane is appended to either
+    return shape.
     """
     bsz = lb0.shape[0]
     if active0 is None:
         active0 = jnp.ones((bsz,), dtype=bool)
 
-    lb, ub, _, last_changed, rounds, progress, _ = batched_step_rounds(
+    out = batched_step_rounds(
         round_fn, lb0, ub0, active0, active0,
         jnp.zeros((bsz,), jnp.int32), max_rounds, budget=None,
         stop_progress=stop_progress, patience=patience, with_progress=True,
+        plane=plane, feas_eps=feas_eps,
     )
+    lb, ub, _, last_changed, rounds, progress, _ = out[:7]
+    tail = (out[7],) if plane is not None else ()
     if with_progress:
-        return lb, ub, rounds, ~last_changed, progress
-    return lb, ub, rounds, ~last_changed
+        return (lb, ub, rounds, ~last_changed, progress) + tail
+    return (lb, ub, rounds, ~last_changed) + tail
 
 
 def propagate_batch(
@@ -413,6 +489,7 @@ def propagate_batch(
     stop_progress: float | None = None,
     patience: int = 1,
     policy: TierPolicy | None = None,
+    telemetry: int | None = None,
 ):
     """Propagate a batch of instances, thousands per device dispatch.
 
@@ -429,8 +506,9 @@ def propagate_batch(
     batch (see ``kernels.cache_info()``), so a serving loop pays them
     once.  See ``kernels.ops.propagate_batch_block_ell`` for the engine
     knobs; ``stop_progress``/``patience`` arm the per-instance
-    progress-based early stop and ``policy`` the two-tier precision
-    scheme (both documented there)."""
+    progress-based early stop, ``policy`` the two-tier precision
+    scheme, and ``telemetry`` per-instance device telemetry snapshots
+    (all documented there)."""
     from ..kernels.ops import propagate_batch_block_ell  # lazy: kernels imports core
 
     return propagate_batch_block_ell(
@@ -448,6 +526,7 @@ def propagate_batch(
         stop_progress=stop_progress,
         patience=patience,
         policy=policy,
+        telemetry=telemetry,
     )
 
 
@@ -459,6 +538,7 @@ def propagate_device_loop(
     ub0=None,
     stop_progress: float | None = None,
     patience: int = 1,
+    telemetry: int | None = None,
 ) -> PropagationResult:
     """gpu_loop analogue: the whole fixed point is one XLA dispatch.
 
@@ -466,21 +546,33 @@ def propagate_device_loop(
     the fixed point runs in place on two device buffers.  ``lb0``/``ub0``
     warm-start the fixed point from caller-supplied bounds;
     ``stop_progress``/``patience`` arm the in-dispatch progress-based early
-    stop (see :func:`_device_fixed_point`)."""
+    stop (see :func:`_device_fixed_point`).  ``telemetry`` (a ring
+    capacity) carries a device telemetry plane through the loop and
+    attaches its snapshot to the result -- still one dispatch, zero added
+    host syncs."""
     round_fn = _round_fn(dp, cfg)
+    tel_cap = int(telemetry or 0)
 
     @functools.partial(jax.jit, **donate_kwargs(argnums=(0, 1)))
     def run(lb0, ub0):
-        lb, ub, changed, rounds, prog = _device_fixed_point(
+        plane = obs.device_plane(tel_cap, dtype=lb0.dtype) if tel_cap else None
+        out = _device_fixed_point(
             round_fn, lb0, ub0, cfg.max_rounds, unroll=unroll,
             stop_progress=stop_progress, patience=patience,
+            plane=plane, feas_eps=cfg.feas_eps,
         )
+        lb, ub, changed, rounds, prog = out[:5]
         infeasible = check_infeasible(lb, ub, cfg.feas_eps)
-        return lb, ub, rounds, ~changed, infeasible, prog
+        res = (lb, ub, rounds, ~changed, infeasible, prog)
+        return res + ((out[5],) if tel_cap else ())
 
     lb_init, ub_init = initial_bounds((dp.lb0, dp.ub0), lb0, ub0, dp.dtype, dp.n)
-    lb, ub, rounds, converged, infeasible, prog = run(lb_init, ub_init)
-    return PropagationResult(lb, ub, rounds, converged, infeasible, prog)
+    out = run(lb_init, ub_init)
+    lb, ub, rounds, converged, infeasible, prog = out[:6]
+    snap = obs.TelemetrySnapshot(plane=out[6]) if tel_cap else None
+    return PropagationResult(
+        lb, ub, rounds, converged, infeasible, prog, telemetry=snap
+    )
 
 
 def propagate_unrolled(
@@ -491,11 +583,12 @@ def propagate_unrolled(
     ub0=None,
     stop_progress: float | None = None,
     patience: int = 1,
+    telemetry: int | None = None,
 ) -> PropagationResult:
     """megakernel-flavored driver: k fused rounds per convergence check."""
     return propagate_device_loop(
         dp, cfg, unroll=unroll, lb0=lb0, ub0=ub0,
-        stop_progress=stop_progress, patience=patience,
+        stop_progress=stop_progress, patience=patience, telemetry=telemetry,
     )
 
 
@@ -524,6 +617,7 @@ def propagate(
     lb0=None,
     ub0=None,
     policy: TierPolicy | None = None,
+    telemetry: int | None = None,
 ) -> PropagationResult:
     """Convenience front end: Problem -> PropagationResult (pure-jnp round,
     no Pallas -- the kernel-backed sibling is ``kernels.propagate_block_ell``).
@@ -544,7 +638,15 @@ def propagate(
     bounds by exact cast, and finishes in the requested dtype -- landing
     on the same fixed point the untied run reaches; ``stop_progress``
     additionally early-stops flatlined runs.  ``result.tier_rounds``
-    counts the fp32-tier rounds."""
+    counts the fp32-tier rounds.
+
+    ``telemetry`` (a ring capacity, e.g. ``obs.DEFAULT_CAPACITY``) attaches
+    an ``obs.TelemetrySnapshot`` to the result: per-round progress ring,
+    early-stop / infeasibility rounds, accumulated on device and read back
+    only at exit.  Under a two-tier policy the snapshot is the endgame's,
+    with ``tier_switch_round`` stamped (at the host decision point that
+    already reads the fp32 round count) and the fp32 tier's own snapshot
+    under ``.fp32``."""
     pair = two_tier_bounds_dtypes(policy, dtype) if policy is not None else None
     if pair is not None:
         dt32, final = pair
@@ -552,7 +654,7 @@ def propagate(
         r32 = _propagate_single(
             p, dataclasses.replace(cfg, max_rounds=cap32), driver, dt32,
             lb0, ub0, stop_progress=policy.switch_progress,
-            patience=policy.patience,
+            patience=policy.patience, telemetry=telemetry,
         )
         if bool(r32.infeasible):
             # Never trust an fp32 infeasibility verdict: outward rounding
@@ -562,10 +664,16 @@ def propagate(
             r = _propagate_single(
                 p, cfg, driver, final, lb0, ub0,
                 stop_progress=policy.stop_progress, patience=policy.patience,
+                telemetry=telemetry,
             )
+            if r.telemetry is not None:
+                r = r._replace(
+                    telemetry=dataclasses.replace(r.telemetry, fp32=r32.telemetry)
+                )
             return r._replace(tier_rounds=r32.rounds)
+        tier_rounds = int(r32.rounds)
         rem = dataclasses.replace(
-            cfg, max_rounds=max(1, cfg.max_rounds - int(r32.rounds))
+            cfg, max_rounds=max(1, cfg.max_rounds - tier_rounds)
         )
         warm_lb, warm_ub = bnd.canonical_infinite(
             jnp.asarray(r32.lb, final), jnp.asarray(r32.ub, final)
@@ -573,24 +681,37 @@ def propagate(
         r = _propagate_single(
             p, rem, driver, final, warm_lb, warm_ub,
             stop_progress=policy.stop_progress, patience=policy.patience,
+            telemetry=telemetry,
         )
+        if r.telemetry is not None:
+            r = r._replace(
+                telemetry=dataclasses.replace(
+                    r.telemetry,
+                    tier_switch_round=tier_rounds,
+                    fp32=r32.telemetry,
+                )
+            )
         return r._replace(
             rounds=r.rounds + r32.rounds, tier_rounds=r32.rounds
         )
     stop = policy.stop_progress if policy is not None else None
     patience = policy.patience if policy is not None else 1
     return _propagate_single(
-        p, cfg, driver, dtype, lb0, ub0, stop_progress=stop, patience=patience
+        p, cfg, driver, dtype, lb0, ub0, stop_progress=stop, patience=patience,
+        telemetry=telemetry,
     )
 
 
 def _propagate_single(
     p: Problem, cfg, driver, dtype, lb0, ub0,
-    stop_progress=None, patience: int = 1,
+    stop_progress=None, patience: int = 1, telemetry: int | None = None,
 ) -> PropagationResult:
     """One single-dtype fixed point (the tiered front end calls this twice)."""
     dp = DeviceProblem(p, dtype=dtype)
-    kw = dict(lb0=lb0, ub0=ub0, stop_progress=stop_progress, patience=patience)
+    kw = dict(
+        lb0=lb0, ub0=ub0, stop_progress=stop_progress, patience=patience,
+        telemetry=telemetry,
+    )
     if driver == "host_loop":
         return propagate_host_loop(dp, cfg, **kw)
     if driver == "device_loop":

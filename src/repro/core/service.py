@@ -44,6 +44,12 @@ Whenever the per-row dot products are exactly representable (integral
 coefficient/bound families like set covers or knapsacks -- and any engine
 whose round runs as a Pallas kernel, whose in-kernel order is fixed), the
 trajectories are identical bit-for-bit, and the tests pin exactly that.
+
+Observability rides the same zero-sync discipline (``repro.obs``): an
+optional per-slot telemetry plane lives in the resident state (entries
+13-16) and is read back only at the retirement sync; a host-side tracer
+emits pump/admit/step/readback spans plus one ``ticket`` span per
+request; and ``stats()`` carries a unified metrics-registry snapshot.
 """
 from __future__ import annotations
 
@@ -57,6 +63,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.metrics import default_registry
+from ..obs.telemetry import TelemetryPlane, TelemetrySnapshot, reset_rows
+from ..obs.trace import NULL_TRACER
 from .propagator import batched_step_rounds, donate_kwargs
 from .sparse import LANE, Problem, SlotPayload, col_pad, evict_slot, pack_into_slot
 from .types import DEFAULT_CONFIG, PropagationResult, PropagatorConfig
@@ -76,10 +85,18 @@ from .types import DEFAULT_CONFIG, PropagationResult, PropagatorConfig
 #  10 rounds (slots,) int32           per-slot rounds executed
 #  11 progress (slots,)               last round's progress measure (NaN fresh)
 #  12 flat   (slots,) int32           consecutive low-progress rounds
+#  13 ring   (slots, tel_cap)         telemetry progress rings (tel_cap may be 0)
+#  14 ticks  (slots,) int32           telemetry rounds recorded per slot
+#  15 stop_round (slots,) int32       early-stop round latch (-1 = never)
+#  16 infeas_round (slots,) int32     first crossed-bounds round (-1 = never)
+# The telemetry entries exist in EVERY state (zero-width ring when the
+# service runs without telemetry), so there is exactly one state layout and
+# one donation signature per bucket shape regardless of the telemetry knob.
 _LB, _UB, _ACTIVE, _LAST_CHANGED, _ROUNDS = 6, 7, 8, 9, 10
 _PROGRESS, _FLAT = 11, 12
+_RING, _TICKS, _STOPR, _INFSR = 13, 14, 15, 16
 _MATRIX_ARGS = 6          # state[:6] is the scattered matrix payload
-_STATE_ARGS = 13
+_STATE_ARGS = 17
 
 _TW_CANDIDATES = (8, 16, 32, 64, 128)
 
@@ -272,6 +289,20 @@ class ServiceTicket:
             return None
         return self.done_t - self.submit_t
 
+    def queue_latency(self) -> float | None:
+        """Submit-to-admit wall seconds (``None`` until admission) -- how
+        long the instance waited for a free slot."""
+        if self.admit_t is None:
+            return None
+        return self.admit_t - self.submit_t
+
+    def service_latency(self) -> float | None:
+        """Admit-to-retire wall seconds (``None`` until retirement) -- the
+        resident time actually spent propagating."""
+        if self.done_t is None or self.admit_t is None:
+            return None
+        return self.done_t - self.admit_t
+
 
 class _BucketEngine:
     """The AOT-warmed compiled engines of one bucket shape.
@@ -288,6 +319,15 @@ class _BucketEngine:
     drops out of ``active`` inside the device loop, so the pump's normal
     retire path frees its slot early (``last_changed`` still True marks it
     stopped-not-converged).
+
+    ``telemetry`` (a ring capacity) arms the per-slot device telemetry
+    plane (state entries 13-16): every round of every step records the
+    slot's progress / early-stop / infeasibility on device, admission
+    resets the recycled slot's rows in the same scatter, and the pump
+    reads the rows back only at retirement -- where it already syncs for
+    the bound plane.  ``telemetry=0`` carries zero-width buffers through
+    the identical state layout, so the two modes share one step/admit
+    signature and compile count.
     """
 
     def __init__(
@@ -300,6 +340,7 @@ class _BucketEngine:
         interpret: bool | None,
         stop_progress: float | None = None,
         patience: int = 1,
+        telemetry: int = 0,
     ):
         from ..kernels import ops as kops  # lazy: kernels imports core at module scope
         from ..kernels import prop_round as kern
@@ -307,6 +348,7 @@ class _BucketEngine:
         self.spec = spec
         self.cfg = cfg
         self.rounds_per_step = rounds_per_step
+        self.telemetry = tel_cap = int(telemetry or 0)
         self.np_dtype = np.dtype(dtype)
         self.dev_dtype = jnp.asarray(np.zeros(0, self.np_dtype)).dtype
         self.eps = cfg.eps_for(self.dev_dtype)
@@ -323,9 +365,11 @@ class _BucketEngine:
         eps, int_eps, inf = self.eps, cfg.int_eps, cfg.inf
         outward = cfg.outward_for(self.dev_dtype)
         max_rounds, budget = cfg.max_rounds, rounds_per_step
+        feas_eps = cfg.feas_eps
 
         def step(val, col, ii, crow, lhs_c, rhs_c,
-                 lb, ub, active, last_changed, rounds, progress, flat):
+                 lb, ub, active, last_changed, rounds, progress, flat,
+                 ring, ticks, stopr, infsr):
             ti = jnp.asarray(tile_inst)
             if pallas_ok:
                 def round_fn(lb_, ub_, act):
@@ -342,12 +386,25 @@ class _BucketEngine:
                         fits_one_chunk=spec.fits_one_chunk,
                         eps=eps, int_eps=int_eps, inf=inf, outward=outward,
                     )
-            return batched_step_rounds(
+            if tel_cap:
+                out = batched_step_rounds(
+                    round_fn, lb, ub, active, last_changed, rounds,
+                    max_rounds, budget=budget,
+                    stop_progress=stop_progress, patience=patience,
+                    progress=progress, flat=flat, with_progress=True,
+                    plane=TelemetryPlane(ring, ticks, stopr, infsr),
+                    feas_eps=feas_eps,
+                )
+                return out[:7] + tuple(out[7])
+            out = batched_step_rounds(
                 round_fn, lb, ub, active, last_changed, rounds,
                 max_rounds, budget=budget,
                 stop_progress=stop_progress, patience=patience,
                 progress=progress, flat=flat, with_progress=True,
             )
+            # Telemetry off: the zero-width plane rides through unchanged
+            # so the state layout (and donation signature) never varies.
+            return out + (ring, ticks, stopr, infsr)
 
         self.step = jax.jit(
             step, **donate_kwargs(argnums=range(_MATRIX_ARGS, _STATE_ARGS))
@@ -358,6 +415,7 @@ class _BucketEngine:
         def make_admit(kk: int):
             def admit(val, col, ii, crow, lhs_c, rhs_c,
                       lb, ub, active, last_changed, rounds, progress, flat,
+                      ring, ticks, stopr, infsr,
                       p_val, p_col, p_ii, p_crow, p_lhs, p_rhs, p_lb, p_ub,
                       slot_ids, on):
                 tix = (slot_ids[:, None] * t + jnp.arange(t)[None, :]).reshape(-1)
@@ -375,8 +433,14 @@ class _BucketEngine:
                 rounds = rounds.at[slot_ids].set(0)
                 progress = progress.at[slot_ids].set(jnp.nan)
                 flat = flat.at[slot_ids].set(0)
+                # Slot recycling: the admitted slots' telemetry rows return
+                # to the fresh-plane state inside the same fused dispatch.
+                plane = reset_rows(
+                    TelemetryPlane(ring, ticks, stopr, infsr), slot_ids
+                )
                 return (val, col, ii, crow, lhs_c, rhs_c,
-                        lb, ub, active, last_changed, rounds, progress, flat)
+                        lb, ub, active, last_changed, rounds, progress, flat,
+                        *plane)
             return jax.jit(admit, **donate_kwargs(argnums=range(_STATE_ARGS)))
 
         self.admits = {
@@ -409,6 +473,10 @@ class _BucketEngine:
             jnp.asarray(np.zeros((s,), np.int32)),
             jnp.asarray(np.full((s,), np.nan, dt)),
             jnp.asarray(np.zeros((s,), np.int32)),
+            jnp.asarray(np.full((s, self.telemetry), np.nan, dt)),
+            jnp.asarray(np.zeros((s,), np.int32)),
+            jnp.asarray(np.full((s,), -1, np.int32)),
+            jnp.asarray(np.full((s,), -1, np.int32)),
         )
 
     def admit_args(self, payloads: Sequence[SlotPayload], slot_ids, on: bool):
@@ -470,11 +538,12 @@ def _engine_lru():
 
 
 def _get_engine(spec, dtype, cfg, rounds_per_step, use_pallas, interpret,
-                stop_progress=None, patience=1):
+                stop_progress=None, patience=1, telemetry=0):
     """Fetch-or-build the warmed engine of one bucket shape."""
     key = (
         spec, np.dtype(dtype).str, dataclasses.astuple(cfg),
         rounds_per_step, use_pallas, interpret, stop_progress, patience,
+        int(telemetry or 0),
     )
     lru = _engine_lru()
     eng = lru.get(key, ())
@@ -482,6 +551,7 @@ def _get_engine(spec, dtype, cfg, rounds_per_step, use_pallas, interpret,
         eng = _BucketEngine(
             spec, dtype, cfg, rounds_per_step, use_pallas, interpret,
             stop_progress=stop_progress, patience=patience,
+            telemetry=int(telemetry or 0),
         )
         lru.put(key, (), eng)
     eng.warm()
@@ -528,6 +598,16 @@ class PropagationService:
     whole-service fp32 tier is ``dtype=np.float32`` (the engines apply the
     outward-rounded merge automatically); per-slot tier promotion is not a
     service feature -- resubmit promoted instances to an fp64 service.
+
+    Observability: ``telemetry`` (a ring capacity) arms per-slot device
+    telemetry -- retired tickets' results carry an
+    ``obs.telemetry.TelemetrySnapshot`` read back at the retirement sync
+    the pump already performs.  ``tracer`` (an ``obs.trace.Tracer``) emits
+    structured spans for every pump/admit/step/readback plus one
+    ``ticket`` span per retired instance; the default ``NULL_TRACER``
+    no-ops.  ``metrics`` is a :class:`~repro.obs.metrics.MetricsRegistry`
+    preloaded with the kernel/engine caches, compile counts and service
+    counters; its pinned-schema snapshot rides ``stats()['metrics']``.
     """
 
     def __init__(
@@ -540,6 +620,8 @@ class PropagationService:
         interpret: bool | None = None,
         stop_progress: float | None = None,
         patience: int = 1,
+        telemetry: int | None = None,
+        tracer=None,
     ):
         if not specs:
             raise ValueError("PropagationService needs at least one BucketSpec")
@@ -549,6 +631,8 @@ class PropagationService:
         self._cfg = cfg
         self._dtype = np.dtype(dtype)
         self._stop_progress = stop_progress
+        self._telemetry = int(telemetry or 0)
+        self._tracer = NULL_TRACER if tracer is None else tracer
         self._lock = threading.RLock()
         self._wake = threading.Event()
         self._stop_evt = threading.Event()
@@ -558,9 +642,14 @@ class PropagationService:
             _Bucket(spec, _get_engine(
                 spec, dtype, cfg, rounds_per_step, use_pallas, interpret,
                 stop_progress=stop_progress, patience=patience,
+                telemetry=self._telemetry,
             ))
             for spec in specs
         ]
+        self.metrics = default_registry()
+        self.metrics.register("engine_cache", lambda: _engine_lru().info())
+        self.metrics.register("compile_counts", self.compile_counts)
+        self.metrics.register("service", self._counters)
 
     @classmethod
     def from_problems(
@@ -623,39 +712,48 @@ class PropagationService:
         (power-of-two grouped scatters), run one budgeted step where any
         slot is occupied, retire newly converged slots (async readback +
         host bookkeeping only -- their tiles are already gated off by the
-        occupancy mask).  Returns the cycle's counters."""
+        occupancy mask).  Returns the cycle's counters.
+
+        With a tracer attached the cycle emits one ``pump`` span with
+        nested ``admit``/``step``/``readback`` spans per bucket, plus one
+        ``ticket`` span per retirement built from the timestamps the
+        ticket already carries (zero tracing work on the submit path)."""
         admitted = retired = stepped = 0
-        with self._lock:
+        tr = self._tracer
+        with tr.span("pump"), self._lock:
             for bk in self._buckets:
+                label = f"n_pad={bk.spec.n_pad}/tw={bk.spec.tile_width}"
                 free = [i for i, tk in enumerate(bk.slot_tickets) if tk is None]
                 take = min(len(free), len(bk.queue))
                 if take:
-                    tickets = [bk.queue.popleft() for _ in range(take)]
-                    pos = 0
-                    for k in _pow2_decomposition(take):
-                        group = tickets[pos:pos + k]
-                        slot_ids = free[pos:pos + k]
-                        pos += k
-                        bk.state = bk.engine.admits[k](
-                            *bk.state,
-                            *bk.engine.admit_args(
-                                [tk.payload for tk in group], slot_ids, True
-                            ),
-                        )
-                        now = time.perf_counter()
-                        for s, tk in zip(slot_ids, group):
-                            bk.slot_tickets[s] = tk
-                            tk.admit_t = now
-                            tk.slot = s
+                    with tr.span("admit", bucket=label, count=take):
+                        tickets = [bk.queue.popleft() for _ in range(take)]
+                        pos = 0
+                        for k in _pow2_decomposition(take):
+                            group = tickets[pos:pos + k]
+                            slot_ids = free[pos:pos + k]
+                            pos += k
+                            bk.state = bk.engine.admits[k](
+                                *bk.state,
+                                *bk.engine.admit_args(
+                                    [tk.payload for tk in group], slot_ids, True
+                                ),
+                            )
+                            now = time.perf_counter()
+                            for s, tk in zip(slot_ids, group):
+                                bk.slot_tickets[s] = tk
+                                tk.admit_t = now
+                                tk.slot = s
                     admitted += take
                 occ = bk.occupied()
                 bk.occupancy_sum += occ / bk.spec.slots
                 bk.pumps += 1
                 if not occ:
                     continue
-                bk.state = bk.state[:_MATRIX_ARGS] + tuple(
-                    bk.engine.step(*bk.state)
-                )
+                with tr.span("step", bucket=label, occupied=occ):
+                    bk.state = bk.state[:_MATRIX_ARGS] + tuple(
+                        bk.engine.step(*bk.state)
+                    )
                 stepped += 1
                 active_h = np.asarray(bk.state[_ACTIVE])
                 done_slots = [
@@ -664,15 +762,25 @@ class PropagationService:
                 ]
                 if not done_slots:
                     continue
-                for idx in (_LB, _UB, _LAST_CHANGED, _ROUNDS, _PROGRESS):
-                    hint = getattr(bk.state[idx], "copy_to_host_async", None)
-                    if callable(hint):
-                        hint()
-                lb_h = np.asarray(bk.state[_LB])
-                ub_h = np.asarray(bk.state[_UB])
-                lc_h = np.asarray(bk.state[_LAST_CHANGED])
-                rd_h = np.asarray(bk.state[_ROUNDS])
-                pg_h = np.asarray(bk.state[_PROGRESS])
+                tel_on = bool(self._telemetry)
+                planes = (_LB, _UB, _LAST_CHANGED, _ROUNDS, _PROGRESS)
+                if tel_on:
+                    planes += (_RING, _TICKS, _STOPR, _INFSR)
+                with tr.span("readback", bucket=label, retired=len(done_slots)):
+                    for idx in planes:
+                        hint = getattr(bk.state[idx], "copy_to_host_async", None)
+                        if callable(hint):
+                            hint()
+                    lb_h = np.asarray(bk.state[_LB])
+                    ub_h = np.asarray(bk.state[_UB])
+                    lc_h = np.asarray(bk.state[_LAST_CHANGED])
+                    rd_h = np.asarray(bk.state[_ROUNDS])
+                    pg_h = np.asarray(bk.state[_PROGRESS])
+                    if tel_on:
+                        ring_h = np.asarray(bk.state[_RING])
+                        ticks_h = np.asarray(bk.state[_TICKS])
+                        stopr_h = np.asarray(bk.state[_STOPR])
+                        infsr_h = np.asarray(bk.state[_INFSR])
                 now = time.perf_counter()
                 for i in done_slots:
                     tk = bk.slot_tickets[i]
@@ -685,6 +793,16 @@ class PropagationService:
                     if (self._stop_progress is not None and not conv
                             and int(rd_h[i]) < self._cfg.max_rounds):
                         bk.early_stopped += 1
+                    tel = None
+                    if tel_on:
+                        # The slot will be recycled, so copy its rows out of
+                        # the shared plane into a scalar-layout host plane.
+                        tel = TelemetrySnapshot(plane=TelemetryPlane(
+                            ring=ring_h[i].copy(),
+                            ticks=ticks_h[i],
+                            stop_round=stopr_h[i],
+                            infeas_round=infsr_h[i],
+                        ))
                     tk._result = PropagationResult(
                         lb=lb_i,
                         ub=ub_i,
@@ -694,8 +812,18 @@ class PropagationService:
                             np.any(lb_i > ub_i + self._cfg.feas_eps)
                         ),
                         progress=float(pg_h[i]),
+                        telemetry=tel,
                     )
                     tk.done_t = now
+                    tr.record(
+                        "ticket", tk.submit_t, now,
+                        bucket=label,
+                        slot=i,
+                        queue_ms=(tk.admit_t - tk.submit_t) * 1e3,
+                        service_ms=(now - tk.admit_t) * 1e3,
+                        rounds=int(rd_h[i]),
+                        converged=conv,
+                    )
                     bk.slot_tickets[i] = None
                     bk.retired += 1
                     tk._event.set()
@@ -771,11 +899,30 @@ class PropagationService:
 
     # -- observability -----------------------------------------------------
 
+    @property
+    def tracer(self):
+        """The attached span tracer (``NULL_TRACER`` when tracing is off)."""
+        return self._tracer
+
+    def _counters(self) -> dict:
+        """The registry's ``service`` source: the live global counters."""
+        with self._lock:
+            return {
+                "submitted": self._submitted,
+                "retired": sum(bk.retired for bk in self._buckets),
+                "early_stopped": sum(bk.early_stopped for bk in self._buckets),
+                "pending": sum(len(bk.queue) for bk in self._buckets),
+                "occupied": sum(bk.occupied() for bk in self._buckets),
+                "telemetry_capacity": self._telemetry,
+            }
+
     def stats(self) -> dict:
         """Service stats endpoint: per-bucket occupancy/padding histogram in
         the same shape as ``batch_stats()['per_bucket']`` (computed over the
         RESIDENT instances), queue depths, retire counters, mean occupancy,
-        plus the engine-cache and kernel-cache counters."""
+        the engine-cache and kernel-cache counters, and the unified
+        ``metrics`` registry snapshot (pinned schema -- see
+        ``repro.obs.metrics``)."""
         from ..kernels.ops import cache_info  # lazy: kernels imports core
         with self._lock:
             buckets = []
@@ -823,6 +970,7 @@ class PropagationService:
                 "buckets": buckets,
                 "engine_cache": _engine_lru().info(),
                 "kernel_caches": cache_info(),
+                "metrics": self.metrics.snapshot(),
             }
 
     def compile_counts(self) -> dict:

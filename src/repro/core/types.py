@@ -150,6 +150,9 @@ class PropagationResult(NamedTuple):
     infeasible: jnp.ndarray    # () bool: some variable domain became empty
     progress: jnp.ndarray = jnp.nan    # () last round's progress measure
     tier_rounds: jnp.ndarray = 0       # () int32: rounds run in the fp32 tier
+    # obs.telemetry.TelemetrySnapshot when the driver was called with a
+    # telemetry capacity (lazy: holds device arrays, no sync on attach).
+    telemetry: object | None = None
 
 
 def is_pos_inf(v, inf: float = INF):

@@ -89,6 +89,7 @@ from ..core.types import (
     TierPolicy,
     _is_low_precision,
 )
+from ..obs import telemetry as obs
 from . import prop_round as kern
 from . import ref as kref
 
@@ -1162,6 +1163,7 @@ def propagate_block_ell(
     stop_progress: float | None = None,
     patience: int = 1,
     policy: TierPolicy | None = None,
+    telemetry: int | None = None,
 ) -> PropagationResult:
     """Kernel-backed propagation.
 
@@ -1184,9 +1186,18 @@ def propagate_block_ell(
     merges until per-round progress drops below ``policy.switch_progress``,
     then an exact-cast promotion into the requested dtype for the endgame.
     Both tiers reuse their own dtype-keyed prepared engines and compiled
-    runners, so tiered tree search stays recompile-free."""
+    runners, so tiered tree search stays recompile-free.
+
+    ``telemetry`` (a ring capacity) carries an ``obs.TelemetryPlane``
+    through the while_loop and attaches its snapshot to the result --
+    per-round progress ring, early-stop and first-infeasible rounds, read
+    back only at exit.  Recording reuses the progress scalar the carry
+    already computes, so bounds stay bitwise identical and the fixed point
+    remains one dispatch; the telemetry capacity is part of the runner
+    cache key (on/off are distinct compiled runners, each cached once)."""
     if driver not in ("host_loop", "device_loop"):
         raise ValueError(f"unknown driver: {driver!r}")
+    tel_cap = int(telemetry or 0)
     pair = two_tier_bounds_dtypes(policy, dtype) if policy is not None else None
     if pair is not None:
         dt32, final = pair
@@ -1194,6 +1205,7 @@ def propagate_block_ell(
             tile_rows=tile_rows, tile_width=tile_width, use_pallas=use_pallas,
             fused=fused, driver=driver, interpret=interpret, scatter=scatter,
             donate=donate, slab=slab, patience=policy.patience,
+            telemetry=telemetry,
         )
         cap32 = max(1, int(cfg.max_rounds * policy.fp32_round_frac))
         r32 = propagate_block_ell(
@@ -1207,9 +1219,14 @@ def propagate_block_ell(
                 p, cfg, dtype=final, lb0=lb0, ub0=ub0,
                 stop_progress=policy.stop_progress, **kw,
             )
+            if r.telemetry is not None:
+                r = r._replace(
+                    telemetry=dataclasses.replace(r.telemetry, fp32=r32.telemetry)
+                )
             return r._replace(tier_rounds=r32.rounds)
+        tier_rounds = int(r32.rounds)
         rem = dataclasses.replace(
-            cfg, max_rounds=max(1, cfg.max_rounds - int(r32.rounds))
+            cfg, max_rounds=max(1, cfg.max_rounds - tier_rounds)
         )
         warm_lb, warm_ub = bnd.canonical_infinite(
             jnp.asarray(r32.lb, final), jnp.asarray(r32.ub, final)
@@ -1218,6 +1235,13 @@ def propagate_block_ell(
             p, rem, dtype=final, lb0=warm_lb, ub0=warm_ub,
             stop_progress=policy.stop_progress, **kw,
         )
+        if r.telemetry is not None:
+            r = r._replace(
+                telemetry=dataclasses.replace(
+                    r.telemetry, tier_switch_round=tier_rounds,
+                    fp32=r32.telemetry,
+                )
+            )
         return r._replace(rounds=r.rounds + r32.rounds, tier_rounds=r32.rounds)
     if policy is not None:
         stop_progress = policy.stop_progress
@@ -1232,7 +1256,7 @@ def propagate_block_ell(
 
     key = (
         id(prep.d.val), cfg, use_pallas, do_fuse, scatter, interpret, do_donate,
-        driver, slab, stop_progress, patience,
+        driver, slab, stop_progress, patience, tel_cap,
     )
     anchors = (prep.d.val,)
 
@@ -1255,22 +1279,34 @@ def propagate_block_ell(
             # bounds are still live (they are donated away by the call).
             def step(lb, ub):
                 nlb, nub, ch = round_fn(lb, ub)
-                return nlb, nub, ch, bnd.progress_measure(lb, ub, nlb, nub)
+                out = nlb, nub, ch, bnd.progress_measure(lb, ub, nlb, nub)
+                if tel_cap:
+                    out = out + (jnp.any(nlb > nub + cfg.feas_eps),)
+                return out
 
             return jax.jit(step, **donate_kw)
 
         @functools.partial(jax.jit, **donate_kw)
         def run(lb0, ub0):
             def body(state):
-                lb, ub, _, r, _, flat = state
+                lb, ub, _, r, _, flat = state[:6]
                 nlb, nub, ch = round_fn(lb, ub)
                 prog = bnd.progress_measure(lb, ub, nlb, nub)
                 if stop_progress is not None:
                     flat = jnp.where(prog < stop_progress, flat + 1, jnp.int32(0))
-                return nlb, nub, ch, r + 1, prog, flat
+                out = (nlb, nub, ch, r + 1, prog, flat)
+                if tel_cap:
+                    stopped = (
+                        (flat >= patience) if stop_progress is not None else None
+                    )
+                    out = out + (obs.record_round(
+                        state[6], prog, r + 1,
+                        jnp.any(nlb > nub + cfg.feas_eps), stopped,
+                    ),)
+                return out
 
             def cond(state):
-                _, _, ch, r, _, flat = state
+                ch, r, flat = state[2], state[3], state[5]
                 go = ch & (r < cfg.max_rounds)
                 if stop_progress is not None:
                     go = go & (flat < patience)
@@ -1280,9 +1316,13 @@ def propagate_block_ell(
                 lb0, ub0, jnp.asarray(True), jnp.int32(0),
                 jnp.asarray(jnp.nan, lb0.dtype), jnp.int32(0),
             )
-            lb, ub, ch, r, prog, _ = jax.lax.while_loop(cond, body, init)
+            if tel_cap:
+                init = init + (obs.device_plane(tel_cap, dtype=lb0.dtype),)
+            final = jax.lax.while_loop(cond, body, init)
+            lb, ub, ch, r, prog = final[:5]
             lb, ub = lb[:n], ub[:n]
-            return lb, ub, r, ~ch, jnp.any(lb > ub + cfg.feas_eps), prog
+            res = (lb, ub, r, ~ch, jnp.any(lb > ub + cfg.feas_eps), prog)
+            return res + ((final[6],) if tel_cap else ())
 
         return run
 
@@ -1296,24 +1336,38 @@ def propagate_block_ell(
     if driver == "host_loop":
         rounds, changed, flat = 0, True, 0
         prog = jnp.asarray(jnp.nan, lb.dtype)
+        history: list[float] = []
+        stop_round = infeas_round = -1
         while changed and rounds < cfg.max_rounds:
             # Donated in, fresh buffers out: the loop owns its bounds, so XLA
             # reuses the same two (n_pad,) buffers round over round.
-            lb, ub, cdev, prog = runner(lb, ub)
+            lb, ub, cdev, prog, *infeas_dev = runner(lb, ub)
             changed = bool(cdev)
             rounds += 1
+            if tel_cap:
+                history.append(float(prog))
+                if infeas_round < 0 and bool(infeas_dev[0]):
+                    infeas_round = rounds
             if stop_progress is not None:
                 flat = flat + 1 if float(prog) < stop_progress else 0
                 if flat >= patience:
+                    stop_round = rounds
                     break
         infeas = bool(jnp.any(lb[:n] > ub[:n] + cfg.feas_eps))
+        snap = obs.host_snapshot(
+            history, tel_cap, stop_round=stop_round, infeas_round=infeas_round
+        ) if tel_cap else None
         return PropagationResult(
             lb[:n], ub[:n], jnp.int32(rounds), jnp.asarray(not changed),
-            jnp.asarray(infeas), progress=prog,
+            jnp.asarray(infeas), progress=prog, telemetry=snap,
         )
 
-    lb, ub, rounds, converged, infeasible, prog = runner(lb, ub)
-    return PropagationResult(lb, ub, rounds, converged, infeasible, progress=prog)
+    out = runner(lb, ub)
+    lb, ub, rounds, converged, infeasible, prog = out[:6]
+    snap = obs.TelemetrySnapshot(plane=out[6]) if tel_cap else None
+    return PropagationResult(
+        lb, ub, rounds, converged, infeasible, progress=prog, telemetry=snap
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -1526,13 +1580,22 @@ def batched_round_fn_for(
     )
 
 
-def _unpack_batch_results(prep, lb, ub, rounds, converged, infeasible, progress=None):
+def _unpack_batch_results(
+    prep, lb, ub, rounds, converged, infeasible, progress=None, plane=None
+):
     out = []
     for i, p in enumerate(prep.batch.problems):
+        # Per-instance snapshots share ONE underlying batched plane (row
+        # selected lazily by index) -- attaching them costs no readback.
+        snap = (
+            obs.TelemetrySnapshot(plane=plane, index=i)
+            if plane is not None else None
+        )
         out.append(
             PropagationResult(
                 lb[i, : p.n], ub[i, : p.n], rounds[i], converged[i], infeasible[i],
                 progress=jnp.nan if progress is None else progress[i],
+                telemetry=snap,
             )
         )
     return out
@@ -1563,15 +1626,18 @@ def batched_device_runner(
     slab: int | None = None,
     stop_progress: float | None = None,
     patience: int = 1,
+    telemetry: int | None = None,
 ):
     """The bucket's whole fixed point as ONE jitted dispatch, cached:
     ``run(lb0, ub0) -> (lb, ub, rounds, converged, infeasible, progress)``
     (all per-instance; ``lb0``/``ub0`` donated where supported).
     ``stop_progress``/``patience`` arm the per-instance progress-based
-    early stop inside the dispatch."""
+    early stop inside the dispatch; ``telemetry`` (a ring capacity)
+    appends the batched ``obs.TelemetryPlane`` to the return."""
+    tel_cap = int(telemetry or 0)
     key = (
         id(prep), cfg, use_pallas, interpret, donate, slab,
-        stop_progress, patience, "device",
+        stop_progress, patience, tel_cap, "device",
     )
 
     def build():
@@ -1584,13 +1650,19 @@ def batched_device_runner(
 
         @functools.partial(jax.jit, **donate_kw)
         def run(lb0, ub0):
-            lb, ub, rounds, converged, progress = batched_fixed_point(
+            plane = (
+                obs.device_plane(tel_cap, batch=lb0.shape[0], dtype=lb0.dtype)
+                if tel_cap else None
+            )
+            out = batched_fixed_point(
                 round_fn, lb0, ub0, cfg.max_rounds,
                 stop_progress=stop_progress, patience=patience,
-                with_progress=True,
+                with_progress=True, plane=plane, feas_eps=cfg.feas_eps,
             )
+            lb, ub, rounds, converged, progress = out[:5]
             infeasible = jnp.any((lb > ub + cfg.feas_eps) & col_valid, axis=-1)
-            return lb, ub, rounds, converged, infeasible, progress
+            res = (lb, ub, rounds, converged, infeasible, progress)
+            return res + ((out[5],) if tel_cap else ())
 
         return run
 
@@ -1626,6 +1698,7 @@ def propagate_batch_prepared(
     slab: int | None = None,
     stop_progress: float | None = None,
     patience: int = 1,
+    telemetry: int | None = None,
 ):
     """Run one prepared bucket to its per-instance fixed points.
 
@@ -1636,12 +1709,16 @@ def propagate_batch_prepared(
     the bucket from a caller-supplied ``(B, n_pad)`` bound plane (default:
     the packed instances' root bounds) -- the prepared tiles and the cached
     runner serve any plane.  Returns one ``PropagationResult`` per
-    instance, bucket order."""
+    instance, bucket order.  ``telemetry`` (a ring capacity) attaches
+    per-instance ``obs.TelemetrySnapshot``s -- device-accumulated on the
+    device loop, host-accumulated (this driver syncs every round anyway)
+    on the host loop."""
     d = prep.d
     bsz = prep.size
+    tel_cap = int(telemetry or 0)
 
     if driver == "host_loop":
-        key = (id(prep), cfg, use_pallas, interpret, donate, slab, "host")
+        key = (id(prep), cfg, use_pallas, interpret, donate, slab, tel_cap, "host")
 
         def build():
             round_fn = batched_round_fn_for(prep, cfg, use_pallas, interpret, slab)
@@ -1649,12 +1726,18 @@ def propagate_batch_prepared(
                 donate_kw = donate_kwargs(argnums=(0, 1))
             else:
                 donate_kw = {"donate_argnums": (0, 1)} if donate else {}
+            col_valid = prep.d.col_valid
 
             # Progress is computed INSIDE the jit, where the pre-round
             # bounds are still live (they are donated away by the call).
             def step(lb, ub, active):
                 nlb, nub, ch = round_fn(lb, ub, active)
-                return nlb, nub, ch, bnd.progress_measure(lb, ub, nlb, nub)
+                out = nlb, nub, ch, bnd.progress_measure(lb, ub, nlb, nub)
+                if tel_cap:
+                    out = out + (
+                        jnp.any((nlb > nub + cfg.feas_eps) & col_valid, axis=-1),
+                    )
+                return out
 
             return jax.jit(step, **donate_kw)
 
@@ -1665,8 +1748,12 @@ def propagate_batch_prepared(
         rounds = np.zeros(bsz, dtype=np.int32)
         flat = np.zeros(bsz, dtype=np.int32)
         progress = np.full(bsz, np.nan)
+        histories: list[list[float]] = [[] for _ in range(bsz)]
+        stop_round = np.full(bsz, -1, np.int32)
+        infeas_round = np.full(bsz, -1, np.int32)
         while active.any():
-            lb, ub, ch, prog = jit_round(lb, ub, jnp.asarray(active))
+            ran = active
+            lb, ub, ch, prog, *inf_dev = jit_round(lb, ub, jnp.asarray(active))
             ch = np.asarray(ch)  # the per-round host<->device sync point
             prog = np.asarray(prog)
             rounds += active
@@ -1674,25 +1761,49 @@ def propagate_batch_prepared(
             progress = np.where(active, prog, progress)
             active = active & ch & (rounds < cfg.max_rounds)
             if stop_progress is not None:
-                flat = np.where(active & (prog < stop_progress), flat + 1, 0)
+                flat = np.where(ran & (prog < stop_progress), flat + 1, 0)
+                stopped = ran & (flat >= patience)
+                stop_round = np.where(
+                    stopped & (stop_round < 0), rounds, stop_round
+                )
                 active = active & (flat < patience)
+            if tel_cap:
+                inf_now = np.asarray(inf_dev[0])
+                infeas_round = np.where(
+                    ran & inf_now & (infeas_round < 0), rounds, infeas_round
+                )
+                for i in np.flatnonzero(ran):
+                    histories[i].append(float(prog[i]))
         infeasible = np.asarray(
             jnp.any((lb > ub + cfg.feas_eps) & d.col_valid, axis=-1)
         )
-        return _unpack_batch_results(
+        results = _unpack_batch_results(
             prep, lb, ub, rounds, ~last_changed, infeasible, progress
         )
+        if tel_cap:
+            results = [
+                r._replace(telemetry=obs.host_snapshot(
+                    histories[i], tel_cap,
+                    stop_round=int(stop_round[i]),
+                    infeas_round=int(infeas_round[i]),
+                ))
+                for i, r in enumerate(results)
+            ]
+        return results
 
     if driver != "device_loop":
         raise ValueError(f"unknown driver: {driver!r}")
 
     run = batched_device_runner(
-        prep, cfg, use_pallas, interpret, donate, slab, stop_progress, patience
+        prep, cfg, use_pallas, interpret, donate, slab, stop_progress, patience,
+        telemetry=tel_cap,
     )
     lb_init, ub_init = _batch_initial_bounds(prep, lb0, ub0)
-    lb, ub, rounds, converged, infeasible, progress = run(lb_init, ub_init)
+    out = run(lb_init, ub_init)
+    lb, ub, rounds, converged, infeasible, progress = out[:6]
+    plane = out[6] if tel_cap else None
     return _unpack_batch_results(
-        prep, lb, ub, rounds, converged, infeasible, progress
+        prep, lb, ub, rounds, converged, infeasible, progress, plane=plane
     )
 
 
@@ -1781,6 +1892,7 @@ def propagate_batch_block_ell(
     stop_progress: float | None = None,
     patience: int = 1,
     policy: TierPolicy | None = None,
+    telemetry: int | None = None,
 ):
     """Batched kernel-backed propagation: pack -> per-bucket dispatch ->
     per-instance results in input order.  Packing, device transfer and the
@@ -1796,7 +1908,11 @@ def propagate_batch_block_ell(
     through the two-tier precision scheme -- an fp32 pass (outward-rounded
     merges) until each instance's progress drops below
     ``policy.switch_progress``, then an exact-cast warm start of the
-    requested-dtype engine through the same packed batches."""
+    requested-dtype engine through the same packed batches.  ``telemetry``
+    (a ring capacity) attaches per-instance device telemetry snapshots;
+    each bucket's instances share one batched plane (zero extra
+    readbacks), and under ``policy`` the fp32 tier's snapshot hangs off
+    the endgame snapshot's ``.fp32``."""
     problems = list(problems)
     pair = two_tier_bounds_dtypes(policy, dtype) if policy is not None else None
     if pair is not None:
@@ -1804,7 +1920,7 @@ def propagate_batch_block_ell(
         kw = dict(
             tile_rows=tile_rows, tile_width=tile_width, use_pallas=use_pallas,
             driver=driver, interpret=interpret, donate=donate, slab=slab,
-            patience=policy.patience,
+            patience=policy.patience, telemetry=telemetry,
         )
         cap32 = max(1, int(cfg.max_rounds * policy.fp32_round_frac))
         r32 = propagate_batch_block_ell(
@@ -1828,10 +1944,21 @@ def propagate_batch_block_ell(
             problems, rem, dtype=final, bounds=warm,
             stop_progress=policy.stop_progress, **kw,
         )
+        def _combine_tel(r, t):
+            if r.telemetry is None:
+                return None
+            return dataclasses.replace(
+                r.telemetry,
+                tier_switch_round=(
+                    -1 if bool(t.infeasible) else int(t.rounds)
+                ),
+                fp32=t.telemetry,
+            )
         return [
             r._replace(
                 rounds=r.rounds + (0 if bool(t.infeasible) else t.rounds),
                 tier_rounds=t.rounds,
+                telemetry=_combine_tel(r, t),
             )
             for r, t in zip(res, r32)
         ]
@@ -1855,6 +1982,7 @@ def propagate_batch_block_ell(
             prep, cfg, use_pallas=use_pallas, driver=driver,
             interpret=interpret, donate=donate, lb0=lb0, ub0=ub0, slab=slab,
             stop_progress=stop_progress, patience=patience,
+            telemetry=telemetry,
         )
         for idx, res in zip(batch.indices, results):
             out[idx] = res
@@ -1960,16 +2088,19 @@ def node_batch_runner(
     slab: int | None = None,
     stop_progress: float | None = None,
     patience: int = 1,
+    telemetry: int | None = None,
 ):
     """The node batch's whole fixed point as ONE jitted dispatch, cached:
     ``run(lb0, ub0) -> (lb, ub, rounds, converged, infeasible, progress)``
     with the node axis leading everywhere (``lb0``/``ub0`` donated where
     supported).  ``stop_progress``/``patience`` arm the per-node
-    progress-based early stop inside the dispatch."""
+    progress-based early stop inside the dispatch; ``telemetry`` (a ring
+    capacity) appends the per-node ``obs.TelemetryPlane`` to the return."""
     do_donate = donate_supported() if donate is None else bool(donate)
+    tel_cap = int(telemetry or 0)
     key = (
         id(prep.d.val), batch_size, cfg, use_pallas, interpret, do_donate, slab,
-        stop_progress, patience,
+        stop_progress, patience, tel_cap,
     )
     anchors = (prep.d.val,)
     runner = _node_runner_cache.get(key, anchors)
@@ -1982,12 +2113,19 @@ def node_batch_runner(
 
     @functools.partial(jax.jit, **donate_kw)
     def run(lb0, ub0):
-        lb, ub, rounds, converged, progress = batched_fixed_point(
+        plane = (
+            obs.device_plane(tel_cap, batch=lb0.shape[0], dtype=lb0.dtype)
+            if tel_cap else None
+        )
+        out = batched_fixed_point(
             round_fn, lb0, ub0, cfg.max_rounds,
             stop_progress=stop_progress, patience=patience, with_progress=True,
+            plane=plane, feas_eps=cfg.feas_eps,
         )
+        lb, ub, rounds, converged, progress = out[:5]
         infeasible = jnp.any((lb > ub + cfg.feas_eps) & col_valid[None, :], axis=-1)
-        return lb, ub, rounds, converged, infeasible, progress
+        res = (lb, ub, rounds, converged, infeasible, progress)
+        return res + ((out[5],) if tel_cap else ())
 
     _node_runner_cache.put(key, anchors, run)
     return run
@@ -2005,6 +2143,7 @@ def propagate_nodes_prepared(
     stop_progress: float | None = None,
     patience: int = 1,
     with_progress: bool = False,
+    telemetry: int | None = None,
 ):
     """Run B warm-started nodes of one prepared instance to their fixed
     points in ONE dispatch.
@@ -2017,7 +2156,10 @@ def propagate_nodes_prepared(
     them).  ``stop_progress``/``patience`` arm the per-node progress-based
     early stop.  Each node's result is exactly what its own
     single-instance warm-started ``propagate_block_ell`` run would
-    produce, including round counts."""
+    produce, including round counts.  ``telemetry`` (a ring capacity)
+    appends the per-node batched ``obs.TelemetryPlane`` to either return
+    shape -- wrap rows in ``obs.TelemetrySnapshot(plane, index=i)`` to
+    read one node's trajectory."""
     lb_nodes = np.asarray(lb_nodes)
     ub_nodes = np.asarray(ub_nodes)
     if lb_nodes.ndim != 2 or lb_nodes.shape != ub_nodes.shape:
@@ -2036,13 +2178,19 @@ def propagate_nodes_prepared(
         if pad:
             plane = np.concatenate([plane, np.zeros((bsz, pad), dt)], axis=1)
         planes.append(jnp.asarray(plane))
+    tel_cap = int(telemetry or 0)
     run = node_batch_runner(
         prep, bsz, cfg, use_pallas, interpret, donate, slab,
-        stop_progress, patience,
+        stop_progress, patience, telemetry=tel_cap,
     )
-    lb, ub, rounds, converged, infeasible, progress = run(*planes)
+    res = run(*planes)
+    lb, ub, rounds, converged, infeasible, progress = res[:6]
     out = (lb[:, : prep.n], ub[:, : prep.n], rounds, converged, infeasible)
-    return out + (progress,) if with_progress else out
+    if with_progress:
+        out = out + (progress,)
+    if tel_cap:
+        out = out + (res[6],)
+    return out
 
 
 # ---------------------------------------------------------------------------

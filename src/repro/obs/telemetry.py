@@ -1,0 +1,253 @@
+"""Device-resident telemetry for the zero-sync fixed-point loops.
+
+The paper's central property -- propagation rounds run entirely on the
+accelerator with no host synchronization -- is exactly what makes the
+engines unobservable from the host: every per-round signal lives inside a
+``jax.lax.while_loop`` dispatch.  The fix (Sofranac et al. arXiv:2106.07573;
+Talbot et al. arXiv:2207.12116 do the same for on-device search statistics)
+is to keep the statistics *on device too*: a fixed-capacity
+:class:`TelemetryPlane` rides the loop carry, :func:`record_round` appends
+one sample per round with pure array ops, and the host reads the plane back
+only where it already syncs -- at fixed-point exit, or at the service's
+retirement boundary.
+
+Recording never touches the bound dataflow: the progress measure it stores
+is already computed by every driver (it feeds the tier switch and the early
+stop), and the infeasibility probe is a reduction over the same bound
+planes the round just produced.  Telemetry-on therefore returns bitwise-
+identical bounds to telemetry-off by construction -- asserted across all
+four engines in ``tests/test_obs.py``.
+
+Plane layout (``capacity`` = ring size, per instance/slot when batched):
+
+========================  =======================================================
+field                     meaning
+========================  =======================================================
+``ring[..., capacity]``   per-round progress measure, ring buffer (NaN = unused)
+``ticks[...]``            rounds recorded so far (keeps counting past capacity)
+``stop_round[...]``       round the early stop tripped, ``-1`` if it never did
+``infeas_round[...]``     first round the bounds crossed, ``-1`` if never
+========================  =======================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+#: Default ring capacity when a driver is asked for telemetry without an
+#: explicit size.  Covers the default ``max_rounds=100`` tail behaviour
+#: while keeping the loop-carry footprint trivial (256 B per instance).
+DEFAULT_CAPACITY = 64
+
+
+class TelemetryPlane(NamedTuple):
+    """The device half of the telemetry: a pytree carried through while_loop.
+
+    Scalar engines carry ``ring (cap,), ticks (), stop_round (),
+    infeas_round ()``; batched engines and the service carry a leading
+    ``(B,)`` axis on every field.  Being a NamedTuple it is a registered
+    pytree, so it threads through ``jax.jit`` / ``lax.while_loop`` carries
+    and buffer donation like any other state entry.
+    """
+
+    ring: jnp.ndarray
+    ticks: jnp.ndarray
+    stop_round: jnp.ndarray
+    infeas_round: jnp.ndarray
+
+    @property
+    def capacity(self) -> int:
+        """Ring size (static -- safe to read under trace)."""
+        return int(self.ring.shape[-1])
+
+
+def device_plane(capacity: int, batch: int | None = None, dtype=jnp.float32):
+    """Fresh all-empty plane: NaN ring, zero ticks, ``-1`` event rounds.
+
+    ``batch=None`` builds the scalar layout, an int the batched one.
+    ``dtype`` is the ring's sample dtype -- drivers pass their bound dtype
+    so stored progress is exactly the device scalar they computed.
+    """
+    shape = () if batch is None else (int(batch),)
+    cap = int(capacity)
+    return TelemetryPlane(
+        ring=jnp.full(shape + (cap,), jnp.nan, dtype),
+        ticks=jnp.zeros(shape, jnp.int32),
+        stop_round=jnp.full(shape, -1, jnp.int32),
+        infeas_round=jnp.full(shape, -1, jnp.int32),
+    )
+
+
+def record_round(
+    plane: TelemetryPlane,
+    progress,
+    rounds,
+    infeasible,
+    stopped=None,
+    active=None,
+) -> TelemetryPlane:
+    """Append one round's sample to the plane -- pure, while_loop-body safe.
+
+    ``progress`` is the round's progress measure, ``rounds`` the 1-based
+    round counter AFTER this round, ``infeasible`` the crossed-bounds
+    predicate over the post-round planes, ``stopped`` the early-stop
+    predicate (optional).  Batched callers pass ``active`` -- the
+    per-instance mask of who actually executed this round -- so frozen
+    instances' rings stay untouched and their ticks do not advance.
+
+    At capacity the ring wraps (``ticks % capacity``): the plane keeps the
+    LAST ``capacity`` samples, the interesting end of a converging
+    trajectory.  ``stop_round`` / ``infeas_round`` latch the FIRST round
+    their event fired and never move again.
+    """
+    cap = plane.capacity
+    prog = jnp.asarray(progress).astype(plane.ring.dtype)
+    rounds = jnp.asarray(rounds, jnp.int32)
+    idx = plane.ticks % cap
+    if active is None:
+        ring = plane.ring.at[idx].set(prog)
+        ticks = plane.ticks + 1
+        infeas_round = jnp.where(
+            (plane.infeas_round < 0) & infeasible, rounds, plane.infeas_round
+        )
+        stop_round = plane.stop_round
+        if stopped is not None:
+            stop_round = jnp.where((stop_round < 0) & stopped, rounds, stop_round)
+    else:
+        rows = jnp.arange(plane.ring.shape[0])
+        ring = plane.ring.at[rows, idx].set(
+            jnp.where(active, prog, plane.ring[rows, idx])
+        )
+        ticks = plane.ticks + active.astype(jnp.int32)
+        infeas_round = jnp.where(
+            (plane.infeas_round < 0) & infeasible & active,
+            rounds,
+            plane.infeas_round,
+        )
+        stop_round = plane.stop_round
+        if stopped is not None:
+            stop_round = jnp.where(
+                (stop_round < 0) & stopped & active, rounds, stop_round
+            )
+    return TelemetryPlane(ring, ticks, stop_round, infeas_round)
+
+
+def reset_rows(plane: TelemetryPlane, rows) -> TelemetryPlane:
+    """Re-empty the given batch rows (the service's admission reset).
+
+    ``rows`` is an integer index array; the named rows return to the fresh
+    :func:`device_plane` state while every other row is untouched.  Pure --
+    usable inside the service's jitted admit.
+    """
+    cap = plane.ring.shape[-1]
+    k = rows.shape[0]
+    return TelemetryPlane(
+        ring=plane.ring.at[rows].set(jnp.full((k, cap), jnp.nan, plane.ring.dtype)),
+        ticks=plane.ticks.at[rows].set(0),
+        stop_round=plane.stop_round.at[rows].set(-1),
+        infeas_round=plane.infeas_round.at[rows].set(-1),
+    )
+
+
+@dataclasses.dataclass
+class TelemetrySnapshot:
+    """Host-side handle on a plane, attached to ``PropagationResult.telemetry``.
+
+    Deliberately lazy: fields hold whatever arrays the driver produced
+    (device arrays at fixed-point exit, numpy after a service readback) and
+    nothing forces a transfer until an accessor is called -- attaching a
+    snapshot adds zero host syncs.  ``index`` selects one row of a batched
+    plane so per-instance results of a batch share one underlying plane.
+
+    ``tier_switch_round`` is the round the two-tier scheme promoted fp32 to
+    the endgame dtype (``-1`` single-tier), stamped host-side at the same
+    decision point that already reads ``r32.rounds``; ``fp32`` then holds
+    the fp32 tier's own snapshot.
+    """
+
+    plane: TelemetryPlane
+    index: int | None = None
+    tier_switch_round: int = -1
+    fp32: "TelemetrySnapshot | None" = None
+
+    def _field(self, arr):
+        a = np.asarray(arr)
+        return a[self.index] if self.index is not None else a
+
+    @property
+    def capacity(self) -> int:
+        """Ring size of the underlying plane."""
+        return int(self.plane.ring.shape[-1])
+
+    @property
+    def rounds_recorded(self) -> int:
+        """Total rounds the loop recorded (may exceed :attr:`capacity`)."""
+        return int(self._field(self.plane.ticks))
+
+    @property
+    def stop_round(self) -> int:
+        """Round the early stop tripped, ``-1`` if it never did."""
+        return int(self._field(self.plane.stop_round))
+
+    @property
+    def infeasible_round(self) -> int:
+        """First round the bounds crossed, ``-1`` if never."""
+        return int(self._field(self.plane.infeas_round))
+
+    def progress_history(self) -> np.ndarray:
+        """Per-round progress, oldest-to-newest, unused tail trimmed.
+
+        Length ``min(rounds_recorded, capacity)``; past capacity the ring
+        wrapped, so this is the LAST ``capacity`` rounds in order.
+        """
+        ring = self._field(self.plane.ring)
+        ticks = self.rounds_recorded
+        cap = ring.shape[-1]
+        if ticks <= cap:
+            return ring[:ticks]
+        head = ticks % cap
+        return np.concatenate([ring[head:], ring[:head]])
+
+    def summary(self) -> dict:
+        """Plain-dict digest (the registry / bench row form)."""
+        hist = self.progress_history()
+        return {
+            "capacity": self.capacity,
+            "rounds_recorded": self.rounds_recorded,
+            "stop_round": self.stop_round,
+            "infeasible_round": self.infeasible_round,
+            "last_progress": float(hist[-1]) if hist.size else float("nan"),
+            "tier_switch_round": self.tier_switch_round,
+        }
+
+
+def host_snapshot(
+    history,
+    capacity: int,
+    stop_round: int = -1,
+    infeas_round: int = -1,
+) -> TelemetrySnapshot:
+    """Snapshot from host-recorded per-round progress (the host_loop drivers).
+
+    Reproduces the device plane's exact semantics -- same ring layout, same
+    wrap position -- from a Python list of per-round progress values, so a
+    host_loop run's telemetry reads identically to a device_loop run's.
+    """
+    arr = np.asarray(history, np.float64)
+    cap = int(capacity)
+    ring = np.full(cap, np.nan, np.float64)
+    k = int(arr.shape[0])
+    if k and cap:
+        keep = arr[-min(k, cap):]
+        idx = np.arange(k - keep.shape[0], k) % cap
+        ring[idx] = keep
+    plane = TelemetryPlane(
+        ring=ring,
+        ticks=np.int32(k),
+        stop_round=np.int32(stop_round),
+        infeas_round=np.int32(infeas_round),
+    )
+    return TelemetrySnapshot(plane=plane)

@@ -1,0 +1,343 @@
+"""Observability plane: device telemetry, span tracing, metrics registry.
+
+The load-bearing contract is non-interference -- telemetry-on must return
+BITWISE-identical bounds with identical compile counts across every engine
+(fused, partitioned, batched, nodes, service), because the plane rides the
+while_loop carry without touching the bound dataflow.  The rest pins ring
+truncation semantics, host/device telemetry agreement, the span schema,
+the registry snapshot envelope, and the shared timing utilities.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import INF, Problem, TierPolicy, csr_from_dense, propagate
+from repro.core.nodes import propagate_nodes
+from repro.core.propagator import propagate_batch
+from repro.core.service import BucketSpec, PropagationService
+from repro.data import make_knapsack, make_set_cover
+from repro.kernels import propagate_block_ell
+from repro.obs import (
+    SNAPSHOT_KEYS,
+    SPAN_KEYS,
+    MetricsRegistry,
+    NullTracer,
+    TelemetryPlane,
+    Tracer,
+    device_plane,
+    host_snapshot,
+    median_of,
+    median_ratio,
+    paired_trials,
+    record_round,
+    reset_rows,
+    run_metadata,
+    time_fenced,
+    time_phases,
+)
+
+CAP = 16
+
+
+def contraction_chain(n: int = 32, rho: float = 0.9) -> Problem:
+    """Cyclic contraction with a geometric epsilon tail: rounds >> CAP, the
+    ring-truncation workload (same construction as benchmarks.precision)."""
+    dense = np.zeros((n, n))
+    for j in range(n):
+        dense[j, j] = 1.0
+        dense[j, (j + 1) % n] = -rho
+    return Problem(
+        csr=csr_from_dense(dense),
+        lhs=np.full(n, -INF),
+        rhs=np.zeros(n),
+        lb=np.zeros(n),
+        ub=np.ones(n),
+        is_int=np.zeros(n, dtype=bool),
+    )
+
+
+def assert_same_bounds(a, b):
+    assert np.array_equal(np.asarray(a.lb), np.asarray(b.lb))
+    assert np.array_equal(np.asarray(a.ub), np.asarray(b.ub))
+    assert int(a.rounds) == int(b.rounds)
+
+
+# -- bitwise non-interference, engine by engine ---------------------------
+
+
+def test_fused_bitwise_and_snapshot():
+    p = make_set_cover(60, 30, seed=0)
+    off = propagate_block_ell(p, use_pallas=False)
+    on = propagate_block_ell(p, use_pallas=False, telemetry=CAP)
+    assert_same_bounds(off, on)
+    assert off.telemetry is None
+    t = on.telemetry
+    assert t.capacity == CAP
+    assert t.rounds_recorded == int(on.rounds)
+    hist = t.progress_history()
+    assert hist.shape == (min(CAP, t.rounds_recorded),)
+    assert not np.any(np.isnan(hist))
+    assert t.infeasible_round == -1 and t.stop_round == -1
+
+
+def test_partitioned_bitwise():
+    p = make_knapsack(300, 40, seed=1)
+    kw = dict(use_pallas=False, scatter="partitioned", slab=128)
+    off = propagate_block_ell(p, **kw)
+    on = propagate_block_ell(p, telemetry=CAP, **kw)
+    assert_same_bounds(off, on)
+    assert on.telemetry.rounds_recorded == int(on.rounds)
+
+
+def test_batched_bitwise_per_instance_snapshots():
+    probs = [make_set_cover(40, 20, seed=s) for s in range(3)] + [
+        make_knapsack(40, 10, seed=s) for s in range(3)
+    ]
+    off = propagate_batch(probs, use_pallas=False)
+    on = propagate_batch(probs, use_pallas=False, telemetry=CAP)
+    for a, b in zip(off, on):
+        assert_same_bounds(a, b)
+        # Instances of one bucket share a batched plane; each snapshot
+        # views its own row.
+        assert b.telemetry.rounds_recorded == int(b.rounds)
+        assert len(b.telemetry.progress_history()) == min(CAP, int(b.rounds))
+
+
+def test_batched_host_loop_bitwise():
+    probs = [make_set_cover(40, 20, seed=s) for s in range(3)]
+    off = propagate_batch(probs, use_pallas=False, driver="host_loop")
+    on = propagate_batch(
+        probs, use_pallas=False, driver="host_loop", telemetry=CAP
+    )
+    for a, b in zip(off, on):
+        assert_same_bounds(a, b)
+        assert b.telemetry.rounds_recorded == int(b.rounds)
+
+
+def test_nodes_bitwise():
+    p = make_set_cover(40, 20, seed=0)
+    lb = np.repeat(np.asarray(p.lb, np.float64)[None, :], 4, axis=0)
+    ub = np.repeat(np.asarray(p.ub, np.float64)[None, :], 4, axis=0)
+    off = propagate_nodes(p, lb, ub, use_pallas=False)
+    on = propagate_nodes(p, lb, ub, use_pallas=False, telemetry=CAP)
+    assert np.array_equal(np.asarray(off.lb), np.asarray(on.lb))
+    assert np.array_equal(np.asarray(off.ub), np.asarray(on.ub))
+    assert off.node_telemetry(0) is None
+    for i in range(4):
+        snap = on.node_telemetry(i)
+        assert snap.rounds_recorded == int(np.asarray(on.rounds)[i])
+
+
+def test_two_tier_snapshot_chain():
+    p = make_knapsack(80, 20, seed=2)
+    pol = TierPolicy()
+    off = propagate(p, policy=pol)
+    on = propagate(p, policy=pol, telemetry=CAP)
+    assert_same_bounds(off, on)
+    t = on.telemetry
+    if int(on.tier_rounds) > 0:  # promotion happened: fp32 tier recorded
+        assert t.tier_switch_round == int(on.tier_rounds)
+        assert t.fp32 is not None
+        assert t.fp32.rounds_recorded == int(on.tier_rounds)
+
+
+# -- ring truncation + host/device agreement ------------------------------
+
+
+def test_ring_truncation_keeps_tail():
+    p = contraction_chain()
+    r = propagate(p, telemetry=8)
+    t = r.telemetry
+    assert t.rounds_recorded == int(r.rounds) > 8
+    hist = t.progress_history()
+    assert hist.shape == (8,)
+    # The tail of a contraction is monotone decreasing progress.
+    assert np.all(np.diff(hist) <= 1e-12)
+    # host_loop reproduces the device ring layout exactly.
+    rh = propagate(p, driver="host_loop", telemetry=8)
+    np.testing.assert_allclose(
+        rh.telemetry.progress_history(), hist, rtol=1e-12
+    )
+    assert rh.telemetry.rounds_recorded == t.rounds_recorded
+
+
+def test_infeasible_round_latches_first():
+    plane = device_plane(4)
+    plane = record_round(plane, 0.5, 1, jnp.asarray(False))
+    plane = record_round(plane, 0.4, 2, jnp.asarray(True))
+    plane = record_round(plane, 0.3, 3, jnp.asarray(True))
+    assert int(plane.infeas_round) == 2  # first firing round, never moves
+    assert int(plane.ticks) == 3
+
+
+def test_batched_record_respects_active_mask():
+    plane = device_plane(4, batch=2)
+    active = jnp.asarray([True, False])
+    plane = record_round(
+        plane, jnp.asarray([0.5, 0.7]), jnp.asarray([1, 1]),
+        jnp.asarray([False, False]), active=active,
+    )
+    assert plane.ticks.tolist() == [1, 0]
+    assert np.isnan(np.asarray(plane.ring)[1]).all()
+    plane = reset_rows(plane, jnp.asarray([0]))
+    assert plane.ticks.tolist() == [0, 0]
+    assert np.isnan(np.asarray(plane.ring)).all()
+
+
+def test_host_snapshot_matches_device_wrap():
+    history = [2.0 ** -i for i in range(11)]
+    snap = host_snapshot(history, capacity=4)
+    assert snap.rounds_recorded == 11
+    np.testing.assert_allclose(snap.progress_history(), history[-4:])
+
+
+# -- service: bitwise, snapshots, zero extra compiles ---------------------
+
+
+def test_service_bitwise_compiles_and_snapshots():
+    probs = [make_set_cover(40, 20, seed=s) for s in range(4)] + [
+        make_knapsack(40, 10, seed=s) for s in range(2)
+    ]
+    specs = BucketSpec.for_problems(probs, slots=2)
+    svc_off = PropagationService(specs, use_pallas=False)
+    svc_on = PropagationService(specs, use_pallas=False, telemetry=CAP)
+    res_off = svc_off.serve(probs)
+    res_on = svc_on.serve(probs)
+    for a, b in zip(res_off, res_on):
+        assert_same_bounds(a, b)
+        assert a.telemetry is None
+        # Retired snapshots are host copies: they survive slot recycling.
+        assert b.telemetry.rounds_recorded == int(b.rounds)
+        assert len(b.telemetry.progress_history()) == min(CAP, int(b.rounds))
+    # Telemetry adds NO compiled traces: same engine structure, and a
+    # second serve (retire + backfill churn) compiles nothing new.
+    counts = svc_on.compile_counts()
+    assert counts == svc_off.compile_counts()
+    svc_on.serve(probs)
+    assert svc_on.compile_counts() == counts
+
+
+def test_service_latency_split_and_metrics():
+    probs = [make_set_cover(40, 20, seed=s) for s in range(3)]
+    specs = BucketSpec.for_problems(probs, slots=2)
+    svc = PropagationService(specs, use_pallas=False, telemetry=CAP)
+    tickets = [svc.submit(p) for p in probs]
+    svc.drain()
+    for tk in tickets:
+        assert tk.queue_latency() >= 0.0
+        assert tk.service_latency() >= 0.0
+        assert tk.latency() == pytest.approx(
+            tk.queue_latency() + tk.service_latency()
+        )
+    st = svc.stats()
+    snap = st["metrics"]
+    assert set(snap) == SNAPSHOT_KEYS
+    assert snap["errors"] == {}
+    assert {"compile_counts", "engine_cache", "kernel_caches", "service"} <= set(
+        snap["sources"]
+    )
+    assert snap["sources"]["service"]["retired"] == len(probs)
+
+
+def test_service_tracer_spans():
+    probs = [make_set_cover(40, 20, seed=s) for s in range(3)]
+    specs = BucketSpec.for_problems(probs, slots=2)
+    tr = Tracer()
+    svc = PropagationService(
+        specs, use_pallas=False, telemetry=CAP, tracer=tr
+    )
+    svc.serve(probs)
+    names = {s.name for s in tr.spans()}
+    assert {"pump", "admit", "step", "readback", "ticket"} <= names
+    tickets = [s for s in tr.spans() if s.name == "ticket"]
+    assert len(tickets) == len(probs)
+    for s in tickets:
+        assert s.attrs["queue_ms"] >= 0.0 and s.attrs["service_ms"] >= 0.0
+    # admit/step/readback nest under a pump span.
+    pump_ids = {s.span_id for s in tr.spans() if s.name == "pump"}
+    for s in tr.spans():
+        if s.name in ("admit", "step", "readback"):
+            assert s.parent_id in pump_ids
+
+
+# -- tracer / registry / timing: pure host, dtype-agnostic ----------------
+
+
+@pytest.mark.f32native
+def test_tracer_schema_nesting_export(tmp_path):
+    tr = Tracer()
+    with tr.span("outer", kind="test"):
+        with tr.span("inner"):
+            pass
+    tr.record("external", 1.0, 2.0, answer=42)
+    spans = {s.name: s for s in tr.spans()}
+    assert spans["inner"].parent_id == spans["outer"].span_id
+    assert spans["external"].attrs == {"answer": 42}
+    path = tmp_path / "trace.jsonl"
+    text = tr.export(path)
+    lines = [json.loads(ln) for ln in text.strip().splitlines()]
+    assert len(lines) == 3
+    for d in lines:
+        assert set(d) == SPAN_KEYS
+        assert d["dur_ms"] >= 0.0
+    assert path.read_text() == text
+    tr.clear()
+    assert tr.spans() == []
+
+
+@pytest.mark.f32native
+def test_null_tracer_is_noop():
+    tr = NullTracer()
+    with tr.span("anything"):
+        tr.record("x", 0.0, 1.0)
+    assert tr.spans() == []
+    assert tr.export() == ""
+
+
+@pytest.mark.f32native
+def test_registry_schema_and_error_isolation():
+    reg = MetricsRegistry()
+    reg.register("good", lambda: {"v": 1})
+    reg.register("bad", lambda: 1 / 0)
+    with pytest.raises(ValueError):
+        reg.register("good", lambda: 2)
+    snap = reg.snapshot()
+    assert set(snap) == SNAPSHOT_KEYS
+    assert snap["sources"] == {"good": {"v": 1}}
+    assert "bad" in snap["errors"] and "ZeroDivisionError" in snap["errors"]["bad"]
+    reg.register("good", lambda: 2, replace=True)
+    assert reg.snapshot()["sources"]["good"] == 2
+    reg.unregister("bad")
+    assert reg.source_names() == ("good",)
+
+
+@pytest.mark.f32native
+def test_run_metadata_shape():
+    meta = run_metadata()
+    assert set(meta) == {
+        "git_commit", "timestamp", "jax_version", "x64", "backend",
+    }
+    assert meta["git_commit"] != ""
+    assert isinstance(meta["x64"], bool)
+
+
+@pytest.mark.f32native
+def test_timing_utilities():
+    xs = jnp.arange(1024.0)
+    t = time_fenced(lambda: xs * 2.0, repeats=2)
+    assert 0.0 < t < 10.0
+    trials = paired_trials(
+        [lambda: xs + 1.0, lambda: xs + 2.0], trials=3, repeats=2
+    )
+    assert len(trials) == 3 and all(len(row) == 2 for row in trials)
+    assert median_ratio(trials) > 0.0
+    assert median_of(trials, 0) > 0.0
+    tr = Tracer()
+    phases = time_phases(
+        {"a": lambda: xs * 3.0, "b": lambda: xs * 4.0},
+        repeats=1, tracer=tr,
+    )
+    assert set(phases) == {"a", "b"} and all(v > 0.0 for v in phases.values())
+    assert {s.name for s in tr.spans()} == {"phase:a", "phase:b"}

@@ -1,5 +1,5 @@
-"""Docs gate: every public symbol of ``repro.core`` / ``repro.kernels``
-must carry a real docstring.
+"""Docs gate: every public symbol of ``repro.core`` / ``repro.kernels`` /
+``repro.obs`` must carry a real docstring.
 
 A "real" docstring excludes the auto-generated ``Name(field, ...)`` text
 NamedTuples get for free.  Module-level constants (ints, floats, tuples)
@@ -41,15 +41,22 @@ def missing_docstrings(mod) -> "list[str]":
 def main() -> int:
     import repro.core
     import repro.kernels
+    import repro.obs
 
-    bad = missing_docstrings(repro.core) + missing_docstrings(repro.kernels)
+    bad = (
+        missing_docstrings(repro.core)
+        + missing_docstrings(repro.kernels)
+        + missing_docstrings(repro.obs)
+    )
     if bad:
         print("Missing docstrings on exported symbols:")
         for line in bad:
             print(f"  {line}")
         return 1
-    n = len(getattr(repro.core, "__all__", [])) + len(
-        [x for x in vars(repro.kernels) if not x.startswith("_")]
+    n = (
+        len(getattr(repro.core, "__all__", []))
+        + len([x for x in vars(repro.kernels) if not x.startswith("_")])
+        + len(getattr(repro.obs, "__all__", []))
     )
     print(f"docstring check OK ({n} exported symbols inspected)")
     return 0
