@@ -16,6 +16,12 @@ outside the timer, a closed submit->pump->retire loop over resident
 super-tiles, reporting instances/sec, admit->retire latency percentiles,
 mean slot occupancy, and a zero-recompile assertion over the serve loop.
 
+A ``solver`` row measures the device-resident branch-and-bound driver
+(``repro.core.solver.solve``) against the level-by-level Python driver of
+``examples/bnb_dive.py`` on deep SOS1-style dives, reporting nodes/sec for
+both drivers, the speedup (asserted >= 3x in the full run), and host syncs
+per node on each side.
+
 A ``partitioned`` engine row records the column-slab engine on
 VMEM-exceeding banded large-n instances (``n_pad > SCATTER_MAX_NPAD``),
 with the segment engine measured on the same instances for comparison.
@@ -43,11 +49,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bounds as bnd
-from repro.core.nodes import branch_children, propagate_nodes
+from repro.core.nodes import branch_children, pick_most_fractional, propagate_nodes
 from repro.core.propagator import fresh_instance_runner, owned_copy, propagate
 from repro.core.service import BucketSpec, PropagationService
-from repro.core.sparse import batch_stats
-from repro.core.types import DEFAULT_CONFIG
+from repro.core.solver import solve
+from repro.core.sparse import Problem, batch_stats, csr_from_dense
+from repro.core.types import DEFAULT_CONFIG, INF
 from repro.data.instances import instances_for_set, make_banded, make_pseudo_boolean
 from repro.kernels import (
     SCATTER_MAX_NPAD,
@@ -259,6 +266,185 @@ def node_throughput():
         "repack_nodes_per_sec": NODE_BATCH / t_rep,
         "shared_nodes_per_sec": NODE_BATCH / t_sha,
         "shared_matrix_speedup": speedup,
+    }
+
+
+# Solver-row population: SOS1-style instances -- one ``sum x <= 1`` packing
+# row over all n binaries plus a few redundant two-variable rows.  Branching
+# a variable UP (to 1) propagates every other variable to 0 in one round, so
+# the search is a width-2 dive of depth ~n: the host-overhead-dominated
+# regime a device-resident search loop exists for.  Both drivers use the
+# same rule, branch point and pruning test, so they visit the IDENTICAL
+# (2n-3)-node tree and nodes/sec compares equal work -- on wide trees the
+# two drivers saturate at parity on CPU (the pool sweep costs what the
+# frontier stack costs), so this row isolates the loop-hosting cost the
+# solver removes, not propagation arithmetic.
+SOLVER_NS = (48, 64)
+SOLVER_EXTRA_ROWS = 4
+# Tuned on this population: the dive's frontier never exceeds 2 open nodes,
+# so a tiny pool keeps the per-level sweep cheap, and sync_every=16
+# amortizes the host readback over 16 levels per dispatch.
+SOLVER_KW = dict(node_cap=8, max_levels=256, sync_every=16, use_pallas=False)
+
+# Every key the ``solver`` row must carry (the smoke job and
+# docs/BENCHMARKS.md read this set; population facts are NESTED under
+# ``population`` like the partitioned/service rows).
+SOLVER_ROW_KEYS = frozenset({
+    "population",
+    "device_nodes_per_sec",
+    "python_nodes_per_sec",
+    "speedup_vs_python_driver",
+    "target_met",
+    "host_syncs",
+    "python_host_syncs",
+    "host_syncs_per_node",
+    "python_host_syncs_per_node",
+    "nodes",
+    "levels",
+    "objective_match",
+    "statuses",
+})
+
+
+def _sos1_problem(n: int, extra_rows: int = SOLVER_EXTRA_ROWS) -> Problem:
+    """One ``sum x <= 1`` row over n binaries plus ``extra_rows`` redundant
+    pair rows (``x_i + x_j <= 1``) so the matrix is not a single row."""
+    dense = np.zeros((1 + extra_rows, n))
+    dense[0] = 1.0
+    for k in range(extra_rows):
+        dense[1 + k, k % n] = 1.0
+        dense[1 + k, (k * 7 + 3) % n] = 1.0
+    m = 1 + extra_rows
+    return Problem(
+        csr=csr_from_dense(dense),
+        lhs=np.full(m, -INF),
+        rhs=np.ones(m),
+        lb=np.zeros(n, np.float64),
+        ub=np.ones(n, np.float64),
+        is_int=np.ones(n, bool),
+    )
+
+
+def _sos1_objective(n: int) -> np.ndarray:
+    """Integral mixed-sign costs (every third negative) -- same shape the
+    differential tests use, so pruning does real work on the dive."""
+    sign = np.where(np.arange(n) % 3 == 0, -1.0, 1.0)
+    return np.arange(1, n + 1, dtype=np.float64) * sign
+
+
+def _python_bnb(p, c, node_cap: int, max_levels: int):
+    """The level-by-level Python driver of ``examples/bnb_dive.py``: one
+    ``propagate_nodes`` dispatch per frontier level, ALL search bookkeeping
+    (objective, branching, incumbent, pruning) in host numpy, one readback
+    per level.  Returns ``(incumbent, created, levels, syncs)``."""
+    frontier = [(np.asarray(p.lb, np.float64), np.asarray(p.ub, np.float64))]
+    inc = INF
+    created, levels, syncs = 1, 0, 0
+    while frontier and levels < max_levels:
+        levels += 1
+        lbs = np.stack([nd[0] for nd in frontier])
+        ubs = np.stack([nd[1] for nd in frontier])
+        out = propagate_nodes(
+            p, lbs, ubs, use_pallas=False, tile_rows=8, tile_width=8
+        )
+        lbs, ubs = np.asarray(out.lb), np.asarray(out.ub)
+        infeas = np.asarray(out.infeasible)
+        syncs += 1  # readback before ANY host-side search decision
+        nxt = []
+        for i in range(lbs.shape[0]):
+            if infeas[i]:
+                continue
+            lb, ub = lbs[i], ubs[i]
+            obj = float(np.sum(np.where(c > 0, c * lb, c * ub)))
+            if obj >= inc:
+                continue
+            var = pick_most_fractional(lb, ub, p.is_int)
+            if var is None:
+                inc = obj
+                continue
+            bv = np.clip(
+                np.floor(0.5 * (lb[var] + ub[var])), lb[var], ub[var] - 1.0
+            )
+            down, up = branch_children(lb, ub, var, float(bv))
+            nxt += [down, up]
+            created += 2
+        frontier = nxt[:node_cap]
+    return inc, created, levels, syncs
+
+
+def solver_row(
+    ns=SOLVER_NS,
+    kw: dict | None = None,
+    trials: int = 5,
+    repeats: int = 3,
+    assert_target: bool = True,
+):
+    """Device-resident ``solve()`` vs the hosted level-by-level driver.
+
+    Per instance the row first proves the comparison is apples-to-apples --
+    same optimum AND same node count (identical trees) -- then times both
+    drivers with :func:`paired_trials` (warm-up outside the timer, paired
+    median-of-trials; docs/BENCHMARKS.md).  Reported nodes/sec divides each
+    search's created-node count by its median wall time; ``target_met``
+    records the tentpole criterion -- geomean speedup >= 3x on the CPU
+    backend -- and the full run asserts it (``assert_target=False`` in the
+    single-repeat smoke, where the schema is the contract)."""
+    kw = dict(SOLVER_KW, **(kw or {}))
+    dev_rate, py_rate, ratios = [], [], []
+    nodes_l, levels_l, syncs_l, py_syncs_l, statuses = [], [], [], [], []
+    objective_match = True
+    for n in ns:
+        p = _sos1_problem(n)
+        c = _sos1_objective(n)
+        res = solve(p, c, **kw)  # warm-up: prepare tiles + compile runner
+        py_inc, py_created, py_levels, py_syncs = _python_bnb(
+            p, c, kw["node_cap"], kw["max_levels"]
+        )
+        objective_match &= py_inc == res.objective
+        assert py_inc == res.objective, (n, py_inc, res.objective)
+        assert py_created == res.nodes_created, (
+            n, py_created, res.nodes_created,
+        )
+        trials_ = paired_trials(
+            [
+                lambda: _python_bnb(p, c, kw["node_cap"], kw["max_levels"]),
+                lambda: solve(p, c, **kw),
+            ],
+            trials=trials,
+            repeats=repeats,
+        )
+        t_py, t_dev = median_of(trials_, 0), median_of(trials_, 1)
+        ratios.append(median_ratio(trials_, num=0, den=1))
+        dev_rate.append(res.nodes_created / t_dev)
+        py_rate.append(py_created / t_py)
+        nodes_l.append(int(res.nodes_created))
+        levels_l.append(int(res.levels))
+        syncs_l.append(int(res.host_syncs))
+        py_syncs_l.append(int(py_syncs))
+        statuses.append(res.status)
+    speedup = geomean(ratios)
+    if assert_target:
+        assert speedup >= 3.0, (speedup, ratios)
+    return {
+        "population": {
+            "family": "sos1",
+            "ns": list(ns),
+            "extra_rows": SOLVER_EXTRA_ROWS,
+            "node_cap": kw["node_cap"],
+            "sync_every": kw["sync_every"],
+        },
+        "device_nodes_per_sec": geomean(dev_rate),
+        "python_nodes_per_sec": geomean(py_rate),
+        "speedup_vs_python_driver": speedup,
+        "target_met": bool(speedup >= 3.0),
+        "host_syncs": syncs_l,
+        "python_host_syncs": py_syncs_l,
+        "host_syncs_per_node": float(sum(syncs_l)) / sum(nodes_l),
+        "python_host_syncs_per_node": float(sum(py_syncs_l)) / sum(nodes_l),
+        "nodes": nodes_l,
+        "levels": levels_l,
+        "objective_match": bool(objective_match),
+        "statuses": statuses,
     }
 
 
@@ -926,6 +1112,14 @@ def smoke(out_path: str = OUT_PATH):
     assert svc["latency_ms_p50"] <= svc["latency_ms_p99"]
     assert 0.0 < svc["mean_slot_occupancy"] <= 1.0
 
+    sol = solver_row(ns=(24,), trials=1, repeats=1, assert_target=False)
+    missing = SOLVER_ROW_KEYS - set(sol)
+    extra = set(sol) - SOLVER_ROW_KEYS
+    assert not missing and not extra, (sorted(missing), sorted(extra))
+    assert sol["objective_match"]
+    assert all(s == "optimal" for s in sol["statuses"])
+    assert sol["host_syncs_per_node"] <= sol["python_host_syncs_per_node"]
+
     sweep = service_sweep_row(
         grid=(
             dict(slots=2, size_classes=1, rounds_per_step=8, tile_width=None),
@@ -948,11 +1142,13 @@ def smoke(out_path: str = OUT_PATH):
     merged = _merge_report(
         {"engines": {
             "partitioned": row, "service": svc, "service_sweep": sweep,
+            "solver": sol,
         }}, out_path
     )
     assert merged["engines"]["partitioned"] == row
     assert merged["engines"]["service"] == svc
     assert merged["engines"]["service_sweep"] == sweep
+    assert merged["engines"]["solver"] == sol
     if os.path.exists(out_path):
         with open(out_path) as f:
             old = json.load(f)
@@ -973,7 +1169,8 @@ def smoke(out_path: str = OUT_PATH):
         ("bench_prop_smoke", row["geomean_round_us"],
          f"schema_ok tuned_slab_npad={row['tuned_slab_npad']} "
          f"phases={','.join(PHASE_NAMES)} "
-         f"service_ips={svc['instances_per_sec']:.1f}")
+         f"service_ips={svc['instances_per_sec']:.1f} "
+         f"solver_nps={sol['device_nodes_per_sec']:.0f}")
     ]
 
 
@@ -1022,6 +1219,7 @@ def run(out_path: str = OUT_PATH):
     large = partitioned_large_row()
     svc = service_row()
     sweep = service_sweep_row()
+    solver = solver_row()
     report = {
         "set": SET,
         "instances": len(insts),
@@ -1050,6 +1248,7 @@ def run(out_path: str = OUT_PATH):
         "speedup_vs_repack_dispatch": nodes["shared_matrix_speedup"],
     }
     report["engines"]["partitioned"] = large
+    report["engines"]["solver"] = solver
     report["bytes_reduction_fused_vs_legacy"] = geomean(
         [l / f for l, f in zip(acc["legacy"]["bytes"], acc["fused"]["bytes"])]
     )
@@ -1118,6 +1317,17 @@ def run(out_path: str = OUT_PATH):
          f"segment_bytes={large['segment_geomean_bytes_per_round']:.0f} "
          f"bytes_vs_segment={large['bytes_vs_segment']:.2f}x "
          f"phases[{phases}]")
+    )
+    rows.append(
+        ("bench_prop_solver",
+         1e6 / solver["device_nodes_per_sec"],
+         f"device_nodes_per_sec={solver['device_nodes_per_sec']:.0f} "
+         f"python_nodes_per_sec={solver['python_nodes_per_sec']:.0f} "
+         f"speedup_vs_python_driver="
+         f"{solver['speedup_vs_python_driver']:.2f}x "
+         f"host_syncs_per_node={solver['host_syncs_per_node']:.3f} "
+         f"python_syncs_per_node={solver['python_host_syncs_per_node']:.3f} "
+         f"target_met={solver['target_met']}")
     )
     rows.append(
         ("bench_prop_json", 0.0,

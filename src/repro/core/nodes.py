@@ -134,6 +134,25 @@ def branch_children(lb, ub, var: int, value: float) -> "tuple[tuple, tuple]":
     return (down_lb, down_ub), (up_lb, up_ub)
 
 
+def pick_most_fractional(lb, ub, is_int) -> "int | None":
+    """Deterministic host-side branching rule: the unfixed integer variable
+    whose domain midpoint is most fractional, ties to the lowest index --
+    the host-numpy twin of the solver's on-device
+    ``kernels.ref.most_fractional_ref``.  Replaces the RNG-per-level pick
+    the diving example used, so level-by-level Python drivers (the bench
+    ``solver`` row's baseline) are reproducible run-to-run.  Returns the
+    column index, or ``None`` when every integer variable is fixed."""
+    lb = np.asarray(lb, np.float64)
+    ub = np.asarray(ub, np.float64)
+    cand = np.asarray(is_int, bool) & (ub - lb > 0.5)
+    if not cand.any():
+        return None
+    mid = 0.5 * (lb + ub)
+    frac = mid - np.floor(mid)
+    score = np.where(cand, 0.5 - np.abs(frac - 0.5), -1.0)
+    return int(np.argmax(score))
+
+
 def propagate_nodes(
     p: Problem,
     lb_nodes,

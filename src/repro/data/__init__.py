@@ -11,6 +11,7 @@ from .instances import (
     make_cascade_chain,
     make_mixed,
     make_pseudo_boolean,
+    make_random_mip,
     SIZE_SETS,
     instances_for_set,
 )

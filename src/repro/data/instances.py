@@ -262,6 +262,66 @@ def make_pseudo_boolean(
     )
 
 
+def make_random_mip(
+    n: int = 10,
+    m: int = 14,
+    seed: int = 0,
+    ub_max: int = 3,
+    tight: float = 0.35,
+) -> Problem:
+    """Small bounded pure-integer instances for exact solver cross-checks.
+
+    Every variable is integer on ``[0, u_j]`` with ``u_j <= ub_max`` and
+    all data is INTEGRAL -- coefficients in ``±[1, 4]``, sides rounded to
+    integers -- so every activity and objective sum is an exact f64
+    integer and the brute-force oracle comparison
+    (``core.seq_ref.brute_force_solve`` vs ``core.solver.solve``) can be
+    bitwise.  Rows mix ``<=``, ``>=`` and ranged shapes with integral
+    sides drawn strictly inside each row's activity range (``tight``
+    controls how deep they cut), so rows actually propagate; some seeds'
+    ranged rows conflict and the instance is infeasible -- kept on
+    purpose, the differential suite asserts the verdict matches the
+    oracle either way.  Enumeration size is ``prod(u_j + 1)``: keep
+    ``n * log2(ub_max + 1)`` near 20 for oracle-speed instances."""
+    rng = np.random.default_rng(seed)
+    lb = np.zeros(n)
+    ub = rng.integers(1, ub_max + 1, size=n).astype(np.float64)
+    rows, cols, vals = [], [], []
+    lhs = np.empty(m)
+    rhs = np.empty(m)
+    for i in range(m):
+        k = int(rng.integers(2, max(3, n // 2 + 1)))
+        js = rng.choice(n, size=k, replace=False)
+        a = rng.integers(1, 5, size=k).astype(np.float64)
+        a *= rng.choice([-1.0, 1.0], size=k)
+        amin = float(np.where(a > 0, a * lb[js], a * ub[js]).sum())
+        amax = float(np.where(a > 0, a * ub[js], a * lb[js]).sum())
+        kind = rng.random()
+        q = rng.uniform(tight, 0.9)
+        if kind < 0.45:
+            lhs[i], rhs[i] = -INF, float(np.floor(amin + q * (amax - amin)))
+        elif kind < 0.9:
+            lhs[i], rhs[i] = float(np.ceil(amax - q * (amax - amin))), INF
+        else:
+            lo = float(np.ceil(amin + 0.25 * (amax - amin)))
+            hi = float(np.floor(amax - 0.25 * (amax - amin)))
+            lhs[i], rhs[i] = min(lo, hi), max(lo, hi)
+        rows += [i] * k
+        cols += list(js)
+        vals += list(a)
+    csr = csr_from_coo(
+        np.array(rows), np.array(cols), np.array(vals, dtype=np.float64), m, n
+    )
+    return Problem(
+        csr=csr,
+        lhs=lhs,
+        rhs=rhs,
+        lb=lb,
+        ub=ub,
+        is_int=np.ones(n, dtype=bool),
+    )
+
+
 def make_banded(
     n: int = 100_000,
     m: int = 2_000,
@@ -363,6 +423,7 @@ FAMILIES: Dict[str, Callable[..., Problem]] = {
     "mixed": make_mixed,
     "pseudo_boolean": make_pseudo_boolean,
     "banded": make_banded,
+    "random_mip": make_random_mip,
 }
 
 
@@ -382,6 +443,10 @@ def make_instance(spec: InstanceSpec) -> Problem:
         return make_mixed(m=spec.m, n=spec.n, seed=spec.seed)
     if spec.family == "pseudo_boolean":
         return make_pseudo_boolean(n=spec.n, m=spec.m, seed=spec.seed)
+    if spec.family == "random_mip":
+        # Solver-oracle family: n is clamped so the brute-force enumeration
+        # (prod of domain widths) stays tractable whatever the spec asks.
+        return make_random_mip(n=min(spec.n, 12), m=spec.m, seed=spec.seed)
     if spec.family == "banded":
         return make_banded(
             n=spec.n, m=spec.m, band=max(128, spec.n // 8), seed=spec.seed

@@ -1706,3 +1706,73 @@ def apply_updates_batch_tiles(
         lb, ub, best_l, best_u, active.astype(jnp.int32).reshape(bsz, 1)
     )
     return new_lb, new_ub, changed.reshape(bsz) != 0
+
+
+def _node_objective_kernel(
+    lb_ref, ub_ref, c_ref, ii_ref, valid_ref, obj_ref, fix_ref, cr_ref,
+    *, feas_eps, inf
+):
+    lb, ub = lb_ref[...], ub_ref[...]
+    c = c_ref[...]
+    ii = ii_ref[...] != 0
+    valid = valid_ref[...] != 0
+    contrib = jnp.where(c > 0, c * lb, c * ub)
+    contrib = jnp.where(valid & (c != 0), contrib, 0.0)
+    unbounded = valid & (((c > 0) & (lb <= -inf)) | ((c < 0) & (ub >= inf)))
+    obj = jnp.where(jnp.any(unbounded), -inf, jnp.sum(contrib))
+    fixed = jnp.all(~(valid & ii) | (ub - lb <= 0.5))
+    crossed = jnp.any((lb > ub + feas_eps) & valid)
+    obj_ref[...] = obj.reshape(1, 1)
+    fix_ref[...] = fixed.astype(jnp.int32).reshape(1, 1)
+    cr_ref[...] = crossed.astype(jnp.int32).reshape(1, 1)
+
+
+def node_objective_tiles(
+    lb,
+    ub,
+    c,
+    is_int,
+    valid,
+    feas_eps: float,
+    inf: float = INF,
+    interpret: bool | None = None,
+):
+    """Per-node objective bound + leaf/prune predicates, one kernel pass.
+
+    The solver's post-propagation scan: grid ``(B,)``, each step reads one
+    node's ``(1, n_pad)`` bound rows plus the shared objective /
+    integrality / validity vectors (their blocks pinned to row 0, so the
+    ``(n_pad,)`` constants stay VMEM-resident across the sweep) and writes
+    three ``(1, 1)`` scalars -- the domain-relaxation objective bound, the
+    all-integers-fixed flag and the crossed-domain flag.  Exact semantics
+    (sentinel handling, tie behaviour) are defined by
+    ``ref.node_objective_ref``; returns ``(obj, fixed, crossed)`` as
+    ``(B,)`` arrays with the flags as bools."""
+    if interpret is None:
+        interpret = _on_cpu()
+    bsz, n_pad = lb.shape
+    dtype = lb.dtype
+    vec = pl.BlockSpec((1, n_pad), lambda b: (b, 0))
+    shared = pl.BlockSpec((1, n_pad), lambda b: (0, 0))
+    flag = pl.BlockSpec((1, 1), lambda b: (b, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, 1), dtype),
+        jax.ShapeDtypeStruct((bsz, 1), jnp.int32),
+        jax.ShapeDtypeStruct((bsz, 1), jnp.int32),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_node_objective_kernel, feas_eps=feas_eps, inf=inf),
+        grid=(bsz,),
+        in_specs=[vec, vec, shared, shared, shared],
+        out_specs=[flag, flag, flag],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    obj, fixed, crossed = fn(
+        lb,
+        ub,
+        jnp.asarray(c, dtype).reshape(1, n_pad),
+        _int_operand(is_int).reshape(1, n_pad),
+        _int_operand(valid).reshape(1, n_pad),
+    )
+    return obj.reshape(bsz), fixed.reshape(bsz) != 0, crossed.reshape(bsz) != 0

@@ -354,6 +354,103 @@ def node_partitioned_round_ref(part, lb_p, ub_p, int_eps: float, inf: float = IN
     return bl[:, 0], bu[:, 0]
 
 
+# ---------------------------------------------------------------------------
+# Solver oracles: node objective bound, branch selection, incumbent update
+# ---------------------------------------------------------------------------
+
+
+def node_objective_ref(lb, ub, c, is_int, valid, feas_eps: float, inf: float = INF):
+    """Per-node objective lower bound + leaf/prune predicates (solver oracle).
+
+    Args:
+      lb, ub: (B, n_pad) propagated per-node bound planes (sentinel-infinite).
+      c:      (n_pad,) minimization objective (0 on padded columns).
+      is_int: (n_pad,) bool integrality marks.
+      valid:  (n_pad,) bool, True on real (non-padded) columns.
+
+    Returns ``(obj, fixed, crossed)``, each ``(B,)``:
+
+      * ``obj`` -- the domain-relaxation bound ``sum_j min(c_j lb_j, c_j
+        ub_j)`` (i.e. ``c_j lb_j`` for ``c_j > 0``, ``c_j ub_j`` for
+        ``c_j < 0``), a valid lower bound on every feasible point in the
+        node's box; ``-inf`` sentinel if any contributing bound is
+        infinite.  For a node whose variables are all fixed this IS the
+        point's objective, and over integral data the f64 sum is exact --
+        the bitwise anchor of the differential tests.
+      * ``fixed`` -- every valid integer column has ``ub - lb <= 0.5``
+        (an integral domain of width 0: the node is a candidate leaf).
+      * ``crossed`` -- some valid column's domain emptied
+        (``lb > ub + feas_eps``): prune the node as infeasible.
+    """
+    v = valid[None, :]
+    cb = c[None, :]
+    contrib = jnp.where(cb > 0, cb * lb, cb * ub)
+    contrib = jnp.where(v & (cb != 0), contrib, 0.0)
+    unbounded = v & (((cb > 0) & (lb <= -inf)) | ((cb < 0) & (ub >= inf)))
+    obj = jnp.where(
+        jnp.any(unbounded, axis=-1), -inf, jnp.sum(contrib, axis=-1)
+    )
+    fixed = jnp.all(~(v & is_int[None, :]) | (ub - lb <= 0.5), axis=-1)
+    crossed = jnp.any((lb > ub + feas_eps) & v, axis=-1)
+    return obj, fixed, crossed
+
+
+def most_fractional_ref(lb, ub, is_int, valid):
+    """Most-fractional branching selection over ``(B, n_pad)`` bound planes.
+
+    Candidate columns are valid unfixed integers (``ub - lb > 0.5``); the
+    score is the domain midpoint's distance-to-integrality
+    ``0.5 - |frac(mid) - 0.5|`` and ties resolve to the LOWEST column index
+    (``argmax`` first-hit), so selection is deterministic.  Returns
+    ``(var, has)``: per-node selected column and whether any candidate
+    existed (``var`` is 0 and meaningless when ``has`` is False)."""
+    cand = valid[None, :] & is_int[None, :] & (ub - lb > 0.5)
+    mid = 0.5 * (lb + ub)
+    frac = mid - jnp.floor(mid)
+    score = jnp.where(cand, 0.5 - jnp.abs(frac - 0.5), -1.0)
+    return jnp.argmax(score, axis=-1), jnp.any(cand, axis=-1)
+
+
+def pseudo_cost_select_ref(
+    lb, ub, is_int, valid, pc_sum, pc_cnt, prior: float = 1e-4
+):
+    """Pseudo-cost branching selection over ``(B, n_pad)`` bound planes.
+
+    ``pc_sum``/``pc_cnt`` are the search's ``(2, n_pad)`` accumulated
+    bound-gain statistics (direction 0 = down child, 1 = up child): each
+    propagated child adds ``max(child_bound - parent_bound, 0)`` for its
+    branching column and direction.  The score is the product of the two
+    directions' average gains (plus a small ``prior`` so unseen columns
+    stay comparable), the standard product rule; candidates and
+    tie-breaking are exactly :func:`most_fractional_ref`'s.  Returns
+    ``(var, has)``."""
+    cand = valid[None, :] & is_int[None, :] & (ub - lb > 0.5)
+    avg_d = pc_sum[0] / jnp.maximum(pc_cnt[0], 1.0)
+    avg_u = pc_sum[1] / jnp.maximum(pc_cnt[1], 1.0)
+    score = (avg_d + prior) * (avg_u + prior)
+    score = jnp.where(cand, score[None, :], -1.0)
+    return jnp.argmax(score, axis=-1), jnp.any(cand, axis=-1)
+
+
+def incumbent_update_ref(leaf, obj, inc, inc_x, lb, inf: float = INF):
+    """Device-resident incumbent update (solver oracle).
+
+    ``leaf`` masks the ``(B,)`` nodes whose propagated domains are feasible
+    candidate solutions this level, ``obj`` their objectives, ``inc`` /
+    ``inc_x`` the running incumbent scalar and ``(n_pad,)`` solution plane,
+    ``lb`` the ``(B, n_pad)`` bound planes (a leaf's solution is its
+    ``lb`` row -- all variables fixed).  The best leaf is selected with
+    ``min`` + first-index ``argmin``, so reduction order is deterministic;
+    the incumbent moves only on STRICT improvement.  Returns
+    ``(inc, inc_x, improved)``."""
+    leaf_obj = jnp.where(leaf, obj, inf)
+    best = jnp.min(leaf_obj)
+    improved = best < inc
+    inc_new = jnp.where(improved, best, inc)
+    x_new = jnp.where(improved, lb[jnp.argmin(leaf_obj)], inc_x)
+    return inc_new, x_new, improved
+
+
 def batched_candidates_scatter_round_ref(
     val, col_g, is_int_g, chunk_row, lhs_g, rhs_g, lb, ub,
     m_total: int, n_pad: int, int_eps: float, inf: float = INF,

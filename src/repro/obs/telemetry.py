@@ -18,6 +18,15 @@ planes the round just produced.  Telemetry-on therefore returns bitwise-
 identical bounds to telemetry-off by construction -- asserted across all
 four engines in ``tests/test_obs.py``.
 
+The branch-and-bound solver (``core.solver.solve``) reuses the SCALAR
+plane at search granularity -- one :func:`record_round` call per search
+LEVEL instead of per propagation round: the ring sample is the next
+frontier's open-node count, ``stop_round`` latches the first level that
+improved the incumbent, and ``infeas_round`` the first level that fathomed
+an infeasible node.  Same plane, same zero added syncs -- the whole search
+trajectory rides the ``while_loop`` carry and is read back only at the
+solver's ``sync_every`` boundary.
+
 Plane layout (``capacity`` = ring size, per instance/slot when batched):
 
 ========================  =======================================================

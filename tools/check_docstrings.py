@@ -1,5 +1,5 @@
-"""Docs gate: every public symbol of ``repro.core`` / ``repro.kernels`` /
-``repro.obs`` must carry a real docstring.
+"""Docs gate: every public symbol of ``repro.core`` / ``repro.core.solver``
+/ ``repro.kernels`` / ``repro.obs`` must carry a real docstring.
 
 A "real" docstring excludes the auto-generated ``Name(field, ...)`` text
 NamedTuples get for free.  Module-level constants (ints, floats, tuples)
@@ -40,11 +40,13 @@ def missing_docstrings(mod) -> "list[str]":
 
 def main() -> int:
     import repro.core
+    import repro.core.solver
     import repro.kernels
     import repro.obs
 
     bad = (
         missing_docstrings(repro.core)
+        + missing_docstrings(repro.core.solver)
         + missing_docstrings(repro.kernels)
         + missing_docstrings(repro.obs)
     )
@@ -55,6 +57,7 @@ def main() -> int:
         return 1
     n = (
         len(getattr(repro.core, "__all__", []))
+        + len([x for x in vars(repro.core.solver) if not x.startswith("_")])
         + len([x for x in vars(repro.kernels) if not x.startswith("_")])
         + len(getattr(repro.obs, "__all__", []))
     )
